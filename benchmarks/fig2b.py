@@ -1,0 +1,72 @@
+"""Paper Fig. 2b: matmul execution time vs size; the dispatch crossover.
+
+The paper shows the DSP losing below ~75x75 (offload setup dominates)
+and winning above.  We sweep matrix sizes, measure both variants, and
+report the per-size winner plus the size-bucketed decision VPE learns —
+the 'decision tree on input size' of paper §5.2 emerges from the
+(op, shape-bucket) keying with no extra machinery.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.bench_algos import build_vpe
+from repro.core import shape_bucket
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # warm-up (compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(sizes=(16, 32, 64, 96, 128, 192, 256, 384, 512), reps: int = 3) -> List[Dict]:
+    vpe, fns = build_vpe(with_pallas=False)
+    entry = vpe.registry.op("matmul")
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        a = jax.numpy.asarray(rng.standard_normal((n, n)).astype(np.float32))
+        b = jax.numpy.asarray(rng.standard_normal((n, n)).astype(np.float32))
+        naive_s = _time(entry.variants["reference"].fn, a, b, reps=reps)
+        accel_s = _time(entry.variants["fused"].fn, a, b, reps=reps)
+        # let VPE learn this bucket
+        for _ in range(10):
+            fns["matmul"](a, b)
+        decision = vpe.controller.selected("matmul", shape_bucket(a, b))
+        rows.append({
+            "n": n,
+            "naive_ms": naive_s * 1e3,
+            "accel_ms": accel_s * 1e3,
+            "winner": "accel" if accel_s < naive_s else "naive",
+            "vpe_decision": decision,
+        })
+    return rows
+
+
+def crossover(rows: List[Dict]):
+    for r in rows:
+        if r["winner"] == "accel":
+            return r["n"]
+    return None
+
+
+def main(reps: int = 3) -> List[Dict]:
+    rows = run(reps=reps)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"fig2b/matmul_{r['n']},{r['naive_ms'] * 1e3:.1f},"
+              f"accel_us={r['accel_ms'] * 1e3:.1f};vpe={r['vpe_decision']}")
+    print(f"fig2b/crossover,{0},size={crossover(rows)}(paper=~75)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Roofline table: aggregates the dry-run JSON cells into EXPERIMENTS.md form."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dirpath: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        name = os.path.basename(path)[:-len(".json")]
+        if name.count("__") != 2:
+            continue  # tagged perf-experiment cells live elsewhere
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant | useful | frac | frac(floor) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped: {r['skipped']} | | | |")
+            continue
+        if "error" in r or "roofline" not in r:
+            tag = "error" if "error" in r else "no-probe"
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | {tag} | | | |")
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3g} | {rl['memory_s']:.3g} "
+            f"| {rl['collective_s']:.3g} | {rl['dominant']} | {rl['useful_ratio']:.2f} "
+            f"| {rl['roofline_fraction']:.4f} | {rl.get('roofline_fraction_floor', 0):.4f} |")
+    return "\n".join(out)
+
+
+def main(dirpath: str = "experiments/dryrun") -> None:
+    rows = load(dirpath)
+    print("name,us_per_call,derived")
+    for r in rows:
+        if "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        step_us = max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) * 1e6
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},{step_us:.0f},"
+              f"dominant={rl['dominant']};frac={rl['roofline_fraction']:.4f}"
+              f";floor={rl.get('roofline_fraction_floor', 0):.4f}")
+    print()
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+table1  — paper Table 1: six algorithms, naive vs VPE decision
+fig2b   — paper Fig. 2b: matmul size sweep, dispatch crossover
+fig3    — paper Fig. 3: image pipeline frame rate before/after VPE
+roofline— dry-run-derived roofline table (requires experiments/dryrun)
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+from benchmarks import fig2b, fig3, roofline, table1
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    print("# === table1 (paper Table 1) ===")
+    table1.main(scale=0.25 if fast else 0.5, iters=8 if fast else 12)
+    print("# === fig2b (paper Fig. 2b) ===")
+    fig2b.main(reps=2 if fast else 3)
+    print("# === fig3 (paper Fig. 3) ===")
+    fig3.main(frames_per_phase=12 if fast else 24)
+    if os.path.isdir("experiments/dryrun"):
+        print("# === roofline (dry-run) ===")
+        roofline.main()
+    else:
+        print("# roofline: experiments/dryrun missing — run "
+              "`python -m repro.launch.dryrun --all` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: VPE (Toward Transparent Heterogeneous Systems) as a JAX/TPU framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+"""The paper's six benchmark algorithms (§5.1), VPE-registered.
+
+complement, convolution, dot product, matrix multiplication, pattern
+matching, FFT — inspired by the Computer Language Benchmarks Game, as in
+the paper, integer-dominant where the original avoided floating point.
+"""
+
+from .algos import ALGORITHMS, build_vpe, make_inputs
+
+__all__ = ["ALGORITHMS", "build_vpe", "make_inputs"]

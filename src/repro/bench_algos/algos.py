@@ -1,0 +1,201 @@
+"""The six paper benchmarks with naive + accelerated variants.
+
+Variant mapping on this container (honest wall-clock on the host CPU):
+
+* ``reference`` — the naive implementation executed *eagerly* (one XLA
+  op per jnp call, no fusion).  This is the analogue of the paper's
+  naive C on the ARM core: straightforward code, no hand optimization.
+* ``fused``     — the same algorithm handed to the compiler as one unit
+  (``jax.jit``; XLA fuses the passes).  This is the "remote target that
+  actually helps" — the analogue of the DSP build with its software
+  pipelining.
+* ``pallas``    — where the hot-spot has a Pallas kernel (matmul,
+  convolution), the TPU-target kernel in interpret mode.  On this CPU
+  container interpret mode usually *loses*, so VPE trials it and reverts
+  — which is precisely the paper's point: decisions come from measured
+  reality, not from labels.
+* FFT's ``dsp`` variant is an O(n^2) DFT-by-matmul — a deliberately
+  faithful recreation of the paper's FFT row, where blind offload was a
+  0.7x regression that VPE detects and reverts.
+
+Each algorithm also provides ``make_inputs(scale)`` so the benchmark
+harness can reproduce the paper's size sweeps (Fig. 2b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import VPE
+from repro.kernels import ops as kops
+
+# --------------------------------------------------------------------------
+# algorithm bodies (shared by eager and jitted variants)
+# --------------------------------------------------------------------------
+
+# DNA code: A=0, C=1, G=2, T=3; complement: A<->T, C<->G  (i.e. 3 - x)
+
+def _complement_naive(seq: jax.Array) -> jax.Array:
+    """Branchy naive complement, as one would write it in C."""
+    out = jnp.where(seq == 0, 3, seq)
+    out = jnp.where(seq == 3, 0, out)
+    out = jnp.where(seq == 1, 2, out)
+    out = jnp.where(seq == 2, 1, out)
+    return out
+
+
+def _complement_lut(seq: jax.Array) -> jax.Array:
+    lut = jnp.array([3, 2, 1, 0], dtype=seq.dtype)
+    return jnp.take(lut, seq)
+
+
+def _conv2d_naive(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Shift-and-MAC with explicit python loops over the taps."""
+    kh, kw = w.shape
+    h_out, w_out = x.shape[0] - kh + 1, x.shape[1] - kw + 1
+    acc = jnp.zeros((h_out, w_out), jnp.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            acc = acc + x[di:di + h_out, dj:dj + w_out].astype(jnp.float32) * w[di, dj]
+    return acc.astype(x.dtype)
+
+
+def _conv2d_xla(x: jax.Array, w: jax.Array) -> jax.Array:
+    out = jax.lax.conv_general_dilated(
+        x[None, None].astype(jnp.float32), w[None, None].astype(jnp.float32),
+        (1, 1), "VALID", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0, 0].astype(x.dtype)
+
+
+def _dot_naive(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.sum(a * b)
+
+
+def _matmul_naive(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Row-at-a-time vector-matrix products — no blocking, poor locality."""
+    def row(r):
+        return r @ b
+    return jax.lax.map(row, a)
+
+
+def _patmatch_naive(seq: jax.Array, pat: jax.Array) -> jax.Array:
+    """Count occurrences of pat in seq, one shifted comparison per symbol."""
+    n, p = seq.shape[0], pat.shape[0]
+    hits = jnp.ones((n - p + 1,), dtype=bool)
+    for j in range(p):
+        hits = hits & (jax.lax.dynamic_slice(seq, (j,), (n - p + 1,)) == pat[j])
+    return jnp.sum(hits)
+
+
+def _fft_ref(x: jax.Array) -> jax.Array:
+    return jnp.fft.fft(x)
+
+
+def _dft_matmul(x: jax.Array) -> jax.Array:
+    """O(n^2) DFT via real matmuls — the 'blind DSP offload' of the FFT.
+
+    Faithful recreation of the paper's FFT row: the offloaded build is a
+    legitimate implementation but a poor match for the target, so the
+    trial measures a regression and VPE reverts.
+    """
+    n = x.shape[0]
+    j = jnp.arange(n, dtype=jnp.float32)
+    ang = -2.0 * jnp.pi * jnp.outer(j, j) / n
+    xr = jnp.real(x).astype(jnp.float32)[None, :]
+    xi = jnp.imag(x).astype(jnp.float32)[None, :]
+    cr, ci = jnp.cos(ang), jnp.sin(ang)
+    re = jnp.dot(xr, cr) - jnp.dot(xi, ci)
+    im = jnp.dot(xr, ci) + jnp.dot(xi, cr)
+    return (re + 1j * im)[0]
+
+
+# --------------------------------------------------------------------------
+# registration
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Algo:
+    name: str
+    make_inputs: Callable[..., Tuple]
+    paper_speedup: float  # Table 1, for EXPERIMENTS.md comparison
+
+
+def make_inputs(name: str, scale: float = 1.0, seed: int = 0) -> Tuple:
+    """Paper-comparable input sets; ``scale`` sweeps sizes (Fig. 2b)."""
+    rng = np.random.default_rng(seed)
+    s = lambda n: max(8, int(n * scale))
+    if name == "complement":
+        return (jnp.asarray(rng.integers(0, 4, s(4_000_000), dtype=np.int32)),)
+    if name == "convolution":
+        x = jnp.asarray(rng.standard_normal((s(512), s(512))).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((5, 5)).astype(np.float32))
+        return (x, w)
+    if name == "dotproduct":
+        a = jnp.asarray(rng.integers(-100, 100, s(8_000_000)).astype(np.int32))
+        b = jnp.asarray(rng.integers(-100, 100, s(8_000_000)).astype(np.int32))
+        return (a, b)
+    if name == "matmul":
+        n = s(512)
+        a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+        return (a, b)
+    if name == "patternmatch":
+        seq = jnp.asarray(rng.integers(0, 4, s(4_000_000), dtype=np.int32))
+        pat = jnp.asarray(rng.integers(0, 4, 16, dtype=np.int32))
+        return (seq, pat)
+    if name == "fft":
+        n = s(1 << 14)
+        x = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+        return (jnp.asarray(x.astype(np.complex64)),)
+    raise KeyError(name)
+
+
+ALGORITHMS: Dict[str, Algo] = {
+    "complement": Algo("complement", make_inputs, 7.4),
+    "convolution": Algo("convolution", make_inputs, 3.8),
+    "dotproduct": Algo("dotproduct", make_inputs, 6.3),
+    "matmul": Algo("matmul", make_inputs, 31.9),
+    "fft": Algo("fft", make_inputs, 0.7),
+    "patternmatch": Algo("patternmatch", make_inputs, 22.7),
+}
+
+
+def build_vpe(*, controller_kwargs: Dict | None = None, with_pallas: bool = True) -> Tuple[VPE, Dict[str, Callable]]:
+    """Register all six algorithms in a fresh VPE instance.
+
+    Returns (vpe, {name: dispatchable callable}).
+    """
+    ck = dict(min_samples=2, trial_samples=2, hysteresis=0.05)
+    ck.update(controller_kwargs or {})
+    vpe = VPE(controller_kwargs=ck)
+    fns: Dict[str, Callable] = {}
+
+    fns["complement"] = vpe.op("complement")(_complement_naive)
+    vpe.variant("complement", variant="fused")(jax.jit(_complement_lut))
+
+    fns["convolution"] = vpe.op("convolution")(_conv2d_naive)
+    vpe.variant("convolution", variant="fused")(jax.jit(_conv2d_xla))
+    if with_pallas:
+        vpe.variant("convolution", variant="pallas", tags=("pallas",))(kops.conv2d)
+
+    fns["dotproduct"] = vpe.op("dotproduct")(_dot_naive)
+    vpe.variant("dotproduct", variant="fused")(jax.jit(lambda a, b: jnp.dot(a, b)))
+
+    fns["matmul"] = vpe.op("matmul")(_matmul_naive)
+    vpe.variant("matmul", variant="fused")(jax.jit(lambda a, b: a @ b))
+    if with_pallas:
+        vpe.variant("matmul", variant="pallas", tags=("pallas",))(kops.matmul)
+
+    fns["patternmatch"] = vpe.op("patternmatch")(_patmatch_naive)
+    vpe.variant("patternmatch", variant="fused")(jax.jit(_patmatch_naive))
+
+    fns["fft"] = vpe.op("fft")(_fft_ref)
+    # the paper's FFT row: blind offload to the "DSP" that loses
+    vpe.variant("fft", variant="dsp")(jax.jit(_dft_matmul))
+
+    return vpe, fns

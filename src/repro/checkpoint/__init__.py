@@ -1,0 +1,3 @@
+"""Atomic step-tagged checkpointing."""
+from . import checkpoint
+from .checkpoint import latest_step, restore, save

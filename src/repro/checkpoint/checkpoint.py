@@ -1,0 +1,146 @@
+"""Fault-tolerant checkpointing: atomic, step-tagged, resumable.
+
+Layout:
+    <dir>/step_00000420/           (atomic rename from .tmp)
+        manifest.json              (tree structure, shapes, dtypes)
+        arr_00000.npy ...          (one file per leaf, host-gathered)
+        extra.json                 (VPE state, data cursor, rng, metrics)
+    <dir>/LATEST                   (text file: newest complete step dir)
+
+Atomicity: everything is written into ``.tmp`` and renamed only after
+fsync — a job killed mid-save leaves the previous checkpoint intact.
+Restore is by construction compatible with a *different* mesh: leaves
+are host-level numpy; the caller re-shards with ``jax.device_put`` to
+whatever sharding the (possibly shrunk, elastic) mesh dictates.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), v) for p, v in flat], treedef
+
+
+def save(
+    directory: str,
+    step: int,
+    tree: Any,
+    *,
+    extra: Optional[Dict] = None,
+    keep: int = 3,
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (key, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(jnp.dtype(leaf.dtype)) if hasattr(leaf, "dtype") else str(arr.dtype)
+        if arr.dtype.kind == "V":
+            # bfloat16 (and friends) have no native numpy dtype: store
+            # the raw bits as uint{8,16,32} and the logical dtype in the
+            # manifest for the restore-side view.
+            arr = arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype), "jax_dtype": logical_dtype}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "extra.json"), "w") as f:
+        json.dump(extra or {}, f)
+    # fsync the directory entries then atomically publish
+    fd = os.open(tmp, os.O_RDONLY)
+    os.fsync(fd)
+    os.close(fd)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(name)
+    os.replace(os.path.join(directory, "LATEST.tmp"), os.path.join(directory, "LATEST"))
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    latest = os.path.join(directory, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(
+    directory: str,
+    like: Any,
+    *,
+    step: Optional[int] = None,
+    shardings: Any = None,
+) -> Tuple[Any, Dict, int]:
+    """Restore into the structure of ``like`` (a pytree or specs pytree).
+
+    shardings: optional matching pytree of Sharding — re-shard on load
+    (elastic restart path).  Returns (tree, extra, step).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(d, "extra.json")) as f:
+        extra = json.load(f)
+
+    flat_like, treedef = _flatten(like)
+    by_key = {item["key"]: item for item in manifest["leaves"]}
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = [s for _, s in _flatten(shardings)[0]]
+
+    leaves = []
+    for i, (key, leaf_like) in enumerate(flat_like):
+        item = by_key.get(key)
+        if item is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(os.path.join(d, item["file"]))
+        want_dtype = item.get("jax_dtype", item["dtype"])
+        if str(arr.dtype) != want_dtype:
+            arr = arr.view(jnp.dtype(want_dtype))  # bit-exact bf16 restore
+        expect = tuple(leaf_like.shape) if hasattr(leaf_like, "shape") else None
+        if expect is not None and tuple(arr.shape) != expect:
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs model {expect}")
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.device_put(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, extra, step

@@ -1,0 +1,40 @@
+"""Architecture registry: ``get_config(name)`` / ``ARCHS``.
+
+One module per assigned architecture; exact hyperparameters from the
+brief ([source; verified-tier] recorded in each config's ``source``).
+"""
+
+from __future__ import annotations
+
+from .base import SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeConfig, shape_applicable
+from .chameleon_34b import CONFIG as chameleon_34b
+from .h2o_danube_3_4b import CONFIG as h2o_danube_3_4b
+from .moonshot_v1_16b_a3b import CONFIG as moonshot_v1_16b_a3b
+from .qwen2_7b import CONFIG as qwen2_7b
+from .qwen2_moe_a2_7b import CONFIG as qwen2_moe_a2_7b
+from .qwen2_5_32b import CONFIG as qwen2_5_32b
+from .qwen3_8b import CONFIG as qwen3_8b
+from .rwkv6_7b import CONFIG as rwkv6_7b
+from .whisper_base import CONFIG as whisper_base
+from .zamba2_1_2b import CONFIG as zamba2_1_2b
+
+ARCHS = {
+    c.name: c
+    for c in (
+        zamba2_1_2b, qwen2_moe_a2_7b, moonshot_v1_16b_a3b, whisper_base,
+        qwen2_7b, qwen3_8b, qwen2_5_32b, h2o_danube_3_4b, chameleon_34b,
+        rwkv6_7b,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = [
+    "ARCHS", "get_config", "ModelConfig", "ShapeConfig",
+    "SHAPES", "SHAPES_BY_NAME", "shape_applicable",
+]

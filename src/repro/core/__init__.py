@@ -1,0 +1,39 @@
+"""VPE core — transparent profile-guided dispatch (the paper's contribution).
+
+Public surface:
+
+    from repro.core import VPE
+    vpe = VPE()
+
+    @vpe.op("matmul")
+    def matmul(a, b): return a @ b          # reference variant
+
+    @vpe.variant("matmul", variant="pallas")
+    def matmul_pallas(a, b): ...            # accelerated target
+
+    y = matmul(a, b)    # profiled; VPE trials/keeps/reverts variants
+"""
+
+from .controller import Controller, Decision
+from .dispatch import DEFAULT, VPE, VPEFunction
+from .profiler import Profiler, SampleSet, Welford
+from .registry import GLOBAL, OpEntry, Registry, Variant, reset_global
+from .shape_class import bucket_label, shape_bucket
+
+__all__ = [
+    "VPE",
+    "VPEFunction",
+    "Controller",
+    "Decision",
+    "Profiler",
+    "SampleSet",
+    "Welford",
+    "Registry",
+    "OpEntry",
+    "Variant",
+    "GLOBAL",
+    "DEFAULT",
+    "reset_global",
+    "shape_bucket",
+    "bucket_label",
+]

@@ -1,0 +1,131 @@
+"""The caller indirection (paper Fig. 1).
+
+Every VPE op call goes through a wrapper.  In the paper the wrapper is a
+generated stub holding a function pointer that MCJIT patches to point
+either at the local code or at the remote-target handler.  Here the
+wrapper is :class:`VPEFunction`: it consults the controller for the
+currently selected variant (the "function pointer"), times the call, and
+feeds the sample back.
+
+Two dispatch modes exist, matching how JAX programs are structured:
+
+* **eager mode** (``vpe.call`` / calling a :class:`VPEFunction`):
+  selection happens per call, results are fenced with
+  ``block_until_ready`` so the measured wall-clock is honest.  This is
+  the direct analogue of the paper's prototype and what the paper-
+  benchmark suite uses.
+
+* **static mode** (``vpe.static_variant``): model code inside a jitted
+  train/serve step asks for the variant *at trace time*; switching
+  happens at re-trace boundaries driven by ``controller.version`` (the
+  runtime loop re-builds the step when the version moves).  This is the
+  TPU-idiomatic equivalent of patching the pointer: XLA cannot branch on
+  host state per call, but re-jitting against the compilation cache is
+  cheap after the first trial — that cost *is* the paper's warm-up.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from .controller import Controller
+from .profiler import Profiler
+from .registry import GLOBAL, Registry
+from .shape_class import shape_bucket
+
+
+class VPEFunction:
+    """Callable wrapper bound to one op — the paper's "caller"."""
+
+    def __init__(self, vpe: "VPE", op: str) -> None:
+        self.vpe = vpe
+        self.op = op
+        functools.update_wrapper(self, vpe.registry.op(op).variants[vpe.registry.op(op).default].fn, updated=())
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        return self.vpe.call(self.op, *args, **kwargs)
+
+    def variant_for(self, *args: Any) -> str:  # introspection helper
+        return self.vpe.controller.select(self.op, shape_bucket(*args))
+
+
+class VPE:
+    """Facade tying registry + profiler + controller together."""
+
+    def __init__(
+        self,
+        registry: Optional[Registry] = None,
+        *,
+        controller_kwargs: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        self.registry = registry if registry is not None else Registry()
+        self.profiler = Profiler()
+        self.controller = Controller(self.registry, self.profiler, **(controller_kwargs or {}))
+
+    # -- registration sugar ---------------------------------------------
+    def op(self, name: str, *, variant: str = "reference", system: bool = False, **vkw):
+        """Decorator: register ``fn`` as the default variant of ``name``."""
+
+        def deco(fn: Callable) -> VPEFunction:
+            self.registry.register_op(name, system=system)
+            self.registry.register_variant(name, variant, fn, default=True, **vkw)
+            return VPEFunction(self, name)
+
+        return deco
+
+    def variant(self, name: str, *, variant: str, **vkw):
+        """Decorator: register an additional variant of an existing op."""
+
+        def deco(fn: Callable) -> Callable:
+            self.registry.register_variant(name, variant, fn, **vkw)
+            return fn
+
+        return deco
+
+    def wrap(self, name: str) -> VPEFunction:
+        return VPEFunction(self, name)
+
+    # -- eager dispatch ----------------------------------------------------
+    def call(self, op: str, *args: Any, **kwargs: Any) -> Any:
+        bucket = shape_bucket(*args)
+        vname = self.controller.select(op, bucket)
+        fn = self.registry.variant(op, vname).fn
+        t0 = self.profiler.time()
+        out = fn(*args, **kwargs)
+        out = jax.block_until_ready(out)
+        dt = self.profiler.time() - t0
+        self.profiler.record(op, vname, bucket, dt)
+        self.controller.on_sample(op, bucket, vname)
+        return out
+
+    # -- static (trace-time) dispatch ---------------------------------------
+    def static_variant(self, op: str, bucket: Tuple = ("static",)) -> Callable:
+        vname = self.controller.select_static(op, bucket)
+        return self.registry.variant(op, vname).fn
+
+    def static_variant_name(self, op: str, bucket: Tuple = ("static",)) -> str:
+        return self.controller.select_static(op, bucket)
+
+    # -- reporting -----------------------------------------------------------
+    def report(self) -> str:
+        lines = ["op/bucket decision table:"]
+        for (op, bucket), d in sorted(self.controller._decisions.items(), key=repr):
+            lines.append(f"  {op} {bucket}: selected={d.selected} tried={d.tried}")
+            for ev, v, detail in d.history:
+                lines.append(f"    - {ev} {v}: {detail}")
+        return "\n".join(lines)
+
+    # -- checkpointable state --------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {"profiler": self.profiler.as_dict(), "controller": self.controller.as_dict()}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.profiler.load_dict(d["profiler"])
+        self.controller.load_dict(d["controller"])
+
+
+# module-level default instance bound to the global registry
+DEFAULT = VPE(GLOBAL)

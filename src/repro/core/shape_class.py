@@ -1,0 +1,68 @@
+"""Shape-class bucketing — the paper's §5.2 "decision tree on input size".
+
+The paper observes (Fig. 2b) that the best target for matrix
+multiplication flips at ~75x75: below that, offload setup cost dominates;
+above, the DSP wins by 30x.  It proposes learning a correlation between
+input size and achieved performance.  We implement that as a shape
+*bucketing* function: dispatch decisions are kept per (op, bucket), so
+the controller naturally learns a size-dependent policy (small matmuls
+stay on the naive variant, large ones move to the Pallas kernel) without
+any special-casing.
+
+Buckets are log2-scaled on the total element count plus the exact rank,
+which keeps the table small (a few dozen buckets) while separating the
+regimes that matter for tiling decisions.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _elements(x: Any) -> int:
+    if hasattr(x, "shape"):
+        n = 1
+        for d in x.shape:
+            n *= int(d)
+        return n
+    if isinstance(x, (int, float, complex, bool)):
+        return 1
+    return 1
+
+
+def shape_bucket(*args: Any, granularity: float = 1.0) -> Tuple:
+    """Map call arguments to a hashable bucket key.
+
+    granularity: bucket width in log2 units.  1.0 -> one bucket per
+    power of two of total input elements.
+    """
+    total = 0
+    ranks = []
+    for leaf in jax.tree_util.tree_leaves(args):
+        total += _elements(leaf)
+        if hasattr(leaf, "shape"):
+            ranks.append(len(leaf.shape))
+    if total <= 0:
+        return ("scalar",)
+    b = int(math.floor(math.log2(total) / granularity))
+    return (b, tuple(sorted(set(ranks))))
+
+
+def bucket_label(bucket: Tuple) -> str:
+    if bucket == ("scalar",):
+        return "scalar"
+    b, ranks = bucket
+    lo, hi = 2 ** b, 2 ** (b + 1)
+    return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}"
+
+
+def describe_buckets(shapes) -> str:  # pragma: no cover - debug aid
+    out = []
+    for s in shapes:
+        x = np.zeros(s, dtype=np.float32)
+        out.append(f"{s} -> {bucket_label(shape_bucket(x))}")
+    return "\n".join(out)

@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic stream + prefetch."""
+from . import pipeline, synthetic
+from .pipeline import Prefetcher, device_put_batch
+from .synthetic import DataConfig, SyntheticStream

@@ -1,0 +1,68 @@
+"""Input pipeline: background prefetch + device put.
+
+Double-buffered: a daemon thread keeps ``depth`` batches ready so host
+data generation overlaps device compute (the standard TPU input-pipeline
+pattern; on real pods the device_put also overlaps the previous step via
+async dispatch).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+
+class Prefetcher:
+    def __init__(
+        self,
+        source: Iterator[Dict],
+        *,
+        depth: int = 2,
+        transform: Optional[Callable[[Dict], Any]] = None,
+    ) -> None:
+        self.source = source
+        self.transform = transform or (lambda b: b)
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        try:
+            for batch in self.source:
+                if self._stop.is_set():
+                    return
+                self.q.put(self.transform(batch))
+            self.q.put(None)  # end-of-stream sentinel
+        except BaseException as e:  # surfaced on next()
+            self._exc = e
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            if self._exc is not None:
+                raise self._exc
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self.q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def device_put_batch(batch: Dict, sharding=None) -> Dict:
+    """Host batch -> device arrays (sharded when a NamedSharding is given)."""
+    if sharding is None:
+        return jax.tree.map(jax.device_put, batch)
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), batch)

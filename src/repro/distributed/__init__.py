@@ -1,0 +1,2 @@
+"""Sharding rules, elastic meshes, straggler mitigation."""
+from . import elastic, sharding, straggler

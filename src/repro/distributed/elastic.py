@@ -1,0 +1,59 @@
+"""Elastic scaling: rebuild the mesh from whatever devices survive.
+
+On a real deployment the controller detects lost slices (JAX restarts
+with a smaller ``jax.devices()``), calls :func:`best_mesh` to get the
+largest usable (data, model) grid, re-derives shardings for the same
+param tree, and restores the last checkpoint into the new sharding (the
+checkpoint layer is host-level numpy, so resharding is free).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from . import sharding as shardlib
+
+
+def best_mesh(
+    devices: Optional[Sequence] = None,
+    *,
+    model_parallel: int = 16,
+    axis_names: Tuple[str, str] = ("data", "model"),
+) -> Mesh:
+    """Largest (data, model) grid from the available devices.
+
+    Keeps the model axis at the requested TP degree when possible
+    (weights must still fit per-device), shrinking the data axis — the
+    standard elastic-DP policy: losing a host costs batch, not layout.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    mp = min(model_parallel, n)
+    while mp > 1 and n % mp != 0:
+        mp -= 1
+    dp = n // mp
+    import numpy as np
+
+    arr = np.array(devices[: dp * mp], dtype=object).reshape(dp, mp)
+    return Mesh(arr, axis_names)
+
+
+def reshard(tree: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """Move a pytree onto a (new) mesh with the standard rule table."""
+    shardings = shardlib.param_shardings(tree, mesh, fsdp=fsdp)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def shrink_plan(old_n: int, new_n: int, model_parallel: int) -> str:
+    """Human-readable description of the elastic transition (for logs)."""
+    mp = min(model_parallel, new_n)
+    while mp > 1 and new_n % mp != 0:
+        mp -= 1
+    return (
+        f"elastic: {old_n} -> {new_n} devices; "
+        f"new grid data={new_n // mp} x model={mp}; "
+        f"global batch rescaled by {new_n / old_n:.2f}"
+    )

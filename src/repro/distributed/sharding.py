@@ -1,0 +1,267 @@
+"""Sharding rule table: parameter path -> PartitionSpec (MaxText-style).
+
+Logical axes:
+    tp    -> mesh "model"  (tensor parallel: heads / ffn hidden / vocab / experts)
+    fsdp  -> mesh "data"   (ZeRO-style weight sharding, gathered per layer)
+    dp    -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+             (pure data parallelism for activations)
+
+Each rule provides *candidate* spec-tails in preference order; a
+candidate is accepted only if every named dim divides evenly into its
+mesh axes.  That is how e.g. qwen2-moe's 60 experts (not divisible by
+model=16) automatically fall back from expert-parallel to per-expert
+tensor-parallel, and whisper's odd 51865 vocab falls back to fsdp-only —
+no per-arch special cases.
+
+Spec tails address the TRAILING dims of a leaf; leading dims (layer
+stacks, expert stacks) get None.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (regex, [candidate spec tails]) — first divisible candidate wins.
+# Tails may be shorter than the leaf rank; missing leading dims -> None.
+RULES: List[Tuple[str, List[Tuple]]] = [
+    # embeddings / heads
+    (r"embed",            [("tp", "fsdp"), ("fsdp", "tp"), (None, "tp"), (None, None)]),
+    (r"lm_head",          [("fsdp", "tp"), ("tp", "fsdp"), ("tp", None), (None, None)]),
+    # attention projections (flattened H*hd output dims)
+    (r"attn_w[qkv]\b|xattn_w[qkv]\b", [("fsdp", "tp"), (None, "tp"), (None, None)]),
+    (r"attn_wo\b|xattn_wo\b",         [("tp", "fsdp"), ("tp", None), (None, None)]),
+    (r"attn_b[qkv]\b|xattn_b[qkv]\b", [("tp",), (None,)]),
+    (r"q_norm|k_norm",    [(None,)]),
+    # dense FFN
+    (r"ffn_w_gate|ffn_w_up|mlp_w_in|shared_w_gate|shared_w_up",
+                          [("fsdp", "tp"), (None, "tp"), (None, None)]),
+    (r"ffn_w_down|mlp_w_out|shared_w_down",
+                          [("tp", "fsdp"), ("tp", None), (None, None)]),
+    (r"mlp_b_in",         [("tp",), (None,)]),
+    (r"mlp_b_out",        [(None,)]),
+    # MoE
+    (r"moe_router",       [("fsdp", None), (None, None)]),
+    (r"experts_gate|experts_up",
+                          [("tp", "fsdp", None), (None, "tp", None), (None, "fsdp", None), (None, None, None)]),
+    (r"experts_down",     [("tp", None, "fsdp"), (None, None, "tp"), (None, "fsdp", None), (None, None, None)]),
+    # mamba2
+    (r"m_in_proj",        [("fsdp", "tp"), (None, "tp"), (None, None)]),
+    (r"m_out_proj",       [("tp", "fsdp"), ("tp", None), (None, None)]),
+    (r"m_conv_w",         [(None, "tp"), (None, None)]),
+    (r"m_conv_b",         [("tp",), (None,)]),
+    (r"m_A_log|m_D|m_dt_bias", [("tp",), (None,)]),
+    (r"m_norm",           [("tp",), (None,)]),
+    # rwkv6
+    (r"\bwr\b|\bwk\b|\bwv\b|\bwg\b|\bcr\b|\bck\b",
+                          [("fsdp", "tp"), (None, "tp"), (None, None)]),
+    (r"\bwo\b|\bcv\b",    [("tp", "fsdp"), ("tp", None), (None, None)]),
+    (r"w_lora_a",         [("fsdp", None), (None, None)]),
+    (r"w_lora_b",         [(None, "tp"), (None, None)]),
+    (r"mix_|cmix_|w_base|\bu\b|ln_x", [("tp",), (None,)]),
+    # norms (replicated)
+    (r"ln1|ln2|ln_x|final_norm|enc_norm|dec_norm|m_ln", [(None,)]),
+]
+
+
+def axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _axis_map(mesh: Mesh, *, fsdp: bool = True, tp: bool = True) -> Dict[str, Optional[Any]]:
+    names = set(mesh.axis_names)
+    return {
+        "tp": "model" if tp and "model" in names else None,
+        "fsdp": ("data" if fsdp and "data" in names else None),
+        None: None,
+    }
+
+
+def _tail_ok(tail: Sequence, shape: Tuple[int, ...], sizes: Dict[str, int],
+             amap: Dict) -> bool:
+    offset = len(shape) - len(tail)
+    if offset < 0:
+        return False
+    for i, logical in enumerate(tail):
+        phys = amap.get(logical)
+        if phys is None:
+            continue
+        if shape[offset + i] % sizes[phys] != 0:
+            return False
+    return True
+
+
+def spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh, *, fsdp: bool = True,
+             tp: bool = True) -> P:
+    sizes = axis_sizes(mesh)
+    amap = _axis_map(mesh, fsdp=fsdp, tp=tp)
+    for pattern, candidates in RULES:
+        if re.search(pattern, path):
+            for tail in candidates:
+                if _tail_ok(tail, shape, sizes, amap):
+                    offset = len(shape) - len(tail)
+                    dims = [None] * offset + [amap.get(t) for t in tail]
+                    return P(*dims)
+            return P()
+    return P()  # replicate unknowns
+
+
+def param_specs(tree: Any, mesh: Mesh, *, fsdp: bool = True, tp: bool = True) -> Any:
+    """Pytree of PartitionSpec matching ``tree`` (params or abstract specs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        specs.append(spec_for(key, tuple(leaf.shape), mesh, fsdp=fsdp, tp=tp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(tree: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(tree, mesh, fsdp=fsdp),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -- activations / batches ------------------------------------------------------
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop (suffix-trim) axes that don't divide the dim evenly.
+
+    For composed dims like ("pod","data") the trailing axes are removed
+    one at a time, so batch=2 on the 512-chip mesh still shards over the
+    pod axis; batch=1 falls back to replicated.
+    """
+    sizes = axis_sizes(mesh)
+    dims = []
+    for i, axes in enumerate(spec):
+        if axes is None or i >= len(shape):
+            dims.append(None)
+            continue
+        cand = tuple(axes) if isinstance(axes, tuple) else (axes,)
+        while cand:
+            total = 1
+            for a in cand:
+                total *= sizes[a]
+            if shape[i] % total == 0:
+                break
+            cand = cand[:-1]
+        dims.append(cand if len(cand) > 1 else (cand[0] if cand else None))
+    return P(*dims)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """tokens/labels (B, S)."""
+    return P(dp_axes(mesh), None)
+
+
+def frames_spec(mesh: Mesh) -> P:
+    """(B, T_src, d) stub frame embeddings."""
+    return P(dp_axes(mesh), None, None)
+
+
+def cache_partition_specs(cache_tree: Any, mesh: Mesh, *, kv_mode: str = "headdim") -> Any:
+    """KV caches: batch over dp + a model-axis dim chosen by ``kv_mode``:
+
+    * ``headdim`` (default) — shard the trailing head_dim.  Writes
+      (dynamic_update_slice at a runtime ``length``) stay local because
+      the updated T dim is unsharded; QK^T contracts the sharded dim
+      (one small psum), V-weighted sum is local.  This is the layout the
+      decode hillclimb landed on (EXPERIMENTS.md §Perf).
+    * ``t`` — shard the cache length.  Minimizes per-device capacity but
+      every cache write resolves a runtime index into a sharded dim, so
+      GSPMD gathers the whole cache per step (the measured baseline).
+    * ``none`` — batch sharding only.
+
+    Recurrent states: batch over dp, heads over model when divisible."""
+    dp = dp_axes(mesh)
+    sizes = axis_sizes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        if key.endswith("['length']"):
+            return P()
+        if key.endswith("['k']") or key.endswith("['v']"):
+            # (L, B, Hkv, T, D)
+            if kv_mode == "headdim":
+                d_ok = tp and shape[4] % sizes[tp] == 0
+                return P(None, dp, None, None, tp if d_ok else None)
+            if kv_mode == "t":
+                t_ok = tp and shape[3] % sizes[tp] == 0
+                return P(None, dp, None, tp if t_ok else None, None)
+            return P(None, dp, None, None, None)
+        if key.endswith("['xk']") or key.endswith("['xv']"):
+            return P(None, dp, None, None, None)
+        if key.endswith("['S']") or key.endswith("['h']"):
+            # (..., B, H, dk, dv): batch over dp, heads over model
+            b_axis = leaf.ndim - 4
+            h_ok = tp and shape[b_axis + 1] % sizes[tp] == 0
+            dims = [None] * b_axis + [dp, tp if h_ok else None, None, None]
+            return P(*dims)
+        # conv/x_tm/x_cm etc: batch-sharded on the dim before the trailing feature
+        b_axis = max(leaf.ndim - 2, 0) if leaf.ndim >= 2 else 0
+        dims = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            # (..., B, feat) or (..., B, W, feat)
+            if key.endswith("['conv']"):
+                dims[leaf.ndim - 3] = dp
+            else:
+                dims[leaf.ndim - 2] = dp
+        return P(*dims)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fit_spec(one(p, l), tuple(l.shape), mesh) for p, l in flat])
+
+
+def sharding_summary(specs: Any) -> str:
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    lines = []
+    for path, s in flat:
+        lines.append(f"{jax.tree_util.keystr(path)}: {s}")
+    return "\n".join(lines)
+
+
+def maybe_constrain(x, spec: P):
+    """with_sharding_constraint when a mesh context is active; no-op otherwise.
+
+    Lets mesh-agnostic model code (kvcache, layers) give GSPMD layout
+    hints that only take effect inside the pjit'd production step.
+    """
+    try:
+        import jax as _jax
+        am = _jax.sharding.get_abstract_mesh()
+        if am is None or not am.axis_names:
+            # fall back to the legacy physical mesh context (`with mesh:`)
+            from jax._src import mesh as _mesh_mod
+            am = _mesh_mod.thread_resources.env.physical_mesh
+            if am is None or am.empty:
+                return x
+        # strip axes the current mesh doesn't have (e.g. "pod" when
+        # running single-pod), keep the rest
+        dims = []
+        for axes in spec:
+            if axes is None:
+                dims.append(None)
+                continue
+            kept = tuple(a for a in ((axes,) if isinstance(axes, str) else axes)
+                         if a in am.axis_names)
+            dims.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        fitted = fit_spec(P(*dims), tuple(x.shape), am)
+        if hasattr(am, "devices"):  # physical mesh -> concrete sharding
+            return _jax.lax.with_sharding_constraint(x, NamedSharding(am, fitted))
+        return _jax.lax.with_sharding_constraint(x, fitted)
+    except Exception:
+        return x

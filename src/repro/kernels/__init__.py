@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the compute hot-spots the paper accelerates.
+
+matmul          — the paper's MatrixMult row (31.9x on DSP)
+conv2d          — the paper's Convolution row / image-pipeline demo
+flash_attention — the matmul-class hot-spot of the assigned LM archs
+
+Each kernel ships with a pure-jnp oracle in ref.py and a shape-hygienic
+jit wrapper in ops.py.  Validation: interpret=True allclose sweeps in
+tests/test_kernels_*.py.
+"""
+
+from . import ops, ref
+from .conv2d import conv2d_pallas
+from .flash_attention import flash_attention_pallas
+from .matmul import matmul_pallas
+
+__all__ = [
+    "ops",
+    "ref",
+    "matmul_pallas",
+    "conv2d_pallas",
+    "flash_attention_pallas",
+]

@@ -1,0 +1,162 @@
+"""Flash attention (forward) — the matmul-class hot-spot of the LM archs.
+
+This is the kernel VPE discovers as the "remote target" for the
+attention op of every transformer architecture in the assigned pool.
+Online-softmax tiling adapted to the TPU memory hierarchy:
+
+* grid (B, Hq, nq, nk) with the key dimension innermost and sequential
+  ("arbitrary"), so the running max / denominator / accumulator live in
+  VMEM scratch across key blocks;
+* q/k/v blocks are (bq, D) / (bk, D) VMEM tiles, D padded to the
+  128-lane boundary by the ops.py wrapper;
+* GQA is expressed in the BlockSpec index maps (kv head = q head //
+  group) — no repeat-materialization of K/V in HBM;
+* causal and sliding-window masks are built from block-local iotas; with
+  causal=True fully-masked key blocks are skipped via ``pl.when``
+  (block-sparsity — the same trick that makes SWA O(S·W)).
+
+Numerics follow the standard flash-attention recurrence in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, bq: int, bk: int, nk: int, causal: bool, window: Optional[int],
+    scale: float, q_offset: int, t_valid: int,
+):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # rows are offset by q_offset = T - S so that decode (S < T) aligns ends
+    row = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    col = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        mask = col < t_valid  # key padding
+        if causal:
+            mask &= col <= row
+        if window is not None:
+            mask &= col > row - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]          # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # rows with nothing unmasked yet keep m=-inf; guard the exps
+        alpha = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.where(m_new == _NEG_INF, 0.0, jnp.exp(s - m_new))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal or window is not None:
+        # block-level sparsity: skip key blocks that are fully masked
+        first_row = qi * bq + q_offset
+        last_row = first_row + bq - 1
+        first_col = ki * bk
+        last_col = first_col + bk - 1
+        live = first_col < t_valid
+        if causal:
+            live &= first_col <= last_row
+        if window is not None:
+            live &= last_col > first_row - window
+        pl.when(live)(body)
+    else:
+        body()
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "t_valid", "q_offset", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    bq: int = 128,
+    bk: int = 128,
+    t_valid: Optional[int] = None,
+    q_offset: Optional[int] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D); returns (B, Hq, S, D).
+
+    S % bq == 0 and T % bk == 0 required (ops.py pads); keys at
+    positions >= t_valid (default T) are masked out, which is how padded
+    keys stay inert.  q_offset aligns query row ids with key column ids
+    (decode: real rows sit at the *end* of the valid key range); it
+    defaults to t_valid - S, which is correct when q is unpadded.
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if t_valid is None:
+        t_valid = T
+    if q_offset is None:
+        q_offset = t_valid - S
+    nq, nk = S // bq, T // bk
+    grid = (B, Hq, nq, nk)
+    kernel = functools.partial(
+        _fa_kernel,
+        bq=bq, bk=bk, nk=nk, causal=causal, window=window,
+        scale=scale, q_offset=q_offset, t_valid=t_valid,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,81 @@
+"""Tiled MXU matmul — the "DSP target" for the paper's MatrixMult row.
+
+TPU adaptation of the paper's biggest win (31.9x on the C64x+, obtained
+there by software pipelining of nested loops).  On TPU the equivalent of
+software pipelining is MXU-aligned VMEM tiling: blocks of (bm, bk) x
+(bk, bn) with a float32 VMEM accumulator carried across the k grid
+dimension.  Block sizes default to 128/256/128 — multiples of the
+128-lane MXU tile, sized so that a_block + b_block + acc stay well under
+the ~16 MiB/core VMEM budget:
+
+    128*256*4 + 256*128*4 + 128*128*4 = 0.38 MiB
+
+The k grid dimension is marked "arbitrary" (sequential) so the
+accumulator carries; m/n are parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret")
+)
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """(m, k) @ (k, n) with explicit VMEM tiling.
+
+    Shapes must be multiples of the block sizes — the public wrapper in
+    ops.py pads.  ``interpret=True`` runs the kernel body in python on
+    CPU (this container); on a real TPU pass interpret=False.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, (bm, bk, bn))
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)

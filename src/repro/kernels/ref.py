@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``assert_allclose`` sweeps in tests/test_kernels_*.py) and double as
+the *reference variants* VPE starts from — exactly the paper's setup,
+where the naive C code is the incumbent and the DSP build is the
+candidate.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain matmul with f32 accumulation, output in a's dtype."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Valid 2-D cross-correlation of a single-channel image.
+
+    x: (H, W), w: (kh, kw) -> (H-kh+1, W-kw+1).  (The paper's benchmark
+    is "2D convolution with a square kernel matrix"; like most DSP
+    libraries it computes cross-correlation.)
+    """
+    kh, kw = w.shape
+    out = jax.lax.conv_general_dilated(
+        x[None, None, :, :].astype(jnp.float32),
+        w[None, None, :, :].astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0, 0].astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    logits_dtype=jnp.float32,
+) -> jax.Array:
+    """Multi-head attention with GQA, causal and sliding-window masks.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, T, D) with Hq % Hkv == 0.
+    window=W keeps keys with  col > row - W  (W-token sliding window,
+    inclusive of self), composed with the causal mask.
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(logits_dtype), kx.astype(logits_dtype)) * scale
+    row = jnp.arange(S)[:, None] + (T - S)  # align ends (decode: S<T)
+    col = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= col <= row
+    if window is not None:
+        mask &= col > row - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vx.astype(logits_dtype))
+    return out.astype(q.dtype)

@@ -1,0 +1,106 @@
+"""HLO text analysis: collective bytes + cost extraction.
+
+``cost_analysis()`` has no collective figures, so collective traffic is
+parsed from the compiled module text: for every all-gather / all-reduce
+/ reduce-scatter / all-to-all / collective-permute instruction we sum
+the RESULT shape bytes (async ``-start`` counted, ``-done`` skipped).
+Shapes in the partitioned module are per-device shards, so the totals
+are per-device wire bytes — exactly what the roofline's per-link term
+wants.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|\S+)\s+(?P<kind>"
+    + "|".join(re.escape(k) for k in COLLECTIVES)
+    + r")(?P<start>-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per device) from HLO text.
+
+    HLO instruction format: ``%name = TYPE opcode(operands), ...``.
+    Async pairs: counted at ``-start`` (result shape is the last element
+    of the start tuple), ``-done`` skipped.
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        seg = m.group("type")
+        if seg.startswith("(") and m.group("start"):
+            # start tuple = (operand, ..., result); count the result only
+            shapes = _SHAPE_RE.findall(seg)
+            if shapes:
+                dtype, dims = shapes[-1]
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                out[m.group("kind")] += n * _DTYPE_BYTES[dtype]
+            continue
+        out[m.group("kind")] += _shape_bytes(seg)
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+def collective_count(hlo_text: str) -> int:
+    return sum(1 for line in hlo_text.splitlines() if _COLL_RE.search(line))
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes"):
+        v = getattr(ma, key, None)
+        if v is not None:
+            out[key] = float(v)
+    return out

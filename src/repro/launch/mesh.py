@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Single pod: (16, 16) = 256 chips, axes (data, model) — TP kept inside
+the pod where ICI bandwidth lives.  Multi-pod: (2, 16, 16) = 512 chips,
+axes (pod, data, model) — the pod axis carries only data-parallel
+gradient all-reduce (DCN-friendly), never TP collectives.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run pins the device count before any
+jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the real local device (tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

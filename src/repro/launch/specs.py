@@ -1,0 +1,204 @@
+"""Abstract argument specs + shardings for every (arch x shape) cell.
+
+Everything here is ShapeDtypeStruct-level: no device allocation ever
+happens (the full configs are 1.2B-34B parameters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shardlib
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.runtime.train_loop import make_train_step
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.source_len, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    *, wide_dp: bool = False) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    dp = shardlib.dp_axes(mesh) + (("model",) if wide_dp else ())
+    bs = NamedSharding(mesh, shardlib.fit_spec(P(dp, None), (B, S), mesh))
+    out = {"tokens": bs, "labels": bs}
+    if cfg.family == "encdec":
+        out["frames"] = NamedSharding(mesh, shardlib.fit_spec(
+            P(dp, None, None), (B, cfg.source_len, cfg.d_model), mesh))
+    return out
+
+
+@dataclasses.dataclass
+class Lowerable:
+    """A step function + abstract args + shardings, ready to lower."""
+
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple = ()
+
+    def lower(self):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        return jitted.lower(*self.args)
+
+
+def _named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def auto_tp(cfg: ModelConfig, mesh: Mesh, *, min_params: float = 1e9) -> bool:
+    """No tensor parallelism for tiny models: a 0.1B model split 16 ways
+    produces 32-wide matmul shards whose per-layer collectives dwarf the
+    compute (whisper-base measured collective-dominant at every shape).
+    Below ``min_params`` the model replicates over the model axis and the
+    batch shards over BOTH axes (pure 256-way DP)."""
+    return cfg.param_count() >= min_params
+
+
+def auto_fsdp(cfg: ModelConfig, mesh: Mesh, *, hbm_budget_gb: float = 12.0) -> bool:
+    """§Perf hillclimb 3: FSDP weight sharding costs a per-layer
+    all-gather; when TP-only weights+optimizer already fit per device,
+    dropping FSDP measured 4x better roofline fraction (qwen3-8b
+    train_4k: 0.023 -> 0.092).  Size-dependent dispatch, the paper's
+    Fig. 2b insight applied to the distribution strategy."""
+    sizes = shardlib.axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    n = cfg.param_count()
+    # bf16 params + f32 m/v/master = 14 bytes per param, TP-sharded
+    per_device_gb = n * 14.0 / tp / 1e9
+    return per_device_gb > hbm_budget_gb
+
+
+def effective_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                           build_kwargs=None) -> int:
+    """The microbatch count build_train will actually use (dry-run probes
+    must scale by the same number)."""
+    bkw = build_kwargs or {}
+    if bkw.get("num_microbatches"):
+        return int(bkw["num_microbatches"])
+    tp = bkw.get("tp", "auto")
+    if tp == "auto":
+        tp = auto_tp(cfg, mesh)
+    return 1 if not tp else shape.num_microbatches
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                *, fsdp: bool | str = "auto", tp: bool | str = "auto",
+                num_microbatches: int | None = None,
+                compress_grads: bool = False) -> Lowerable:
+    if tp == "auto":
+        tp = auto_tp(cfg, mesh)
+    if fsdp == "auto":
+        fsdp = auto_fsdp(cfg, mesh)
+    nmb = shape.num_microbatches if num_microbatches is None else num_microbatches
+    if not tp and num_microbatches is None:
+        # pure-DP needs the full global batch in flight so it shards over
+        # both axes (hillclimb 5: whisper with 16-seq microbatches left
+        # the model axis idle and replicated compute 16x — refuted run)
+        nmb = 1
+    opt_cfg = adamw.AdamWConfig()
+    step = make_train_step(cfg, opt_cfg, num_microbatches=nmb,
+                           compress_grads=compress_grads)
+    params_av = model_lib.param_specs(cfg)
+    opt_av = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), params_av)
+    if compress_grads:
+        from repro.optim import compression
+        opt_av["ef"] = jax.eval_shape(compression.ErrorFeedback.init, params_av)
+    batch_av = batch_specs(cfg, shape)
+    lr_av = jax.ShapeDtypeStruct((), jnp.float32)
+
+    p_shard = _named(mesh, shardlib.param_specs(params_av, mesh, fsdp=fsdp, tp=tp))
+    o_shard = _named(mesh, shardlib.param_specs(opt_av, mesh, fsdp=fsdp, tp=tp))
+    b_shard = batch_shardings(cfg, shape, mesh, wide_dp=not tp)
+    lr_shard = NamedSharding(mesh, P())
+    metrics_shard = {k: NamedSharding(mesh, P()) for k in ("loss", "grad_norm", "lr")}
+    return Lowerable(
+        fn=step,
+        args=(params_av, opt_av, batch_av, lr_av),
+        in_shardings=(p_shard, o_shard, b_shard, lr_shard),
+        out_shardings=(p_shard, o_shard, metrics_shard),
+        donate_argnums=(0, 1),
+    )
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  *, fsdp: bool = True, kv_mode: str = "headdim") -> Lowerable:
+    params_av = model_lib.param_specs(cfg)
+    batch_av = batch_specs(cfg, shape)
+    cache_av = model_lib.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    p_shard = _named(mesh, shardlib.param_specs(params_av, mesh, fsdp=fsdp))
+    b_shard = batch_shardings(cfg, shape, mesh)
+    c_shard = _named(mesh, shardlib.cache_partition_specs(cache_av, mesh, kv_mode=kv_mode))
+    logits_shard = NamedSharding(mesh, shardlib.fit_spec(
+        P(shardlib.dp_axes(mesh), None, "model"),
+        (shape.global_batch, 1, cfg.vocab_size), mesh))
+
+    def fn(params, batch, cache):
+        return model_lib.prefill(cfg, params, batch, cache)
+
+    return Lowerable(
+        fn=fn,
+        args=(params_av, batch_av, cache_av),
+        in_shardings=(p_shard, b_shard, c_shard),
+        out_shardings=(c_shard, logits_shard),
+        donate_argnums=(2,),
+    )
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 *, fsdp: bool = True, kv_mode: str = "headdim") -> Lowerable:
+    params_av = model_lib.param_specs(cfg)
+    cache_av = model_lib.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    tok_av = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    p_shard = _named(mesh, shardlib.param_specs(params_av, mesh, fsdp=fsdp))
+    c_shard = _named(mesh, shardlib.cache_partition_specs(cache_av, mesh, kv_mode=kv_mode))
+    t_shard = NamedSharding(mesh, shardlib.fit_spec(
+        shardlib.batch_spec(mesh), (shape.global_batch, 1), mesh))
+    logits_shard = NamedSharding(mesh, shardlib.fit_spec(
+        P(shardlib.dp_axes(mesh), None, "model"),
+        (shape.global_batch, 1, cfg.vocab_size), mesh))
+
+    def fn(params, cache, tokens):
+        return model_lib.decode_step(cfg, params, cache, tokens)
+
+    return Lowerable(
+        fn=fn,
+        args=(params_av, cache_av, tok_av),
+        in_shardings=(p_shard, c_shard, t_shard),
+        out_shardings=(c_shard, logits_shard),
+        donate_argnums=(1,),
+    )
+
+
+BUILDERS: Dict[str, Callable] = {
+    "train": build_train,
+    "prefill": build_prefill,
+    "decode": build_decode,
+}
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, **kw) -> Lowerable:
+    return BUILDERS[shape.kind](cfg, shape, mesh, **kw)

@@ -1,0 +1,13 @@
+"""Model zoo for the 10 assigned architectures.
+
+families: dense/moe/vlm (transformer.py), hybrid (hybrid.py — zamba2),
+ssm (ssm_stack.py — rwkv6), encdec (encdec.py — whisper).
+Facade: model.py.
+"""
+
+from . import encdec, hybrid, kvcache, layers, mamba2, model, moe, rwkv6, ssm_stack, transformer
+
+__all__ = [
+    "model", "layers", "kvcache", "moe", "mamba2", "rwkv6",
+    "transformer", "hybrid", "ssm_stack", "encdec",
+]

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder (family: encdec; whisper-base).
+
+Per the brief the conv/audio frontend is a STUB: the model consumes
+precomputed frame embeddings (B, source_len, d_model) — ``input_specs``
+provides them.  Adaptations (DESIGN.md): RMSNorm instead of LayerNorm,
+RoPE for decoder positions (whisper's learned 448-position table cannot
+express the assigned 32k decode shape), GELU MLPs kept.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import kvcache, layers
+from .layers import AttnSpec, Params
+from .transformer import _sub
+
+
+def attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias, rope_theta=cfg.rope_theta, rms_eps=cfg.rms_eps,
+    )
+
+
+def _enc_layer_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    s = attn_spec(cfg)
+    d = {"ln1": (cfg.d_model,), "ln2": (cfg.d_model,)}
+    d.update({f"attn_{k}": v for k, v in layers.attn_param_shapes(s).items()})
+    d.update({f"mlp_{k}": v for k, v in layers.gelu_mlp_param_shapes(cfg.d_model, cfg.d_ff).items()})
+    return d
+
+
+def _dec_layer_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    s = attn_spec(cfg)
+    d = {"ln1": (cfg.d_model,), "ln_x": (cfg.d_model,), "ln2": (cfg.d_model,)}
+    d.update({f"attn_{k}": v for k, v in layers.attn_param_shapes(s).items()})
+    d.update({f"xattn_{k}": v for k, v in layers.attn_param_shapes(s).items()})
+    d.update({f"mlp_{k}": v for k, v in layers.gelu_mlp_param_shapes(cfg.d_model, cfg.d_ff).items()})
+    return d
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "enc_norm": (cfg.d_model,),
+        "dec_norm": (cfg.d_model,),
+        "lm_head": (cfg.d_model, cfg.vocab_size),
+        "encoder": {k: (cfg.encoder_layers, *v) for k, v in _enc_layer_shapes(cfg).items()},
+        "decoder": {k: (cfg.decoder_layers, *v) for k, v in _dec_layer_shapes(cfg).items()},
+    }
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    s = attn_spec(cfg)
+    k_e, k_h, k_enc, k_dec = jax.random.split(rng, 4)
+
+    def enc_one(k):
+        k1, k2 = jax.random.split(k)
+        p = {"ln1": jnp.ones((cfg.d_model,), dt), "ln2": jnp.ones((cfg.d_model,), dt)}
+        p.update({f"attn_{n}": v for n, v in layers.init_attn(k1, s, dt).items()})
+        p.update({f"mlp_{n}": v for n, v in layers.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, dt).items()})
+        return p
+
+    def dec_one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        p = {"ln1": jnp.ones((cfg.d_model,), dt), "ln_x": jnp.ones((cfg.d_model,), dt),
+             "ln2": jnp.ones((cfg.d_model,), dt)}
+        p.update({f"attn_{n}": v for n, v in layers.init_attn(k1, s, dt).items()})
+        p.update({f"xattn_{n}": v for n, v in layers.init_attn(k2, s, dt).items()})
+        p.update({f"mlp_{n}": v for n, v in layers.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, dt).items()})
+        return p
+
+    return {
+        "embed": (jax.random.normal(k_e, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "dec_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": layers.dense_init(k_h, cfg.d_model, cfg.vocab_size, dt),
+        "encoder": jax.vmap(enc_one)(jax.random.split(k_enc, cfg.encoder_layers)),
+        "decoder": jax.vmap(dec_one)(jax.random.split(k_dec, cfg.decoder_layers)),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
+           attn_impl: Optional[str] = None) -> jax.Array:
+    """frames: (B, T_src, d) stubbed frame embeddings -> (B, T_src, d)."""
+    s = attn_spec(cfg)
+    T = frames.shape[1]
+    positions = jnp.arange(T)
+    impl = attn_impl or cfg.attn_impl
+    x = frames
+
+    def body(x, lp):
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        x = x + layers.attn_block(_sub(lp, "attn_"), s, h, positions, causal=False, attn_impl=impl)
+        h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        x = x + layers.gelu_mlp(_sub(lp, "mlp_"), h)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = layers.scan_layers(body, x, params["encoder"], unroll=cfg.unroll_layers)
+    return layers.rmsnorm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def decode_train(cfg: ModelConfig, params: Params, tokens: jax.Array, enc_out: jax.Array,
+                 attn_impl: Optional[str] = None) -> jax.Array:
+    s = attn_spec(cfg)
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    enc_positions = jnp.arange(enc_out.shape[1])
+    impl = attn_impl or cfg.attn_impl
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(x, lp):
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        x = x + layers.attn_block(_sub(lp, "attn_"), s, h, positions, causal=True, attn_impl=impl)
+        # cross attention: q from decoder, k/v from encoder output
+        h = layers.rmsnorm(x, lp["ln_x"], cfg.rms_eps)
+        xp = _sub(lp, "xattn_")
+        q, _, _ = layers.attn_qkv(xp, s, h, positions)
+        _, k, v = layers.attn_qkv(xp, s, enc_out, enc_positions)
+        o = layers.ATTENTION_VARIANTS[impl](q, k, v, causal=False)
+        x = x + layers._merge_heads(o) @ xp["wo"]
+        h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        x = x + layers.gelu_mlp(_sub(lp, "mlp_"), h)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = layers.scan_layers(body, x, params["decoder"], unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["dec_norm"], cfg.rms_eps)
+    return (x @ params["lm_head"]).astype(jnp.float32)
+
+
+def forward(cfg: ModelConfig, params: Params, frames: jax.Array, tokens: jax.Array,
+            attn_impl: Optional[str] = None) -> jax.Array:
+    return decode_train(cfg, params, tokens, encode(cfg, params, frames, attn_impl), attn_impl)
+
+
+# -- serving ------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    kv = kvcache.kv_cache_specs(cfg.decoder_layers, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    xshape = (cfg.decoder_layers, batch, cfg.num_kv_heads, cfg.source_len, cfg.head_dim)
+    return {
+        "k": kv["k"], "v": kv["v"], "length": kv["length"],
+        "xk": jax.ShapeDtypeStruct(xshape, jnp.bfloat16),
+        "xv": jax.ShapeDtypeStruct(xshape, jnp.bfloat16),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, max_len))
+
+
+def precompute_cross_kv(cfg: ModelConfig, params: Params, enc_out: jax.Array):
+    """Fill the cross-attention K/V once per request (prefill phase)."""
+    s = attn_spec(cfg)
+    enc_positions = jnp.arange(enc_out.shape[1])
+
+    def body(_, lp):
+        _, k, v = layers.attn_qkv(_sub(lp, "xattn_"), s, enc_out, enc_positions)
+        return None, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["decoder"])
+    return xk, xv
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array
+                ) -> Tuple[Dict, jax.Array]:
+    s = attn_spec(cfg)
+    B, _ = tokens.shape
+    length = cache["length"]
+    positions = jnp.full((B, 1), length, dtype=jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(x, scanned):
+        lp, kc, vc, xk, xv = scanned
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+        kc, vc = kvcache.update_layer_cache(kc, vc, k, v, length)
+        o = kvcache.decode_attention(q, kc, vc, length)
+        x = x + layers._merge_heads(o) @ lp["attn_wo"]
+        h = layers.rmsnorm(x, lp["ln_x"], cfg.rms_eps)
+        xp = _sub(lp, "xattn_")
+        q, _, _ = layers.attn_qkv(xp, s, h, positions)
+        o = kvcache.decode_attention(q, xk, xv, jnp.int32(cfg.source_len - 1))
+        x = x + layers._merge_heads(o) @ xp["wo"]
+        h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        x = x + layers.gelu_mlp(_sub(lp, "mlp_"), h)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = layers.scan_layers(
+        body, x, (params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["dec_norm"], cfg.rms_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    new_cache = {**cache, "k": k_new, "v": v_new, "length": length + 1}
+    return new_cache, logits

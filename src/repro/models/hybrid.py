@@ -1,0 +1,258 @@
+"""zamba2-style hybrid: Mamba2 backbone + ONE shared attention block.
+
+Structure (cfg.num_layers total sequential blocks, attn_every period):
+
+    num_macro = num_layers // attn_every      macro blocks, each =
+        (attn_every - 1) mamba2 layers + 1 application of the SHARED
+        attention+MLP block (single weight set, applied num_macro times)
+    tail = num_layers - num_macro * attn_every  extra mamba2 layers
+
+For zamba2-1.2b (38L, attn_every=6): 6 macros of (5 mamba + shared attn)
+plus a 2-layer mamba tail = 38 blocks, 6 shared-attn applications.
+Adaptation note (DESIGN.md): the original concatenates the embedding
+stream into the shared block input; we apply the shared block on the
+residual stream only — same compute class, simpler sharding.
+
+The macro structure is an exact two-level scan, so dry-run cost probes
+can difference macro counts cleanly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import kvcache, layers, mamba2
+from .layers import Params
+from .transformer import _sub, attn_spec
+
+
+def m2_spec(cfg: ModelConfig) -> mamba2.Mamba2Spec:
+    return mamba2.Mamba2Spec(
+        d_model=cfg.d_model,
+        ssm_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim,
+        expand=cfg.ssm_expand,
+        conv_width=cfg.ssm_conv,
+        chunk=cfg.ssm_chunk,
+        rms_eps=cfg.rms_eps,
+    )
+
+
+def macro_counts(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(num_macro, mamba_per_macro, tail)."""
+    num_macro = cfg.num_layers // cfg.attn_every
+    per = cfg.attn_every - 1
+    tail = cfg.num_layers - num_macro * cfg.attn_every
+    return num_macro, per, tail
+
+
+# -- shapes / init ---------------------------------------------------------------
+
+def _mamba_layer_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    shapes = {f"m_{k}": v for k, v in mamba2.mamba2_param_shapes(m2_spec(cfg)).items()}
+    shapes["m_ln"] = (cfg.d_model,)
+    return shapes
+
+
+def _shared_block_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    s = attn_spec(cfg)
+    shapes = {"ln1": (cfg.d_model,), "ln2": (cfg.d_model,)}
+    shapes.update({f"attn_{k}": v for k, v in layers.attn_param_shapes(s).items()})
+    shapes.update({f"ffn_{k}": v for k, v in layers.swiglu_param_shapes(cfg.d_model, cfg.d_ff).items()})
+    return shapes
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    num_macro, per, tail = macro_counts(cfg)
+    ml = _mamba_layer_shapes(cfg)
+    return {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+        "lm_head": (cfg.d_model, cfg.vocab_size),
+        "macro": {k: (num_macro, per, *v) for k, v in ml.items()},
+        "tail": {k: (tail, *v) for k, v in ml.items()},
+        "shared": _shared_block_shapes(cfg),
+    }
+
+
+def _init_mamba_layer(cfg: ModelConfig, rng) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    p = {f"m_{k}": v for k, v in mamba2.init_mamba2(rng, m2_spec(cfg), dt).items()}
+    p["m_ln"] = jnp.ones((cfg.d_model,), dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    num_macro, per, tail = macro_counts(cfg)
+    k_e, k_h, k_m, k_t, k_s1, k_s2 = jax.random.split(rng, 6)
+    macro = jax.vmap(jax.vmap(lambda k: _init_mamba_layer(cfg, k)))(
+        jax.random.split(k_m, num_macro * per).reshape(num_macro, per, 2)
+    )
+    tail_p = jax.vmap(lambda k: _init_mamba_layer(cfg, k))(jax.random.split(k_t, max(tail, 1))[:tail])
+    shared: Params = {
+        "ln1": jnp.ones((cfg.d_model,), dt), "ln2": jnp.ones((cfg.d_model,), dt),
+    }
+    shared.update({f"attn_{k}": v for k, v in layers.init_attn(k_s1, attn_spec(cfg), dt).items()})
+    shared.update({f"ffn_{k}": v for k, v in layers.init_swiglu(k_s2, cfg.d_model, cfg.d_ff, dt).items()})
+    return {
+        "embed": (jax.random.normal(k_e, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": layers.dense_init(k_h, cfg.d_model, cfg.vocab_size, dt),
+        "macro": macro,
+        "tail": tail_p,
+        "shared": shared,
+    }
+
+
+# -- forward -----------------------------------------------------------------------
+
+def _mamba_layer_fwd(cfg: ModelConfig, lp: Params, x: jax.Array,
+                     state: Optional[Dict] = None):
+    h = layers.rmsnorm(x, lp["m_ln"], cfg.rms_eps)
+    y, new_state = mamba2.mamba2_block(_sub(lp, "m_"), m2_spec(cfg), h,
+                                       ssd_impl=cfg.ssd_impl, state=state)
+    return x + y, new_state
+
+
+def _shared_block_fwd(cfg: ModelConfig, sp: Params, x: jax.Array, positions,
+                      attn_impl: Optional[str] = None) -> jax.Array:
+    s = attn_spec(cfg)
+    h = layers.rmsnorm(x, sp["ln1"], cfg.rms_eps)
+    x = x + layers.attn_block(_sub(sp, "attn_"), s, h, positions, causal=True,
+                              attn_impl=attn_impl or cfg.attn_impl)
+    h = layers.rmsnorm(x, sp["ln2"], cfg.rms_eps)
+    return x + layers.swiglu(_sub(sp, "ffn_"), h)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            attn_impl: Optional[str] = None) -> jax.Array:
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(S)
+
+    def mamba_body(x, lp):
+        y, _ = _mamba_layer_fwd(cfg, lp, x)
+        return y, None
+
+    def macro_body(x, mp):
+        x, _ = layers.scan_layers(mamba_body, x, mp, unroll=cfg.unroll_layers)
+        x = _shared_block_fwd(cfg, params["shared"], x, positions, attn_impl)
+        return x, None
+
+    if cfg.remat == "full":
+        macro_body = jax.checkpoint(macro_body)
+    x, _ = layers.scan_layers(macro_body, x, params["macro"], unroll=cfg.unroll_layers)
+    num_macro, per, tail = macro_counts(cfg)
+    if tail:
+        body = jax.checkpoint(mamba_body) if cfg.remat == "full" else mamba_body
+        x, _ = layers.scan_layers(body, x, params["tail"], unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    return (x @ params["lm_head"]).astype(jnp.float32)
+
+
+# -- serving -----------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    num_macro, per, tail = macro_counts(cfg)
+    ms = mamba2.mamba2_state_specs(m2_spec(cfg), batch)
+    kv = kvcache.kv_cache_specs(num_macro, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return {
+        "macro_ssm": {k: jax.ShapeDtypeStruct((num_macro, per, *v.shape), v.dtype) for k, v in ms.items()},
+        "tail_ssm": {k: jax.ShapeDtypeStruct((tail, *v.shape), v.dtype) for k, v in ms.items()},
+        "k": kv["k"], "v": kv["v"], "length": kv["length"],
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, max_len))
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array
+                ) -> Tuple[Dict, jax.Array]:
+    B, _ = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    length = cache["length"]
+    positions = jnp.full((B, 1), length, dtype=jnp.int32)
+    s = attn_spec(cfg)
+
+    def mamba_body(x, scanned):
+        lp, st = scanned
+        y, new_st = _mamba_layer_fwd(cfg, lp, x, state=st)
+        return y, new_st
+
+    def macro_body(x, scanned):
+        mp, st, kc, vc = scanned
+        x, new_st = layers.scan_layers(mamba_body, x, (mp, st), unroll=cfg.unroll_layers)
+        h = layers.rmsnorm(x, params["shared"]["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(params["shared"], "attn_"), s, h, positions)
+        kc, vc = kvcache.update_layer_cache(kc, vc, k, v, length)
+        o = kvcache.decode_attention(q, kc, vc, length, window=cfg.window)
+        x = x + layers._merge_heads(o) @ params["shared"]["attn_wo"]
+        h = layers.rmsnorm(x, params["shared"]["ln2"], cfg.rms_eps)
+        x = x + layers.swiglu(_sub(params["shared"], "ffn_"), h)
+        return x, (new_st, kc, vc)
+
+    x, (new_macro_ssm, k_new, v_new) = layers.scan_layers(
+        macro_body, x, (params["macro"], cache["macro_ssm"], cache["k"], cache["v"]),
+        unroll=cfg.unroll_layers)
+    num_macro, per, tail = macro_counts(cfg)
+    new_tail_ssm = cache["tail_ssm"]
+    if tail:
+        x, new_tail_ssm = layers.scan_layers(
+            mamba_body, x, (params["tail"], cache["tail_ssm"]), unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    new_cache = {
+        "macro_ssm": new_macro_ssm, "tail_ssm": new_tail_ssm,
+        "k": k_new, "v": v_new, "length": length + 1,
+    }
+    return new_cache, logits
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: Dict
+            ) -> Tuple[Dict, jax.Array]:
+    """Chunked prompt processing: SSD-chunked mamba + causal attention,
+    filling both the recurrent states and the shared-block KV cache."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(S)
+    s = attn_spec(cfg)
+
+    def mamba_body(x, scanned):
+        lp, st = scanned
+        y, new_st = _mamba_layer_fwd(cfg, lp, x, state=st)
+        return y, new_st
+
+    def macro_body(x, scanned):
+        mp, st, kc, vc = scanned
+        x, new_st = layers.scan_layers(mamba_body, x, (mp, st), unroll=cfg.unroll_layers)
+        h = layers.rmsnorm(x, params["shared"]["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(params["shared"], "attn_"), s, h, positions)
+        kc, vc = kvcache.update_layer_cache(kc, vc, k, v, jnp.int32(0))
+        o = layers.ATTENTION_VARIANTS[cfg.attn_impl](q, k, v, causal=True, window=cfg.window)
+        x = x + layers._merge_heads(o) @ params["shared"]["attn_wo"]
+        h = layers.rmsnorm(x, params["shared"]["ln2"], cfg.rms_eps)
+        x = x + layers.swiglu(_sub(params["shared"], "ffn_"), h)
+        return x, (new_st, kc, vc)
+
+    x, (new_macro_ssm, k_new, v_new) = layers.scan_layers(
+        macro_body, x, (params["macro"], cache["macro_ssm"], cache["k"], cache["v"]),
+        unroll=cfg.unroll_layers)
+    num_macro, per, tail = macro_counts(cfg)
+    new_tail_ssm = cache["tail_ssm"]
+    if tail:
+        x, new_tail_ssm = layers.scan_layers(
+            mamba_body, x, (params["tail"], cache["tail_ssm"]), unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x[:, -1:, :], params["final_norm"], cfg.rms_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    new_cache = {
+        "macro_ssm": new_macro_ssm, "tail_ssm": new_tail_ssm,
+        "k": k_new, "v": v_new, "length": jnp.int32(S),
+    }
+    return new_cache, logits

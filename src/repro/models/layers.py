@@ -1,0 +1,304 @@
+"""Shared neural blocks: norms, RoPE, attention, FFN.
+
+All layers are pure functions over explicit parameter pytrees (no flax)
+so that the same code serves real initialization (smoke tests), abstract
+``ShapeDtypeStruct`` evaluation (dry-run) and scan-stacked weights.
+
+Attention is a VPE op: the reference is a memory-safe q-chunked
+online-softmax implementation in pure jnp (works at 32k context without
+materializing S x T scores); the accelerated variant is the Pallas flash
+kernel.  Selection is static (trace-time) inside jitted steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+Params = Dict[str, Any]
+
+_NEG_INF = float("-inf")
+
+
+def scan_layers(body, init, xs, *, unroll: bool = False):
+    """``lax.scan`` over stacked layer weights, or a python unroll.
+
+    The unrolled form exists for the dry-run cost probes:
+    ``cost_analysis()`` counts a scan body ONCE regardless of trip count
+    (verified empirically), so roofline totals are derived from unrolled
+    depth-1/depth-2 probes and scaled (launch/roofline.py).
+    """
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# -- initializers ------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out)) * scale).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+# -- RoPE --------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D) rotated by per-position angles; positions: (S,) or (B, S)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, D/2)
+        ang = ang[None, None]
+    else:
+        ang = positions[:, None, :, None].astype(jnp.float32) * freqs[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# -- attention (reference: q-chunked online softmax) --------------------------
+
+def attention_chunked(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: Optional[int] = None,
+    scale: Optional[float] = None, q_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention in pure jnp: scan over q chunks.
+
+    q: (B, Hq, S, D); k/v: (B, Hkv, T, D).  Peak memory is
+    O(B * Hq * q_chunk * T) logits instead of O(S * T) — this is what
+    makes 32k prefill lowerable.  Exact (single softmax pass per chunk).
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    if S <= q_chunk:
+        return kref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    while S % q_chunk:  # largest chunk that divides S (e.g. 1500 -> 750)
+        q_chunk -= 1
+    n_chunks = S // q_chunk
+    offset = T - S
+    # GQA-aware: no jnp.repeat of K/V to Hq heads — the repeat forces
+    # GSPMD to materialize/gather a (B,Hq,T,D) tensor when Hq doesn't
+    # divide the model axis (§Perf hillclimb 1; same fix as decode).
+    qg = q.reshape(B, Hkv, group, S, D)
+
+    def chunk(i):
+        qi = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, axis=3)
+        s = jnp.einsum("bhgsd,bhtd->bhgst", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        row = i * q_chunk + jnp.arange(q_chunk)[:, None] + offset
+        col = jnp.arange(T)[None, :]
+        mask = jnp.ones((q_chunk, T), bool)
+        if causal:
+            mask &= col <= row
+        if window is not None:
+            mask &= col > row - window
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgst,bhtd->bhgsd", p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32).astype(q.dtype)
+
+    out = jax.lax.map(chunk, jnp.arange(n_chunks))  # (n, B, Hkv, g, c, D)
+    return jnp.moveaxis(out, 0, 3).reshape(B, Hq, S, D)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_fwd_only(q, k, v, causal, window, scale):
+    return kops.flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def _flash_cvjp_fwd(q, k, v, causal, window, scale):
+    return _flash_fwd_only(q, k, v, causal, window, scale), (q, k, v)
+
+
+def _flash_cvjp_bwd(causal, window, scale, res, g):
+    # Backward through the exact reference (flash-bwd kernel is the TPU
+    # deployment's job; numerics identical up to accumulation order).
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention_chunked(q, k, v, causal=causal, window=window, scale=scale),
+        q, k, v)
+    return vjp(g)
+
+
+_flash_fwd_only.defvjp(_flash_cvjp_fwd, _flash_cvjp_bwd)
+
+
+def attention_flash(q, k, v, *, causal=True, window=None, scale=None, q_chunk=1024):
+    """Pallas flash kernel variant (TPU target; interpret on CPU)."""
+    return _flash_fwd_only(q, k, v, causal, window, scale)
+
+
+ATTENTION_VARIANTS = {
+    "reference": attention_chunked,
+    "flash_pallas": attention_flash,
+}
+
+
+# -- GQA attention block -------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None
+    rope_theta: float = 1e4
+    rms_eps: float = 1e-6
+
+
+def attn_param_shapes(s: AttnSpec) -> Dict[str, Tuple]:
+    shapes = {
+        "wq": (s.d_model, s.num_heads * s.head_dim),
+        "wk": (s.d_model, s.num_kv_heads * s.head_dim),
+        "wv": (s.d_model, s.num_kv_heads * s.head_dim),
+        "wo": (s.num_heads * s.head_dim, s.d_model),
+    }
+    if s.qkv_bias:
+        shapes.update({
+            "bq": (s.num_heads * s.head_dim,),
+            "bk": (s.num_kv_heads * s.head_dim,),
+            "bv": (s.num_kv_heads * s.head_dim,),
+        })
+    if s.qk_norm:
+        shapes.update({"q_norm": (s.head_dim,), "k_norm": (s.head_dim,)})
+    return shapes
+
+
+def init_attn(rng, s: AttnSpec, dtype) -> Params:
+    ks = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], s.d_model, s.num_heads * s.head_dim, dtype),
+        "wk": dense_init(ks[1], s.d_model, s.num_kv_heads * s.head_dim, dtype),
+        "wv": dense_init(ks[2], s.d_model, s.num_kv_heads * s.head_dim, dtype),
+        "wo": dense_init(ks[3], s.num_heads * s.head_dim, s.d_model, dtype),
+    }
+    if s.qkv_bias:
+        p["bq"] = jnp.zeros((s.num_heads * s.head_dim,), dtype)
+        p["bk"] = jnp.zeros((s.num_kv_heads * s.head_dim,), dtype)
+        p["bv"] = jnp.zeros((s.num_kv_heads * s.head_dim,), dtype)
+    if s.qk_norm:
+        p["q_norm"] = jnp.ones((s.head_dim,), dtype)
+        p["k_norm"] = jnp.ones((s.head_dim,), dtype)
+    return p
+
+
+def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, d).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    B, H, S, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * D)
+
+
+def attn_qkv(p: Params, s: AttnSpec, x: jax.Array, positions: jax.Array):
+    """Project + rope; returns q (B,H,S,D), k/v (B,Hkv,S,D)."""
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if s.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, s.num_heads, s.head_dim)
+    k = _split_heads(k, s.num_kv_heads, s.head_dim)
+    v = _split_heads(v, s.num_kv_heads, s.head_dim)
+    if s.qk_norm:
+        q = rmsnorm(q, p["q_norm"], s.rms_eps)
+        k = rmsnorm(k, p["k_norm"], s.rms_eps)
+    q = apply_rope(q, positions, s.rope_theta)
+    k = apply_rope(k, positions, s.rope_theta)
+    return q, k, v
+
+
+def attn_block(
+    p: Params, s: AttnSpec, x: jax.Array, positions: jax.Array,
+    *, causal: bool = True, attn_impl: str = "reference",
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> jax.Array:
+    """Full attention sub-layer (projections + SDPA + output proj)."""
+    q, k, v = attn_qkv(p, s, x, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    impl = ATTENTION_VARIANTS[attn_impl]
+    o = impl(q, k, v, causal=causal, window=s.window)
+    return _merge_heads(o) @ p["wo"]
+
+
+# -- FFN -----------------------------------------------------------------------
+
+def swiglu_param_shapes(d_model: int, d_ff: int) -> Dict[str, Tuple]:
+    return {
+        "w_gate": (d_model, d_ff),
+        "w_up": (d_model, d_ff),
+        "w_down": (d_ff, d_model),
+    }
+
+
+def init_swiglu(rng, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_param_shapes(d_model: int, d_ff: int) -> Dict[str, Tuple]:
+    return {"w_in": (d_model, d_ff), "b_in": (d_ff,), "w_out": (d_ff, d_model), "b_out": (d_model,)}
+
+
+def init_gelu_mlp(rng, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(rng, 2)
+    return {
+        "w_in": dense_init(ks[0], d_model, d_ff, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["w_in"] + p["b_in"]) @ p["w_out"] + p["b_out"]

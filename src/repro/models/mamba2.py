@@ -1,0 +1,213 @@
+"""Mamba2 (SSD) block — zamba2's backbone.
+
+TPU adaptation: the CUDA reference is a fused warp-level scan; the
+TPU-native formulation is the *chunked* SSD decomposition, which turns
+the recurrence into MXU-friendly (chunk x chunk) matmuls plus a short
+scan over chunks — the same insight flash attention applies to softmax.
+Two variants are registered with VPE for the `ssm_scan` op:
+
+  * ``chunked``  — O(S/c) scan steps of dense (c x c) matmuls (default);
+  * ``sequential`` — plain lax.scan over time (exact oracle, and the
+    shape decode uses per-token).
+
+Recurrence (per head, state N, head dim P):
+    a_t = exp(A * dt_t)            A < 0 scalar per head
+    h_t = a_t * h_{t-1} + dt_t * (x_t outer B_t)        h: (P, N)
+    y_t = h_t @ C_t + D * x_t
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Spec:
+    d_model: int
+    ssm_state: int = 64      # N
+    head_dim: int = 64       # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    rms_eps: float = 1e-6
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_state
+
+
+def mamba2_param_shapes(s: Mamba2Spec) -> Dict[str, Tuple]:
+    return {
+        "in_proj": (s.d_model, 2 * s.d_inner + 2 * s.ssm_state + s.num_heads),
+        "conv_w": (s.conv_width, s.conv_dim),
+        "conv_b": (s.conv_dim,),
+        "A_log": (s.num_heads,),
+        "D": (s.num_heads,),
+        "dt_bias": (s.num_heads,),
+        "norm": (s.d_inner,),
+        "out_proj": (s.d_inner, s.d_model),
+    }
+
+
+def init_mamba2(rng, s: Mamba2Spec, dtype) -> Params:
+    ks = jax.random.split(rng, 4)
+    return {
+        "in_proj": dense_init(ks[0], s.d_model, 2 * s.d_inner + 2 * s.ssm_state + s.num_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, s.conv_dim)) / math.sqrt(s.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((s.conv_dim,), dtype),
+        "A_log": jnp.zeros((s.num_heads,), jnp.float32),          # A = -exp(0) = -1
+        "D": jnp.ones((s.num_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((s.num_heads,), jnp.float32),
+        "norm": jnp.ones((s.d_inner,), dtype),
+        "out_proj": dense_init(ks[3], s.d_inner, s.d_model, dtype),
+    }
+
+
+def _project(p: Params, s: Mamba2Spec, x: jax.Array):
+    """x: (B, S, d) -> z, xs, Bm, Cm, dt  (pre-conv split)."""
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt_raw = jnp.split(
+        zxbcdt,
+        [s.d_inner, 2 * s.d_inner, 2 * s.d_inner + s.ssm_state, 2 * s.d_inner + 2 * s.ssm_state],
+        axis=-1,
+    )
+    return z, xs, Bm, Cm, dt_raw
+
+
+def _causal_conv(s: Mamba2Spec, xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None = None):
+    """Depthwise causal conv over time.  xbc: (B, S, C).
+
+    prev: (B, width-1, C) history for decode; returns (out, new_prev).
+    """
+    B, S, C = xbc.shape
+    W = s.conv_width
+    if prev is None:
+        prev = jnp.zeros((B, W - 1, C), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)
+    out = jnp.zeros_like(xbc, shape=(B, S, C))
+    for i in range(W):
+        out = out + xp[:, i:i + S, :] * w[i]
+    new_prev = xp[:, -(W - 1):, :]
+    return jax.nn.silu(out + b), new_prev
+
+
+def _ssd_chunked(s: Mamba2Spec, xh, Bm, Cm, log_a, dt, h0):
+    """Chunked SSD.  xh: (B, S, H, P); Bm/Cm: (B, S, N); log_a/dt: (B, S, H).
+
+    h0: (B, H, P, N) initial state.  Returns (y, h_final).
+    """
+    B, S, H, P = xh.shape
+    N = s.ssm_state
+    c = min(s.chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+
+    def split(t):  # (B, S, ...) -> (nc, B, c, ...)
+        return jnp.moveaxis(t.reshape(B, nc, c, *t.shape[2:]), 1, 0)
+
+    xs_, Bs_, Cs_, la_, dt_ = map(split, (xh, Bm, Cm, log_a, dt))
+
+    def chunk_step(h, inputs):
+        xc, Bc, Cc, lac, dtc = inputs  # (B,c,H,P) (B,c,N) (B,c,N) (B,c,H) (B,c,H)
+        L = jnp.cumsum(lac, axis=1)                       # (B, c, H) inclusive
+        # intra-chunk: y_t = sum_{s<=t} exp(L_t - L_s) * (C_t.B_s) * dt_s x_s
+        G = jnp.einsum("btn,bsn->bts", Cc, Bc)            # (B, c, c)
+        decay = L[:, :, None, :] - L[:, None, :, :]       # (B, t, s, H)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        M = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        Xd = xc * dtc[..., None]                          # (B, c, H, P)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", G, M, Xd)
+        # inter-chunk: y_t += exp(L_t) * C_t @ h^T
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", Cc, h, jnp.exp(L))
+        # state update: h' = exp(L_c) h + sum_s exp(L_c - L_s) Xd_s outer B_s
+        tail = jnp.exp(L[:, -1:, :] - L)                  # (B, c, H)
+        h_new = h * jnp.exp(L[:, -1])[..., None, None] + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", Xd, Bc, tail)
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xs_, Bs_, Cs_, la_, dt_))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y, h_final
+
+
+def _ssd_sequential(s: Mamba2Spec, xh, Bm, Cm, log_a, dt, h0):
+    """Oracle: plain scan over time."""
+    B, S, H, P = xh.shape
+
+    def step(h, inputs):
+        xt, Bt, Ct, lat, dtt = inputs  # (B,H,P) (B,N) (B,N) (B,H) (B,H)
+        a = jnp.exp(lat)[..., None, None]                 # (B,H,1,1)
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xt, Bt, dtt)
+        h = a * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct)
+        return h, y
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0),
+          jnp.moveaxis(log_a, 1, 0), jnp.moveaxis(dt, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+SSD_VARIANTS = {"chunked": _ssd_chunked, "sequential": _ssd_sequential}
+
+
+def mamba2_block(
+    p: Params, s: Mamba2Spec, x: jax.Array,
+    *, ssd_impl: str = "chunked",
+    state: Dict | None = None,
+) -> Tuple[jax.Array, Dict | None]:
+    """x: (B, S, d) -> (B, S, d).  state: {"h", "conv"} for decode."""
+    B, S, _ = x.shape
+    H, P, N = s.num_heads, s.head_dim, s.ssm_state
+    z, xs, Bm, Cm, dt_raw = _project(p, s, x)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_prev = state["conv"] if state is not None else None
+    xbc, conv_new = _causal_conv(s, xbc, p["conv_w"], p["conv_b"], conv_prev)
+    xs, Bm, Cm = jnp.split(xbc, [s.d_inner, s.d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+    log_a = dt * A                                        # (B,S,H), negative
+    xh = xs.reshape(B, S, H, P).astype(jnp.float32)
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    # single-token decode uses the exact recurrence; longer inputs (train
+    # and chunked prefill) use the selected variant — chunked carries h0.
+    impl = SSD_VARIANTS[ssd_impl if S > 1 else "sequential"]
+    y, h_final = impl(s, xh, Bm.astype(jnp.float32), Cm.astype(jnp.float32), log_a, dt, h0)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, s.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], s.rms_eps)
+    out = y @ p["out_proj"]
+    new_state = {"h": h_final, "conv": conv_new} if state is not None else None
+    return out, new_state
+
+
+def mamba2_state_specs(s: Mamba2Spec, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "h": jax.ShapeDtypeStruct((batch, s.num_heads, s.head_dim, s.ssm_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, s.conv_dim), jnp.bfloat16),
+    }
+
+
+def init_mamba2_state(s: Mamba2Spec, batch: int, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, s.num_heads, s.head_dim, s.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, s.conv_dim), dtype),
+    }

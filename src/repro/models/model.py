@@ -1,0 +1,122 @@
+"""Model facade: family dispatch + abstract parameter/cache specs.
+
+Every family exposes the same functional surface:
+
+    init_params(cfg, rng)                -> params pytree
+    param_specs(cfg)                     -> ShapeDtypeStruct pytree (no alloc)
+    forward(cfg, params, batch)          -> logits (B, S, V) f32
+    loss_fn(cfg, params, batch)          -> scalar CE loss
+    init_cache / cache_specs             -> serving cache
+    prefill(cfg, params, batch, cache)   -> (cache, last logits)
+    decode_step(cfg, params, cache, tok) -> (cache, logits)
+
+``batch`` is a dict: {"tokens", "labels"} (+ "frames" for encdec — the
+stubbed modality frontend output, per the brief).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import encdec, hybrid, ssm_stack, transformer
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,   # chameleon: early-fusion = ordinary token ids
+    "hybrid": hybrid,
+    "ssm": ssm_stack,
+    "encdec": encdec,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+# -- params ------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng) -> Any:
+    return family_module(cfg).init_params(cfg, rng)
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """Abstract params via eval_shape — zero allocation, dtype-faithful."""
+    rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(cfg, k), rng_spec)
+
+
+def count_params_from_shapes(cfg: ModelConfig, active_only: bool = False) -> int:
+    specs = param_specs(cfg)
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        key = jax.tree_util.keystr(path)
+        if active_only and "experts_" in key:
+            n = int(n * cfg.top_k / max(cfg.num_experts, 1))
+        total += n
+    return total
+
+
+# -- training ------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Any, batch: Dict[str, jax.Array]) -> jax.Array:
+    if cfg.family == "encdec":
+        return encdec.forward(cfg, params, batch["frames"], batch["tokens"])
+    return family_module(cfg).forward(cfg, params, batch["tokens"])
+
+
+def loss_fn(cfg: ModelConfig, params: Any, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Mean next-token cross-entropy (labels = tokens shifted by caller)."""
+    logits = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# -- serving ------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return family_module(cfg).cache_specs(cfg, batch, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return family_module(cfg).init_cache(cfg, batch, max_len)
+
+
+def decode_step(cfg: ModelConfig, params: Any, cache: Any, tokens: jax.Array
+                ) -> Tuple[Any, jax.Array]:
+    return family_module(cfg).decode_step(cfg, params, cache, tokens)
+
+
+def prefill(cfg: ModelConfig, params: Any, batch: Dict[str, jax.Array], cache: Any
+            ) -> Tuple[Any, jax.Array]:
+    """Prompt processing.  Families without a fused prefill path replay
+    the train-mode forward and then enter decode (correct, slower)."""
+    mod = family_module(cfg)
+    if hasattr(mod, "prefill"):
+        return mod.prefill(cfg, params, batch["tokens"], cache)
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(cfg, params, batch["frames"])
+        xk, xv = encdec.precompute_cross_kv(cfg, params, enc_out)
+        cache = {**cache, "xk": xk, "xv": xv}
+        logits = encdec.decode_train(cfg, params, batch["tokens"], enc_out)
+        return cache, logits[:, -1:, :]
+    # recurrent families: replay tokens through decode steps via scan
+    tokens = batch["tokens"]
+
+    def step(cache, tok):
+        cache, logits = decode_step(cfg, params, cache, tok[:, None])
+        return cache, logits
+
+    cache, logits = jax.lax.scan(step, cache, jnp.moveaxis(tokens, 1, 0))
+    return cache, logits[-1]

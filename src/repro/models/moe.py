@@ -1,0 +1,169 @@
+"""Mixture-of-Experts layer: shared experts + routed top-k experts.
+
+Scatter-based capacity routing (no (N, E, C) one-hot dispatch tensor —
+that classic Mesh-TF formulation is O(N*E*C) memory and cannot scale to
+the 1M-token global batches of the assigned shapes).  Pipeline:
+
+  1. router logits -> top-k experts + softmax weights per token;
+  2. position-in-expert via a cumsum over the one-hot (N*k, E) matrix;
+  3. tokens scattered into an (E, C, d) buffer (capacity drops beyond C);
+  4. per-expert SwiGLU via einsum over the stacked (E, d, f) weights —
+     experts shard on the `model` mesh axis (expert parallelism); the
+     scatter/gather surface is where GSPMD inserts the all-to-alls;
+  5. gather back, weighted-sum over k, plus the shared-expert branch.
+
+This matches qwen2-moe (4 shared + 60 routed top-4, norm_topk_prob) and
+moonlight (2 shared + 64 routed top-6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init, init_swiglu, swiglu, swiglu_param_shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    num_experts: int
+    top_k: int
+    moe_d_ff: int            # per-expert hidden
+    num_shared_experts: int  # folded into one shared SwiGLU of width n*moe_d_ff
+    capacity_factor: float = 1.25
+    norm_topk_prob: bool = True
+    # pad the expert dimension up to a multiple of this so it shards
+    # evenly over the `model` axis (expert parallelism) — qwen2-moe's 60
+    # experts pad to 64 for a 16-way mesh.  Padded experts receive no
+    # tokens; the cost is (pad/E) extra einsum rows of zeros.
+    pad_to: int = 0
+
+    @property
+    def padded_experts(self) -> int:
+        if self.pad_to <= 0:
+            return self.num_experts
+        return ((self.num_experts + self.pad_to - 1) // self.pad_to) * self.pad_to
+
+    @property
+    def shared_d_ff(self) -> int:
+        return self.num_shared_experts * self.moe_d_ff
+
+
+def moe_param_shapes(s: MoESpec) -> Dict[str, Tuple]:
+    e = s.padded_experts
+    shapes = {
+        "router": (s.d_model, s.num_experts),
+        "experts_gate": (e, s.d_model, s.moe_d_ff),
+        "experts_up": (e, s.d_model, s.moe_d_ff),
+        "experts_down": (e, s.moe_d_ff, s.d_model),
+    }
+    if s.num_shared_experts:
+        shapes.update({f"shared_{k}": v for k, v in swiglu_param_shapes(s.d_model, s.shared_d_ff).items()})
+    return shapes
+
+
+def init_moe(rng, s: MoESpec, dtype) -> Params:
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / math.sqrt(s.d_model)
+    e = s.padded_experts
+    p: Params = {
+        "router": dense_init(ks[0], s.d_model, s.num_experts, jnp.float32),
+        "experts_gate": (jax.random.normal(ks[1], (e, s.d_model, s.moe_d_ff)) * scale).astype(dtype),
+        "experts_up": (jax.random.normal(ks[2], (e, s.d_model, s.moe_d_ff)) * scale).astype(dtype),
+        "experts_down": (jax.random.normal(ks[3], (e, s.moe_d_ff, s.d_model)) / math.sqrt(s.moe_d_ff)).astype(dtype),
+    }
+    if s.num_shared_experts:
+        shared = init_swiglu(ks[4], s.d_model, s.shared_d_ff, dtype)
+        p.update({f"shared_{k}": v for k, v in shared.items()})
+    return p
+
+
+def capacity(s: MoESpec, n_tokens: int) -> int:
+    c = int(math.ceil(s.capacity_factor * n_tokens * s.top_k / s.num_experts))
+    return max(8, ((c + 7) // 8) * 8)  # pad to vector lanes
+
+
+def route(s: MoESpec, router_w: jax.Array, x: jax.Array):
+    """x: (N, d) -> (weights (N, k), experts (N, k)) in f32."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(gates, s.top_k)
+    if s.norm_topk_prob:
+        weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, experts
+
+
+def _routed_experts(p: Params, s: MoESpec, xg: jax.Array) -> jax.Array:
+    """Group-wise routed branch.  xg: (G, n, d) -> (G, n, d).
+
+    Group-limited routing (beyond paper, §Perf hillclimb 4): capacity is
+    per (group, expert) and the scatter/gather stays inside the group.
+    With G aligned to the data axis the dispatch is shard-local; the
+    only cross-device exchange is the expert-parallel all-to-all on the
+    model axis.  G=1 recovers global routing.
+    """
+    G, n, d = xg.shape
+    E = s.padded_experts
+    C = capacity(s, n)
+    weights, experts = route(s, p["router"], xg.reshape(G * n, d))
+    weights = weights.reshape(G, n, s.top_k)
+    experts = experts.reshape(G, n * s.top_k)              # (G, n*k)
+
+    onehot = jax.nn.one_hot(experts, s.num_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - 1                   # per-group positions
+    pos = jnp.take_along_axis(pos, experts[..., None], axis=2)[..., 0]
+    keep = pos < C
+    slot = experts * C + jnp.where(keep, pos, 0)           # (G, n*k)
+
+    token_idx = jnp.repeat(jnp.arange(n), s.top_k)
+    contrib = jnp.where(keep[..., None], xg[:, token_idx, :], 0.0)
+    buf = jnp.zeros((G, E * C, d), xg.dtype)
+    buf = jax.vmap(lambda b, sl, c: b.at[sl].add(c))(buf, slot, contrib)
+    buf = buf.reshape(G, E, C, d)
+
+    from jax.sharding import PartitionSpec as _P
+    from repro.distributed.sharding import maybe_constrain
+    buf = maybe_constrain(buf, _P(("pod", "data"), "model", None, None))
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["experts_gate"])
+    u_ = jnp.einsum("gecd,edf->gecf", buf, p["experts_up"])
+    eo = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g_) * u_, p["experts_down"])
+    eo = maybe_constrain(eo, _P(("pod", "data"), "model", None, None))
+    eo = eo.reshape(G, E * C, d)
+
+    out_k = jax.vmap(lambda e, sl: e[sl])(eo, slot)        # (G, n*k, d)
+    out_k = out_k * jnp.where(keep, weights.reshape(G, n * s.top_k), 0.0)[..., None]
+    return jnp.sum(out_k.reshape(G, n, s.top_k, d), axis=2)
+
+
+def moe_block(p: Params, s: MoESpec, x: jax.Array, *, groups: int = 1) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    N = B * S
+    if N % max(groups, 1):
+        groups = 1
+    xf = x.reshape(N, d)
+    out = _routed_experts(p, s, xf.reshape(max(groups, 1), -1, d)).reshape(N, d)
+
+    if s.num_shared_experts:
+        shared_p = {k[len("shared_"):]: v for k, v in p.items() if k.startswith("shared_")}
+        out = out + swiglu(shared_p, xf)
+    return out.astype(x.dtype).reshape(B, S, d)
+
+
+def aux_load_balance_loss(s: MoESpec, router_w: jax.Array, x: jax.Array) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean over tokens)."""
+    N = x.shape[0] * x.shape[1]
+    xf = x.reshape(N, -1)
+    logits = xf.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    _, experts = jax.lax.top_k(gates, s.top_k)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(experts, s.num_experts, dtype=jnp.float32).sum(axis=1), axis=0
+    ) / s.top_k  # normalized so the balanced value is 1.0 for any k
+    frac_probs = jnp.mean(gates, axis=0)
+    return s.num_experts * jnp.sum(frac_tokens * frac_probs)

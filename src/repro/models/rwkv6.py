@@ -1,0 +1,223 @@
+"""RWKV6 ("Finch") block — attention-free, data-dependent decay.
+
+Time-mix (WKV6) per head (key dim K, value dim V, here K=V=64):
+
+    out_t = r_t @ (S_{t-1} + (u ⊙ k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T          w_t ∈ (0,1) per channel
+
+with w_t data-dependent (the RWKV6 novelty) via a low-rank projection.
+Channel-mix: r ⊙ (relu(k)² W_v).  Token shift mixes x_t with x_{t-1}.
+
+VPE variants for the `wkv` op:
+  * ``sequential`` — exact lax.scan over time (oracle; also decode path);
+  * ``chunked``    — log-space chunked form (MXU matmuls per chunk),
+    numerically safe for the sub-chunk products because decays are
+    renormalized within each chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Spec:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    chunk: int = 32
+    rms_eps: float = 1e-6
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv6_param_shapes(s: RWKV6Spec) -> Dict[str, Tuple]:
+    d = s.d_model
+    return {
+        # time-mix
+        "mix_r": (d,), "mix_k": (d,), "mix_v": (d,), "mix_w": (d,), "mix_g": (d,),
+        "wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d), "wo": (d, d),
+        "w_base": (d,),
+        "w_lora_a": (d, s.decay_lora), "w_lora_b": (s.decay_lora, d),
+        "u": (d,),
+        "ln_x": (d,),
+        # channel-mix
+        "cmix_r": (d,), "cmix_k": (d,),
+        "cr": (d, d), "ck": (d, s.d_ff), "cv": (s.d_ff, d),
+    }
+
+
+def init_rwkv6(rng, s: RWKV6Spec, dtype) -> Params:
+    d = s.d_model
+    ks = jax.random.split(rng, 10)
+    p: Params = {
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_w": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], d, d, dtype), "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype), "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        "w_base": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": dense_init(ks[5], d, s.decay_lora, jnp.float32),
+        "w_lora_b": (jax.random.normal(ks[6], (s.decay_lora, d)) * 0.01).astype(jnp.float32),
+        "u": (jax.random.normal(ks[7], (d,)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),
+        "cmix_r": jnp.full((d,), 0.5, dtype), "cmix_k": jnp.full((d,), 0.5, dtype),
+        "cr": dense_init(ks[8], d, d, dtype),
+        "ck": dense_init(ks[9], d, s.d_ff, dtype),
+        "cv": dense_init(ks[0], s.d_ff, d, dtype),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None):
+    """shift(x)_t = x_{t-1}; prev: (B, d) carried state for decode."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1, :])
+    else:
+        prev = prev[:, None, :]
+    shifted = jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+    return shifted, x[:, -1, :]
+
+
+def _heads(x: jax.Array, H: int, D: int):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, D)
+
+
+def _wkv_sequential(r, k, v, w, u, S0):
+    """r/k/w: (B, T, H, K); v: (B, T, H, V); u: (H, K); S0: (B, H, K, V)."""
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_final, out = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(out, 0, 1), S_final  # (B,T,H,V)
+
+
+def _wkv_chunked(r, k, v, w, u, S0, *, chunk: int):
+    """Chunked WKV in log space.
+
+    Within a chunk:  out_t = r_t @ (Πw<t ⊙ S_in) + Σ_{s<t} (r_t ⊙ Π_{s<i<t} w_i)·k_s v_s
+                     + (r_t ⊙ u) · k_t v_t
+    using  Π_{s<i<t} w_i = exp(Lw_{t-1} - Lw_s)  with Lw = cumsum(log w).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+    nc = T // c
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(B, nc, c, H, t.shape[-1]), 1, 0)
+
+    rs, ks_, vs, ws = map(split, (r, k, v, w))
+
+    def chunk_step(S, inp):
+        rc, kc, vc, wc = inp                      # (B,c,H,K) etc.
+        lw = jnp.log(wc)                          # negative
+        Lw = jnp.cumsum(lw, axis=1)               # inclusive (B,c,H,K)
+        # inter: out_t += (r_t ⊙ exp(Lw_{t-1})) @ S   (Lw_{t-1} = Lw_t - lw_t)
+        r_decay = rc * jnp.exp(Lw - lw)
+        out = jnp.einsum("bthk,bhkv->bthv", r_decay, S)
+        # intra (s < t): A[t,s] = Σ_k r_t,k exp(Lw_{t-1,k} - Lw_{s,k}) k_s,k
+        q_ = r_decay                              # carries exp(Lw_{t-1})
+        k_ = kc * jnp.exp(-Lw)
+        A = jnp.einsum("bthk,bshk->bhts", q_, k_)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        out = out + jnp.einsum("bhts,bshv->bthv", A, vc)
+        # diagonal bonus
+        out = out + jnp.einsum("bthk,bthk,bthv->bthv", rc * u[None, None], kc, vc)
+        # state update: S' = exp(Lw_c) ⊙ S + Σ_s exp(Lw_c - Lw_s) k_s v_s
+        tail = jnp.exp(Lw[:, -1:] - Lw)           # (B,c,H,K)
+        S = S * jnp.exp(Lw[:, -1])[..., None] + jnp.einsum(
+            "bshk,bshv->bhkv", kc * tail, vc)
+        return S, out
+
+    S_final, outs = jax.lax.scan(chunk_step, S0, (rs, ks_, vs, ws))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, T, H, V), S_final
+
+
+WKV_VARIANTS = {"sequential": _wkv_sequential, "chunked": _wkv_chunked}
+
+
+def rwkv6_time_mix(
+    p: Params, s: RWKV6Spec, x: jax.Array,
+    *, wkv_impl: str = "chunked", state: Dict | None = None,
+) -> Tuple[jax.Array, Dict | None]:
+    B, T, d = x.shape
+    H, K = s.num_heads, s.head_dim
+    prev = state["x_tm"] if state is not None else None
+    xs, last_x = _token_shift(x, prev)
+
+    def mix(mu):
+        return x + mu * (xs - x)
+
+    r = _heads(mix(p["mix_r"]) @ p["wr"], H, K).astype(jnp.float32)
+    k = _heads(mix(p["mix_k"]) @ p["wk"], H, K).astype(jnp.float32)
+    v = _heads(mix(p["mix_v"]) @ p["wv"], H, K).astype(jnp.float32)
+    g = mix(p["mix_g"]) @ p["wg"]
+    xw = mix(p["mix_w"]).astype(jnp.float32)
+    w_log = p["w_base"] + (xw @ p["w_lora_a"]) @ p["w_lora_b"]   # (B,T,d)
+    w = jnp.exp(-jnp.exp(w_log))                                  # (0,1)
+    w = _heads(w, H, K)
+    u = p["u"].reshape(H, K)
+
+    S0 = state["S"] if state is not None else jnp.zeros((B, H, K, K), jnp.float32)
+    impl = WKV_VARIANTS[wkv_impl if T > 1 else "sequential"]
+    if impl is _wkv_chunked:
+        out, S_final = impl(r, k, v, w, u, S0, chunk=s.chunk)
+    else:
+        out, S_final = impl(r, k, v, w, u, S0)
+
+    out = out.reshape(B, T, d).astype(x.dtype)
+    out = rmsnorm(out, p["ln_x"], s.rms_eps)  # stands in for per-head groupnorm
+    out = (out * jax.nn.silu(g)) @ p["wo"]
+    new_state = {"x_tm": last_x, "S": S_final} if state is not None else None
+    return out, new_state
+
+
+def rwkv6_channel_mix(
+    p: Params, s: RWKV6Spec, x: jax.Array, state: Dict | None = None,
+) -> Tuple[jax.Array, Dict | None]:
+    prev = state["x_cm"] if state is not None else None
+    xs, last_x = _token_shift(x, prev)
+    xr = x + p["cmix_r"] * (xs - x)
+    xk = x + p["cmix_k"] * (xs - x)
+    r = jax.nn.sigmoid(xr @ p["cr"])
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    out = r * (k @ p["cv"])
+    new_state = {"x_cm": last_x} if state is not None else None
+    return out, new_state
+
+
+def rwkv6_state_specs(s: RWKV6Spec, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "x_tm": jax.ShapeDtypeStruct((batch, s.d_model), jnp.bfloat16),
+        "x_cm": jax.ShapeDtypeStruct((batch, s.d_model), jnp.bfloat16),
+        "S": jax.ShapeDtypeStruct((batch, s.num_heads, s.head_dim, s.head_dim), jnp.float32),
+    }
+
+
+def init_rwkv6_state(s: RWKV6Spec, batch: int, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "x_tm": jnp.zeros((batch, s.d_model), dtype),
+        "x_cm": jnp.zeros((batch, s.d_model), dtype),
+        "S": jnp.zeros((batch, s.num_heads, s.head_dim, s.head_dim), jnp.float32),
+    }

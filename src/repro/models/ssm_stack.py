@@ -1,0 +1,133 @@
+"""RWKV6 full model stack (family: ssm; rwkv6-7b).
+
+Attention-free: no KV cache — per-layer state is O(1) in sequence
+length, which is why this arch runs the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers, rwkv6
+from .layers import Params
+from .transformer import _sub
+
+
+def r6_spec(cfg: ModelConfig) -> rwkv6.RWKV6Spec:
+    return rwkv6.RWKV6Spec(
+        d_model=cfg.d_model,
+        d_ff=cfg.d_ff,
+        head_dim=cfg.rwkv_head_dim,
+        chunk=cfg.rwkv_chunk,
+        rms_eps=cfg.rms_eps,
+    )
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    ls = {"ln1": (cfg.d_model,), "ln2": (cfg.d_model,)}
+    ls.update(rwkv6.rwkv6_param_shapes(r6_spec(cfg)))
+    return {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+        "lm_head": (cfg.d_model, cfg.vocab_size),
+        "layers": {k: (cfg.num_layers, *v) for k, v in ls.items()},
+    }
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    k_e, k_h, k_l = jax.random.split(rng, 3)
+
+    def one(k):
+        p = {"ln1": jnp.ones((cfg.d_model,), dt), "ln2": jnp.ones((cfg.d_model,), dt)}
+        p.update(rwkv6.init_rwkv6(k, r6_spec(cfg), dt))
+        return p
+
+    return {
+        "embed": (jax.random.normal(k_e, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": layers.dense_init(k_h, cfg.d_model, cfg.vocab_size, dt),
+        "layers": jax.vmap(one)(jax.random.split(k_l, cfg.num_layers)),
+    }
+
+
+def _layer_fwd(cfg: ModelConfig, lp: Params, x: jax.Array, state=None):
+    s = r6_spec(cfg)
+    h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+    tm_state = None if state is None else {"x_tm": state["x_tm"], "S": state["S"]}
+    y, tm_new = rwkv6.rwkv6_time_mix(lp, s, h, wkv_impl=cfg.wkv_impl, state=tm_state)
+    x = x + y
+    h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
+    cm_state = None if state is None else {"x_cm": state["x_cm"]}
+    y, cm_new = rwkv6.rwkv6_channel_mix(lp, s, h, state=cm_state)
+    x = x + y
+    new_state = None if state is None else {**tm_new, **cm_new}
+    return x, new_state
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, attn_impl=None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(x, lp):
+        y, _ = _layer_fwd(cfg, lp, x)
+        return y, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = layers.scan_layers(body, x, params["layers"], unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    return (x @ params["lm_head"]).astype(jnp.float32)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    ss = rwkv6.rwkv6_state_specs(r6_spec(cfg), batch)
+    out = {k: jax.ShapeDtypeStruct((cfg.num_layers, *v.shape), v.dtype) for k, v in ss.items()}
+    out["length"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, max_len))
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array
+                ) -> Tuple[Dict, jax.Array]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    length = cache["length"]
+    states = {k: cache[k] for k in ("x_tm", "x_cm", "S")}
+
+    def body(x, scanned):
+        lp, st = scanned
+        y, new_st = _layer_fwd(cfg, lp, x, state=st)
+        return y, new_st
+
+    x, new_states = layers.scan_layers(body, x, (params["layers"], states), unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    new_cache = {**new_states, "length": length + 1}
+    return new_cache, logits
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: Dict
+            ) -> Tuple[Dict, jax.Array]:
+    """Chunked prompt processing via the WKV chunked kernel, state-carrying."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    states = {k: cache[k] for k in ("x_tm", "x_cm", "S")}
+
+    def body(x, scanned):
+        lp, st = scanned
+        y, new_st = _layer_fwd(cfg, lp, x, state=st)
+        return y, new_st
+
+    x, new_states = layers.scan_layers(body, x, (params["layers"], states),
+                                       unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x[:, -1:, :], params["final_norm"], cfg.rms_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    new_cache = {**new_states, "length": jnp.int32(S)}
+    return new_cache, logits

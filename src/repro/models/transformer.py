@@ -1,0 +1,239 @@
+"""Decoder-only transformer assembly (families: dense, moe).
+
+Weights for the repeated layers are stacked on a leading L axis and the
+forward pass is a ``lax.scan`` over them — this keeps the HLO size
+O(1) in depth (essential for the 64-layer dry-runs) and is the natural
+place for per-layer FSDP all-gathers to overlap with compute.
+
+Covers: qwen2-7b (GQA + QKV bias), qwen3-8b (qk_norm), qwen2.5-32b,
+h2o-danube-3-4b (SWA), chameleon-34b (qk_norm, early-fusion token ids),
+qwen2-moe-a2.7b and moonshot-v1-16b-a3b (shared + routed top-k MoE).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import kvcache, layers, moe
+from .layers import AttnSpec, Params
+
+
+# -- specs --------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm,
+        window=cfg.window,
+        rope_theta=cfg.rope_theta,
+        rms_eps=cfg.rms_eps,
+    )
+
+
+def moe_spec(cfg: ModelConfig) -> moe.MoESpec:
+    return moe.MoESpec(
+        d_model=cfg.d_model,
+        num_experts=cfg.num_experts,
+        top_k=cfg.top_k,
+        moe_d_ff=cfg.moe_d_ff,
+        num_shared_experts=cfg.num_shared_experts,
+        capacity_factor=cfg.capacity_factor,
+        pad_to=cfg.moe_pad_experts,
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# -- parameter shapes -----------------------------------------------------------
+
+def layer_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    s = attn_spec(cfg)
+    shapes: Dict[str, Tuple] = {"ln1": (cfg.d_model,), "ln2": (cfg.d_model,)}
+    shapes.update({f"attn_{k}": v for k, v in layers.attn_param_shapes(s).items()})
+    if cfg.family == "moe":
+        shapes.update({f"moe_{k}": v for k, v in moe.moe_param_shapes(moe_spec(cfg)).items()})
+    else:
+        shapes.update({f"ffn_{k}": v for k, v in layers.swiglu_param_shapes(cfg.d_model, cfg.d_ff).items()})
+    return shapes
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    shapes: Dict[str, Any] = {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+        "layers": {k: (cfg.num_layers, *v) for k, v in layer_param_shapes(cfg).items()},
+    }
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.d_model, cfg.vocab_size)
+    return shapes
+
+
+# -- init -----------------------------------------------------------------------
+
+def init_layer(cfg: ModelConfig, rng) -> Params:
+    s = attn_spec(cfg)
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(rng)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), dt), "ln2": jnp.ones((cfg.d_model,), dt)}
+    p.update({f"attn_{k}": v for k, v in layers.init_attn(k1, s, dt).items()})
+    if cfg.family == "moe":
+        p.update({f"moe_{k}": v for k, v in moe.init_moe(k2, moe_spec(cfg), dt).items()})
+    else:
+        p.update({f"ffn_{k}": v for k, v in layers.init_swiglu(k2, cfg.d_model, cfg.d_ff, dt).items()})
+    return p
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dt = _dtype(cfg)
+    k_embed, k_head, k_layers = jax.random.split(rng, 3)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k))(jax.random.split(k_layers, cfg.num_layers))
+    p: Params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "layers": stacked,
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt)
+    return p
+
+
+# -- forward -----------------------------------------------------------------------
+
+def _sub(p: Params, prefix: str) -> Params:
+    n = len(prefix)
+    return {k[n:]: v for k, v in p.items() if k.startswith(prefix)}
+
+
+def layer_fwd(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+              attn_impl: Optional[str] = None) -> jax.Array:
+    s = attn_spec(cfg)
+    impl = attn_impl or cfg.attn_impl
+    h = layers.rmsnorm(x, p["ln1"], cfg.rms_eps)
+    x = x + layers.attn_block(_sub(p, "attn_"), s, h, positions, causal=True, attn_impl=impl)
+    h = layers.rmsnorm(x, p["ln2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        x = x + moe.moe_block(_sub(p, "moe_"), moe_spec(cfg), h, groups=cfg.moe_groups)
+    else:
+        x = x + layers.swiglu(_sub(p, "ffn_"), h)
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            attn_impl: Optional[str] = None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        return layer_fwd(cfg, lp, x, positions, attn_impl), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = layers.scan_layers(body, x, params["layers"], unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head).astype(jnp.float32)
+
+
+# -- serving -----------------------------------------------------------------------
+
+def _cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """SWA archs keep a ring buffer of window size — O(window) memory is
+    what makes h2o-danube's 500k-context decode shape feasible."""
+    if cfg.window is not None:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return kvcache.kv_cache_specs(
+        cfg.num_layers, batch, cfg.num_kv_heads, _cache_len(cfg, max_len), cfg.head_dim)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return kvcache.init_kv_cache(
+        cfg.num_layers, batch, cfg.num_kv_heads, _cache_len(cfg, max_len), cfg.head_dim)
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: Dict,
+            attn_impl: Optional[str] = None) -> Tuple[Dict, jax.Array]:
+    """Run the prompt, fill the cache, return (cache, last-position logits)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(S)
+    s = attn_spec(cfg)
+    impl = attn_impl or cfg.attn_impl
+
+    def body(x, scanned):
+        lp, kc, vc = scanned
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+        T_eff = kc.shape[2]
+        if T_eff < S:  # ring cache: keep the trailing window (S % W == 0 holds
+            # for the assigned shapes; rope is absolute so values stay valid)
+            kc, vc = kvcache.update_layer_cache(
+                kc, vc, k[:, :, -T_eff:], v[:, :, -T_eff:], jnp.int32(0))
+        else:
+            kc, vc = kvcache.update_layer_cache(kc, vc, k, v, jnp.int32(0))
+        o = layers.ATTENTION_VARIANTS[impl](q, k, v, causal=True, window=s.window)
+        x = x + layers._merge_heads(o) @ lp["attn_wo"]
+        h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        if cfg.family == "moe":
+            x = x + moe.moe_block(_sub(lp, "moe_"), moe_spec(cfg), h, groups=cfg.moe_groups)
+        else:
+            x = x + layers.swiglu(_sub(lp, "ffn_"), h)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = layers.scan_layers(
+        body, x, (params["layers"], cache["k"], cache["v"]), unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x[:, -1:, :], params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    new_cache = {"k": k_new, "v": v_new, "length": jnp.int32(S)}
+    return new_cache, logits
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array
+                ) -> Tuple[Dict, jax.Array]:
+    """One decode step.  tokens: (B, 1) -> (new_cache, logits (B, 1, V))."""
+    B, _ = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    length = cache["length"]
+    positions = jnp.full((B, 1), length, dtype=jnp.int32)
+    s = attn_spec(cfg)
+
+    def body(x, scanned):
+        lp, kc, vc = scanned
+        ring = cfg.window is not None and kc.shape[2] <= cfg.window
+        rw = kc.shape[2] if ring else None
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+        kc, vc = kvcache.update_layer_cache(kc, vc, k, v, length, ring_window=rw)
+        o = kvcache.decode_attention(q, kc, vc, length, window=cfg.window, ring_window=rw)
+        x = x + layers._merge_heads(o) @ lp["attn_wo"]
+        h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        if cfg.family == "moe":
+            x = x + moe.moe_block(_sub(lp, "moe_"), moe_spec(cfg), h, groups=cfg.moe_groups)
+        else:
+            x = x + layers.swiglu(_sub(lp, "ffn_"), h)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = layers.scan_layers(
+        body, x, (params["layers"], cache["k"], cache["v"]), unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    new_cache = {"k": k_new, "v": v_new, "length": length + 1}
+    return new_cache, logits

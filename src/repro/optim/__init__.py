@@ -1,0 +1,3 @@
+"""Optimizers, schedules, gradient compression."""
+from . import adamw, compression, schedule
+from .adamw import AdamWConfig

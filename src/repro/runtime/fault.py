@@ -1,0 +1,50 @@
+"""Fault injection + recovery orchestration (tested on CPU, designed for pods).
+
+Failure model: a step raises (device loss surfaces as an exception from
+the fenced step on real hardware; tests inject :class:`SimulatedFault`
+via ``TrainLoop.fault_hook``).  Recovery ladder:
+
+  1. retry the step (transient straggle — handled inside TrainLoop);
+  2. restore latest checkpoint on the same mesh (host restart);
+  3. elastic restore: rebuild the largest viable mesh from surviving
+     devices, re-derive shardings, restore (distributed/elastic.py).
+
+``run_with_recovery`` implements 2 and 3 around a TrainLoop.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.runtime.train_loop import TrainLoop
+
+
+class SimulatedFault(RuntimeError):
+    """Injected by tests to stand in for a device/host loss."""
+
+
+def run_with_recovery(
+    loop: TrainLoop,
+    num_steps: int,
+    *,
+    max_restores: int = 3,
+    on_restore: Optional[Callable[[int], None]] = None,
+) -> int:
+    """Run to ``num_steps``, restoring from checkpoint on faults.
+
+    Returns the number of restores performed.  Raises if recovery is
+    exhausted or no checkpoint exists when one is needed.
+    """
+    restores = 0
+    while loop.step < num_steps:
+        try:
+            loop.run(num_steps)
+        except SimulatedFault:
+            if restores >= max_restores:
+                raise
+            restores += 1
+            if on_restore is not None:
+                on_restore(restores)
+            if not loop.restore():
+                raise RuntimeError("fault before first checkpoint — cannot recover")
+    return restores

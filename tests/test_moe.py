@@ -1,0 +1,111 @@
+"""MoE layer invariants: routing, capacity, shared experts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import (
+    MoESpec, aux_load_balance_loss, capacity, init_moe, moe_block, route)
+
+SPEC = MoESpec(d_model=32, num_experts=8, top_k=2, moe_d_ff=16, num_shared_experts=1)
+
+
+def test_route_weights_normalized(rng):
+    p = init_moe(rng, SPEC, jnp.float32)
+    x = jax.random.normal(rng, (64, 32))
+    w, e = route(SPEC, p["router"], x)
+    assert w.shape == (64, 2) and e.shape == (64, 2)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, rtol=1e-5)
+    assert int(jnp.max(e)) < SPEC.num_experts
+
+
+def test_capacity_formula():
+    c = capacity(SPEC, 1024)
+    assert c >= 1024 * SPEC.top_k / SPEC.num_experts
+    assert c % 8 == 0
+
+
+def test_block_shape_and_finite(rng):
+    p = init_moe(rng, SPEC, jnp.float32)
+    x = jax.random.normal(rng, (2, 16, 32))
+    y = moe_block(p, SPEC, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_capacity_drop_reduces_output():
+    """With capacity factor ~0, (almost) all tokens drop -> shared only."""
+    rng = jax.random.PRNGKey(0)
+    tight = MoESpec(d_model=32, num_experts=8, top_k=2, moe_d_ff=16,
+                    num_shared_experts=0, capacity_factor=1e-6)
+    p = init_moe(rng, tight, jnp.float32)
+    x = jax.random.normal(rng, (2, 64, 32))
+    y = moe_block(p, tight, x)
+    # capacity = max(8, ...) = 8 slots/expert -> most of 256 assignments drop
+    loose = MoESpec(**{**tight.__dict__, "capacity_factor": 4.0})
+    y_full = moe_block(p, loose, x)
+    assert float(jnp.linalg.norm(y)) < float(jnp.linalg.norm(y_full))
+
+
+def test_identical_tokens_identical_outputs(rng):
+    """Permutation consistency: same token -> same expert mix -> same out."""
+    p = init_moe(rng, SPEC, jnp.float32)
+    tok = jax.random.normal(rng, (1, 1, 32))
+    x = jnp.tile(tok, (1, 8, 1))
+    y = moe_block(p, SPEC, x)
+    np.testing.assert_allclose(np.asarray(y - y[:, :1]), 0.0, atol=2e-5)
+
+
+def test_shared_expert_contributes(rng):
+    p = init_moe(rng, SPEC, jnp.float32)
+    x = jax.random.normal(rng, (1, 8, 32))
+    y_with = moe_block(p, SPEC, x)
+    no_shared = MoESpec(**{**SPEC.__dict__, "num_shared_experts": 0})
+    p2 = {k: v for k, v in p.items() if not k.startswith("shared_")}
+    y_without = moe_block(p2, no_shared, x)
+    assert float(jnp.linalg.norm(y_with - y_without)) > 1e-3
+
+
+def test_aux_loss_balanced_is_one(rng):
+    """Uniform router -> aux loss == num_experts * E[f*p] == 1."""
+    p = init_moe(rng, SPEC, jnp.float32)
+    p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform gates
+    x = jax.random.normal(rng, (4, 64, 32))
+    loss = aux_load_balance_loss(SPEC, p["router"], x)
+    np.testing.assert_allclose(float(loss), 1.0, rtol=0.15)
+
+
+def test_moe_grads_flow_to_experts(rng):
+    p = init_moe(rng, SPEC, jnp.float32)
+    x = jax.random.normal(rng, (2, 16, 32))
+    g = jax.grad(lambda p: jnp.sum(moe_block(p, SPEC, x) ** 2))(p)
+    assert float(jnp.linalg.norm(g["experts_gate"])) > 0
+    assert float(jnp.linalg.norm(g["router"])) > 0
+
+
+def test_group_limited_routing_matches_global(rng):
+    """§Perf hillclimb 4: with ample capacity, grouped == global routing."""
+    s = MoESpec(d_model=32, num_experts=8, top_k=2, moe_d_ff=16,
+                num_shared_experts=1, capacity_factor=8.0)
+    p = init_moe(rng, s, jnp.float32)
+    x = jax.random.normal(rng, (4, 16, 32))
+    y1 = moe_block(p, s, x, groups=1)
+    y4 = moe_block(p, s, x, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), rtol=1e-5, atol=1e-5)
+
+
+def test_group_capacity_is_per_group():
+    """Tight capacity drops per group, bounding cross-group imbalance."""
+    from repro.models.moe import capacity
+    s = MoESpec(d_model=32, num_experts=8, top_k=2, moe_d_ff=16,
+                num_shared_experts=0, capacity_factor=1.0)
+    assert capacity(s, 64) < capacity(s, 1024)
+
+
+def test_non_divisible_groups_fall_back(rng):
+    s = MoESpec(d_model=32, num_experts=8, top_k=2, moe_d_ff=16, num_shared_experts=0)
+    p = init_moe(rng, s, jnp.float32)
+    x = jax.random.normal(rng, (1, 10, 32))  # 10 tokens, groups=16 -> fallback
+    y = moe_block(p, s, x, groups=16)
+    assert y.shape == x.shape

@@ -1,0 +1,176 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Welford, shape_bucket
+from repro.core.controller import Controller
+from repro.core.profiler import Profiler
+from repro.core.registry import Registry
+from repro.optim import compression
+from repro.optim.adamw import clip_by_global_norm, global_norm
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+class TestWelford:
+    @given(st.lists(st.floats(-1e6, 1e6), min_size=2, max_size=100))
+    def test_matches_numpy(self, xs):
+        w = Welford()
+        for x in xs:
+            w.add(x)
+        assert w.mean == pytest.approx(np.mean(xs), rel=1e-6, abs=1e-6)
+        assert w.var == pytest.approx(np.var(xs, ddof=1), rel=1e-4, abs=1e-2)
+
+    @given(st.lists(st.floats(-1e3, 1e3), min_size=1, max_size=50))
+    def test_serialization_roundtrip(self, xs):
+        w = Welford()
+        for x in xs:
+            w.add(x)
+        w2 = Welford.from_dict(w.as_dict())
+        assert (w2.n, w2.mean, w2.m2) == (w.n, w.mean, w.m2)
+
+
+class TestShapeBucket:
+    @given(st.lists(st.integers(1, 64), min_size=1, max_size=3))
+    def test_deterministic(self, dims):
+        x = np.zeros(dims, np.float32)
+        assert shape_bucket(x) == shape_bucket(x.copy())
+
+    @given(st.integers(1, 20), st.integers(1, 20))
+    def test_monotone_in_size(self, a, b):
+        """Bigger total size never maps to a smaller bucket index."""
+        xa = np.zeros((2 ** a,), np.float32)
+        xb = np.zeros((2 ** b,), np.float32)
+        ba, bb = shape_bucket(xa), shape_bucket(xb)
+        if a <= b:
+            assert ba[0] <= bb[0]
+
+    @given(st.integers(1, 1 << 22))
+    def test_bucket_width_one_octave(self, n):
+        x = np.zeros((n,), np.int8)
+        b = shape_bucket(x)[0]
+        assert 2 ** b <= n < 2 ** (b + 1)
+
+
+class TestControllerInvariants:
+    @given(st.lists(st.sampled_from(["a", "b", "c"]), min_size=1, max_size=40),
+           st.floats(1e-4, 1e-1))
+    def test_selected_always_registered(self, schedule, base):
+        reg = Registry()
+        prof = Profiler(clock=lambda: 0.0)
+        reg.register_op("op")
+        for v in ("a", "b", "c"):
+            reg.register_variant("op", v, lambda: None, default=(v == "a"))
+        ctl = Controller(reg, prof, min_samples=2, trial_samples=2)
+        bucket = (1, (2,))
+        for i, v in enumerate(schedule):
+            chosen = ctl.select("op", bucket)
+            assert chosen in reg.op("op").variants
+            prof.record("op", chosen, bucket, base * (1 + (hash(v) % 3)))
+            ctl.on_sample("op", bucket, chosen)
+        assert ctl.select_static("op", bucket) in reg.op("op").variants
+
+    @given(st.floats(1e-4, 1e-2), st.floats(1.5, 10.0))
+    def test_faster_variant_eventually_wins(self, fast, ratio):
+        reg = Registry()
+        t = [0.0]
+        prof = Profiler(clock=lambda: t[0])
+        reg.register_op("op")
+        reg.register_variant("op", "slow", lambda: None, default=True)
+        reg.register_variant("op", "fast", lambda: None)
+        ctl = Controller(reg, prof, min_samples=2, trial_samples=3,
+                         hysteresis=0.05, noise_sigmas=0.0)
+        bucket = (0, (1,))
+        for _ in range(20):
+            v = ctl.select("op", bucket)
+            prof.record("op", v, bucket, fast * (ratio if v == "slow" else 1.0))
+            ctl.on_sample("op", bucket, v)
+        assert ctl.select_static("op", bucket) == "fast"
+
+
+class TestCompression:
+    @given(st.integers(1, 4096), st.integers(0, 2 ** 31 - 1))
+    def test_quantize_shape_preserved(self, n, seed):
+        x = jnp.asarray(np.random.default_rng(seed).standard_normal(n), jnp.float32)
+        q, s = compression.quantize(x)
+        back = compression.dequantize(q, s, x.shape)
+        assert back.shape == x.shape
+
+    @given(st.integers(2, 1024), st.integers(0, 2 ** 31 - 1),
+           st.floats(1e-6, 1e3))
+    def test_relative_error_bounded(self, n, seed, scale):
+        x = jnp.asarray(
+            np.random.default_rng(seed).standard_normal(n) * scale, jnp.float32)
+        q, s = compression.quantize(x)
+        back = compression.dequantize(q, s, x.shape)
+        err = float(jnp.max(jnp.abs(back - x)))
+        bound = float(jnp.max(jnp.abs(x))) / 200.0 + 1e-9
+        assert err <= bound
+
+
+class TestGradClip:
+    @given(st.integers(1, 64), st.floats(0.1, 10.0), st.integers(0, 2 ** 31 - 1))
+    def test_clipped_norm_never_exceeds(self, n, max_norm, seed):
+        g = {"w": jnp.asarray(
+            np.random.default_rng(seed).standard_normal(n) * 100, jnp.float32)}
+        clipped, _ = clip_by_global_norm(g, max_norm)
+        assert float(global_norm(clipped)) <= max_norm * (1 + 1e-4)
+
+    @given(st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+    def test_small_grads_untouched(self, n, seed):
+        g = {"w": jnp.asarray(
+            np.random.default_rng(seed).standard_normal(n) * 1e-3, jnp.float32)}
+        clipped, _ = clip_by_global_norm(g, 1e6)
+        np.testing.assert_allclose(np.asarray(clipped["w"]), np.asarray(g["w"]),
+                                   rtol=1e-6)
+
+
+class TestAttentionProperties:
+    @given(st.integers(1, 3), st.integers(1, 2), st.sampled_from([8, 16, 24]),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_chunked_equals_reference(self, B, Hkv, S, seed):
+        from repro.kernels.ref import attention_ref
+        from repro.models.layers import attention_chunked
+        rng = np.random.default_rng(seed)
+        Hq = Hkv * 2
+        q = jnp.asarray(rng.standard_normal((B, Hq, S, 8)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((B, Hkv, S, 8)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((B, Hkv, S, 8)).astype(np.float32))
+        got = attention_chunked(q, k, v, causal=True, q_chunk=8)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_causality(self, seed):
+        """Changing future tokens must not change past outputs."""
+        from repro.models.layers import attention_chunked
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((1, 2, 16, 8)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, 2, 16, 8)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((1, 2, 16, 8)).astype(np.float32))
+        out1 = attention_chunked(q, k, v, causal=True)
+        k2 = k.at[:, :, 10:].set(rng.standard_normal((1, 2, 6, 8)))
+        v2 = v.at[:, :, 10:].set(rng.standard_normal((1, 2, 6, 8)))
+        out2 = attention_chunked(q, k2, v2, causal=True)
+        np.testing.assert_allclose(out1[:, :, :10], out2[:, :, :10],
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestDataProperties:
+    @given(st.integers(0, 1000), st.integers(2, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_tokens_in_vocab(self, step, vocab):
+        from repro.data import DataConfig, SyntheticStream
+        s = SyntheticStream(DataConfig(vocab_size=vocab, seq_len=8, global_batch=2))
+        b = s.batch_at(step)
+        assert b["tokens"].min() >= 0
+        assert b["tokens"].max() < vocab

@@ -1,0 +1,182 @@
+"""Substrate tests: data, optim, compression, checkpoint, straggler, elastic."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.data import DataConfig, Prefetcher, SyntheticStream
+from repro.distributed.straggler import StepWatchdog, StragglerTimeout
+from repro.optim import adamw, compression, schedule
+
+
+class TestData:
+    def test_deterministic_and_seekable(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4)
+        s1, s2 = SyntheticStream(cfg), SyntheticStream(cfg)
+        b1, b2 = s1.batch_at(7), s2.batch_at(7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(s1.batch_at(8)["tokens"], b1["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
+        b = SyntheticStream(cfg).batch_at(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_process_sharding_disjoint(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8)
+        a = SyntheticStream(cfg, process_index=0, process_count=2).batch_at(3)
+        b = SyntheticStream(cfg, process_index=1, process_count=2).batch_at(3)
+        assert a["tokens"].shape == (4, 32)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_cursor_roundtrip(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2)
+        s = SyntheticStream(cfg)
+        next(s); next(s)
+        state = s.state_dict()
+        ref = next(s)
+        s2 = SyntheticStream(cfg)
+        s2.load_state_dict(state)
+        np.testing.assert_array_equal(next(s2)["tokens"], ref["tokens"])
+
+    def test_prefetcher_order_and_close(self):
+        cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2)
+        src = SyntheticStream(cfg)
+        pf = Prefetcher(iter([src.batch_at(i) for i in range(5)]), depth=2)
+        got = [b["tokens"] for b in pf]
+        assert len(got) == 5
+        np.testing.assert_array_equal(got[3], src.batch_at(3)["tokens"])
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw.init(cfg, params)
+        for _ in range(120):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state = adamw.update(cfg, g, state, params)
+        assert float(jnp.linalg.norm(params["w"])) < 0.1
+
+    def test_grad_clip(self):
+        g = {"w": jnp.full((4,), 100.0)}
+        clipped, gn = adamw.clip_by_global_norm(g, 1.0)
+        assert float(gn) == pytest.approx(200.0)
+        assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+    def test_master_copy_for_bf16(self):
+        cfg = adamw.AdamWConfig()
+        p32 = {"w": jnp.ones((4,), jnp.float32)}
+        pbf = {"w": jnp.ones((4,), jnp.bfloat16)}
+        assert "master" not in adamw.init(cfg, p32)
+        st = adamw.init(cfg, pbf)
+        assert st["master"]["w"].dtype == jnp.float32
+
+    def test_schedule_warmup_and_decay(self):
+        lr = lambda s: float(schedule.warmup_cosine(
+            s, peak_lr=1.0, warmup_steps=10, total_steps=100))
+        assert lr(0) == 0.0
+        assert lr(10) == pytest.approx(1.0)
+        assert lr(100) == pytest.approx(0.1, rel=1e-3)
+        assert lr(5) == pytest.approx(0.5)
+
+
+class TestCompression:
+    def test_quantize_roundtrip_error_bound(self):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(1000), jnp.float32)
+        q, s = compression.quantize(x)
+        back = compression.dequantize(q, s, x.shape)
+        # per-block error <= scale/2 = max|x|/254 per block
+        err = np.abs(np.asarray(back - x))
+        assert err.max() <= float(jnp.max(jnp.abs(x))) / 254 + 1e-7
+
+    def test_error_feedback_removes_bias(self):
+        """Constant gradient: EF must deliver the true mean over time."""
+        rng = np.random.default_rng(1)
+        g = {"w": jnp.asarray(rng.standard_normal(256).astype(np.float32) * 1e-4)}
+        res = compression.ErrorFeedback.init(g)
+        acc = jnp.zeros_like(g["w"])
+        n = 50
+        for _ in range(n):
+            comp, res = compression.ErrorFeedback.apply(g, res)
+            acc = acc + comp["w"]
+        np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g["w"]),
+                                   atol=float(jnp.max(jnp.abs(g["w"]))) / 10)
+
+    def test_compressed_psum_single_axis(self):
+        from jax.sharding import Mesh
+        import numpy as onp
+        mesh = Mesh(onp.array(jax.devices()[:1]), ("x",))
+        x = jnp.asarray(onp.random.default_rng(2).standard_normal((1, 64)), jnp.float32)
+        out = compression.compressed_psum(x, mesh, "x")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-2, atol=1e-2)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, rng):
+        tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 3, tree, extra={"note": "x"})
+            got, extra, step = ckpt.restore(d, tree)
+            assert step == 3 and extra["note"] == "x"
+            np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+            assert got["b"]["c"].dtype == jnp.bfloat16
+
+    def test_latest_and_retention(self):
+        tree = {"a": jnp.zeros((2,))}
+        with tempfile.TemporaryDirectory() as d:
+            for s in (1, 2, 3, 4, 5):
+                ckpt.save(d, s, tree, keep=2)
+            assert ckpt.latest_step(d) == 5
+            steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+            assert len(steps) == 2
+
+    def test_shape_mismatch_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 1, {"a": jnp.zeros((2,))})
+            with pytest.raises(ValueError):
+                ckpt.restore(d, {"a": jnp.zeros((3,))})
+
+    def test_missing_leaf_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 1, {"a": jnp.zeros((2,))})
+            with pytest.raises(KeyError):
+                ckpt.restore(d, {"a": jnp.zeros((2,)), "b": jnp.zeros((1,))})
+
+
+class TestStraggler:
+    def test_watchdog_trips_on_slow_step(self):
+        t = [0.0]
+        wd = StepWatchdog(multiplier=3.0, min_budget_s=0.0, clock=lambda: t[0],
+                          fence=lambda v: v)
+        def step(dt):
+            def fence(v):
+                t[0] += dt
+                return v
+            wd.fence = fence
+            return wd.guard(object())
+        for _ in range(5):
+            step(0.1)  # baseline ~0.1s
+        with pytest.raises(StragglerTimeout):
+            step(10.0)
+        assert wd.trips == 1
+
+    def test_no_trip_before_baseline(self):
+        wd = StepWatchdog(fence=lambda v: v)
+        wd.guard(object())  # first call (compile) never trips
+
+
+class TestElastic:
+    def test_best_mesh_shrinks_data_axis(self):
+        from repro.distributed.elastic import best_mesh, shrink_plan
+        devs = list(range(12))  # pretend devices
+        m = best_mesh(devs, model_parallel=4)
+        assert m.devices.shape == (3, 4)
+        m2 = best_mesh(devs[:9], model_parallel=4)  # 9 % 4 != 0 -> mp 3
+        assert m2.devices.shape == (3, 3)
+        assert "data=" in shrink_plan(12, 9, 4)

@@ -1,0 +1,158 @@
+"""End-to-end system tests: the paper's behaviour at training-loop scale.
+
+These are the integration proofs: the VPE loop switches/reverts inside a
+real jitted training run, checkpoints capture everything needed to
+survive a fault, and recovery resumes bit-compatible training.
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data import DataConfig, SyntheticStream
+from repro.models import model
+from repro.runtime.fault import SimulatedFault, run_with_recovery
+from repro.runtime.serve_loop import BatchScheduler, Request, ServeLoop
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+
+
+def make_loop(tmp, *, steps=8, family_arch="qwen3-8b", **kw):
+    cfg = ARCHS[family_arch].reduced()
+    data = SyntheticStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                      global_batch=4))
+    lc = TrainLoopConfig(total_steps=steps, checkpoint_every=2, checkpoint_dir=tmp,
+                         log_every=0, num_microbatches=kw.pop("num_microbatches", 2),
+                         watchdog=False, **kw)
+    return TrainLoop(cfg, lc, data)
+
+
+class TestTrainLoop:
+    def test_loss_decreases(self):
+        with tempfile.TemporaryDirectory() as d:
+            loop = make_loop(d, steps=10)
+            metrics = loop.run()
+            assert metrics[-1]["loss"] < metrics[0]["loss"]
+
+    def test_vpe_trials_and_decides(self):
+        """The training loop must have trialed the alternative attention
+        implementation and settled on a measured winner (the paper loop)."""
+        with tempfile.TemporaryDirectory() as d:
+            loop = make_loop(d, steps=14)
+            loop.run()
+            d_attn = loop.vpe.controller.decision("attn_impl", ("static",))
+            assert "flash_pallas" in d_attn.tried
+            events = [e for e, _, _ in d_attn.history]
+            assert "trial" in events
+            assert ("switch" in events) or ("revert" in events)
+
+    def test_fault_recovery_resumes(self):
+        with tempfile.TemporaryDirectory() as d:
+            loop = make_loop(d, steps=8)
+            fired = []
+
+            def hook(step):
+                if step == 5 and not fired:
+                    fired.append(1)
+                    raise SimulatedFault("device loss")
+
+            loop.fault_hook = hook
+            restores = run_with_recovery(loop, 8)
+            assert restores == 1
+            assert loop.step == 8
+
+    def test_restore_is_deterministic(self):
+        """Same data cursor + params after restore -> same next loss."""
+        with tempfile.TemporaryDirectory() as d:
+            loop = make_loop(d, steps=4)
+            loop.run()
+            loop.save()
+            loss_next = loop.run_step(loop.data.batch_at(loop.step))["loss"]
+            loop2 = make_loop(d, steps=4)
+            assert loop2.restore()
+            assert loop2.step == 4
+            loss_next2 = loop2.run_step(loop2.data.batch_at(loop2.step))["loss"]
+            assert loss_next == pytest.approx(loss_next2, rel=1e-5)
+
+    def test_grad_compression_trains(self):
+        with tempfile.TemporaryDirectory() as d:
+            loop = make_loop(d, steps=8, compress_grads=True)
+            metrics = loop.run()
+            assert metrics[-1]["loss"] < metrics[0]["loss"]
+
+    def test_vpe_state_survives_checkpoint(self):
+        with tempfile.TemporaryDirectory() as d:
+            loop = make_loop(d, steps=14)
+            loop.run()
+            loop.save()
+            decisions = loop.vpe.controller.decision("attn_impl", ("static",)).tried
+            loop2 = make_loop(d, steps=14)
+            assert loop2.restore()
+            assert loop2.vpe.controller.decision("attn_impl", ("static",)).tried == decisions
+
+
+class TestServe:
+    def test_generate_deterministic_greedy(self, rng):
+        cfg = ARCHS["qwen3-8b"].reduced()
+        params = model.init_params(cfg, rng)
+        serve = ServeLoop(cfg, params, max_len=48, batch=2)
+        toks = np.arange(10, dtype=np.int32)[None, :] % cfg.vocab_size
+        a = serve.generate({"tokens": toks}, 6)
+        b = serve.generate({"tokens": toks}, 6)
+        np.testing.assert_array_equal(a, b)
+
+    def test_scheduler_completes_all(self, rng):
+        cfg = ARCHS["qwen3-8b"].reduced()
+        params = model.init_params(cfg, rng)
+        serve = ServeLoop(cfg, params, max_len=48, batch=2)
+        sched = BatchScheduler(serve)
+        for i in range(5):
+            sched.submit(Request(rid=i, prompt=np.arange(4 + i, dtype=np.int32),
+                                 max_new_tokens=3))
+        done = sched.run()
+        assert sorted(r.rid for r in done) == list(range(5))
+        assert all(len(r.out) == 3 for r in done)
+
+    def test_decode_matches_forward_argmax(self, rng):
+        """Greedy continuation must equal argmax of train-mode logits."""
+        cfg = ARCHS["qwen3-8b"].reduced()
+        params = model.init_params(cfg, rng)
+        toks = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+        logits = model.forward(cfg, params, {"tokens": toks})
+        want = int(jnp.argmax(logits[0, -1]))
+        serve = ServeLoop(cfg, params, max_len=32, batch=1)
+        got = serve.generate({"tokens": np.asarray(toks)}, 1)
+        assert int(got[0, 0]) == want
+
+
+class TestPaperBenchmarks:
+    def test_all_variants_numerically_agree(self):
+        """Every accelerated variant must compute the same function."""
+        from repro.bench_algos import build_vpe, make_inputs
+        vpe, fns = build_vpe()
+        for name in ("complement", "convolution", "dotproduct", "matmul",
+                     "patternmatch", "fft"):
+            args = make_inputs(name, scale=0.02)
+            entry = vpe.registry.op(name)
+            ref_out = np.asarray(entry.variants[entry.default].fn(*args))
+            for vname, variant in entry.variants.items():
+                got = np.asarray(variant.fn(*args))
+                np.testing.assert_allclose(
+                    got, ref_out, rtol=2e-2, atol=2e-2,
+                    err_msg=f"{name}:{vname} diverges from reference")
+
+    def test_vpe_accelerates_and_reverts_fft(self):
+        from repro.bench_algos import build_vpe, make_inputs
+        from repro.core import shape_bucket
+        vpe, fns = build_vpe(with_pallas=False)
+        for name in ("matmul", "fft"):
+            args = make_inputs(name, scale=0.05)
+            for _ in range(8):
+                fns[name](*args)
+        mm_bucket = shape_bucket(*make_inputs("matmul", scale=0.05))
+        fft_bucket = shape_bucket(*make_inputs("fft", scale=0.05))
+        assert vpe.controller.selected("matmul", mm_bucket) == "fused"
+        assert vpe.controller.selected("fft", fft_bucket) == "reference"

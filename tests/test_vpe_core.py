@@ -1,0 +1,185 @@
+"""Unit tests for the VPE core: the paper's mechanism in miniature."""
+
+import numpy as np
+import pytest
+
+from repro.core import VPE, Registry, shape_bucket
+from repro.core import state as vpe_state
+
+
+def make_vpe(**ck):
+    defaults = dict(min_samples=2, trial_samples=2, hysteresis=0.05)
+    defaults.update(ck)
+    vpe = VPE(controller_kwargs=defaults)
+    clock = [0.0]
+    vpe.profiler._clock = lambda: clock[0]
+    return vpe, clock
+
+
+X = np.ones((64, 64), np.float32)
+
+
+def register_pair(vpe, clock, slow_s, fast_s, name="op"):
+    @vpe.op(name)
+    def ref(x):
+        clock[0] += slow_s
+        return x
+
+    @vpe.variant(name, variant="accel")
+    def accel(x):
+        clock[0] += fast_s
+        return x
+
+    return ref
+
+
+class TestSwitchAndRevert:
+    def test_switches_to_faster_variant(self):
+        vpe, clock = make_vpe()
+        op = register_pair(vpe, clock, 0.010, 0.002)
+        for _ in range(12):
+            op(X)
+        assert op.variant_for(X) == "accel"
+
+    def test_reverts_slower_variant(self):
+        """The paper's FFT row: blind offload measures a regression."""
+        vpe, clock = make_vpe()
+        op = register_pair(vpe, clock, 0.005, 0.009)
+        for _ in range(12):
+            op(X)
+        assert op.variant_for(X) == "reference"
+        d = vpe.controller.decision("op", shape_bucket(X))
+        events = [e for e, _, _ in d.history]
+        assert "trial" in events and "revert" in events
+
+    def test_hysteresis_blocks_marginal_win(self):
+        vpe, clock = make_vpe(hysteresis=0.2)
+        op = register_pair(vpe, clock, 0.010, 0.009)  # only 10% better
+        for _ in range(12):
+            op(X)
+        assert op.variant_for(X) == "reference"
+
+    def test_warmup_excluded_from_steady_stats(self):
+        vpe, clock = make_vpe()
+        calls = {"n": 0}
+
+        @vpe.op("warm")
+        def op(x):
+            calls["n"] += 1
+            clock[0] += 1.0 if calls["n"] == 1 else 0.001  # compile spike
+            return x
+
+        for _ in range(5):
+            op(X)
+        ss = vpe.profiler.samples("warm", "reference", shape_bucket(X))
+        assert ss.warmup.n == 1
+        assert ss.steady.mean < 0.01
+
+
+class TestShapeBuckets:
+    def test_per_bucket_decisions(self):
+        """Fig. 2b: small inputs keep the naive variant, large move."""
+        vpe, clock = make_vpe()
+
+        @vpe.op("mm")
+        def mm(x):
+            clock[0] += 1e-9 * x.size  # naive: linear in size
+            return x
+
+        @vpe.variant("mm", variant="dsp")
+        def mm_dsp(x):
+            clock[0] += 1e-4 + 1e-10 * x.size  # setup cost + fast
+            return x
+
+        small = np.ones((8, 8), np.float32)      # setup dominates
+        big = np.ones((2048, 2048), np.float32)  # accel dominates
+        for _ in range(14):
+            mm(small)
+            mm(big)
+        assert mm.variant_for(small) == "reference"
+        assert mm.variant_for(big) == "dsp"
+
+    def test_bucket_stability(self):
+        a = np.ones((128, 128), np.float32)
+        b = np.ones((130, 127), np.float32)  # same power-of-two octave
+        assert shape_bucket(a) == shape_bucket(b)
+        assert shape_bucket(a) != shape_bucket(np.ones((8, 8), np.float32))
+
+
+class TestSystemOps:
+    def test_system_ops_never_trialed(self):
+        vpe, clock = make_vpe()
+
+        @vpe.op("sys", system=True)
+        def sysop(x):
+            clock[0] += 0.5
+            return x
+
+        @vpe.variant("sys", variant="accel")
+        def sysop2(x):
+            clock[0] += 0.001
+            return x
+
+        for _ in range(10):
+            sysop(X)
+        assert sysop.variant_for(X) == "reference"
+
+
+class TestState:
+    def test_roundtrip_preserves_decisions(self):
+        vpe, clock = make_vpe()
+        op = register_pair(vpe, clock, 0.010, 0.002)
+        for _ in range(12):
+            op(X)
+        payload = vpe_state.dumps(vpe)
+        vpe2 = VPE(vpe.registry)
+        vpe_state.loads(vpe2, payload)
+        b = shape_bucket(X)
+        assert vpe2.controller.select_static("op", b) == "accel"
+        assert vpe2.profiler.mean("op", "accel", b) == pytest.approx(
+            vpe.profiler.mean("op", "accel", b))
+
+    def test_force_bumps_version(self):
+        vpe, clock = make_vpe()
+        register_pair(vpe, clock, 0.01, 0.002)
+        v0 = vpe.controller.version
+        vpe.controller.force("op", ("static",), "accel")
+        assert vpe.controller.version == v0 + 1
+
+
+class TestCostGuidedOrdering:
+    def test_cheapest_hint_trialed_first(self):
+        vpe, clock = make_vpe()
+
+        @vpe.op("multi")
+        def ref(x):
+            clock[0] += 0.01
+            return x
+
+        vpe.variant("multi", variant="bad", cost_hint=lambda: {"seconds": 9.0})(
+            lambda x: (clock.__setitem__(0, clock[0] + 0.02), x)[1])
+        vpe.variant("multi", variant="good", cost_hint=lambda: {"seconds": 0.1})(
+            lambda x: (clock.__setitem__(0, clock[0] + 0.001), x)[1])
+        for _ in range(6):
+            ref(x=X) if False else ref(X)
+        d = vpe.controller.decision("multi", shape_bucket(X))
+        # 'good' (lower predicted cost) must be the first trial
+        first_trial = [v for e, v, _ in d.history if e == "trial"][0]
+        assert first_trial == "good"
+
+
+class TestRegistry:
+    def test_duplicate_rejected(self):
+        r = Registry()
+        r.register_op("a")
+        with pytest.raises(ValueError):
+            r.register_op("a")
+        r.register_variant("a", "v", lambda: None)
+        with pytest.raises(ValueError):
+            r.register_variant("a", "v", lambda: None)
+
+    def test_user_ops_excludes_system(self):
+        r = Registry()
+        r.register_op("u")
+        r.register_op("s", system=True)
+        assert r.user_ops() == ["u"]
