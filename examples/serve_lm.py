@@ -1,6 +1,12 @@
-"""Batched serving example: prefill + decode with the slot scheduler.
+"""Continuous-batching serving example: slot-recycled decode + VPE tuning.
 
     PYTHONPATH=src python examples/serve_lm.py
+
+Submits a burst of mixed-length requests to the token-level
+continuous-batching engine; finished sequences free their decode slot
+mid-decode and queued requests are prefilled into the gap.  The decode
+hot path is VPE-tuned online (blind offload / revert over the
+decode-attention variants, keyed by slot occupancy).
 """
 
 import time
@@ -9,29 +15,31 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import VPE
 from repro.models import model
-from repro.runtime.serve_loop import BatchScheduler, Request, ServeLoop
+from repro.runtime.serve_loop import ContinuousBatchingEngine, Request
 
 
 def main():
     cfg = get_config("qwen3-8b").reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
-    serve = ServeLoop(cfg, params, max_len=96, batch=4)
-    sched = BatchScheduler(serve)
+    vpe = VPE(controller_kwargs=dict(min_samples=3, trial_samples=3))
+    engine = ContinuousBatchingEngine(cfg, params, slots=4, max_len=96, vpe=vpe)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(10):
-        sched.submit(Request(
+        engine.submit(Request(
             rid=i,
             prompt=rng.integers(0, cfg.vocab_size, 8 + (i % 5)).astype(np.int32),
-            max_new_tokens=16))
-    done = sched.run()
+            max_new_tokens=8 if i % 2 else 32))   # mixed output lengths
+    done = engine.run()
     dt = time.perf_counter() - t0
-    for r in done[:3]:
-        print(f"request {r.rid}: {r.out}")
-    print(f"\n{len(done)} requests in {dt:.2f}s; "
-          f"decode {serve.stats.decode_tok_per_s:.1f} tok/s")
+    for r in sorted(done, key=lambda r: r.rid)[:3]:
+        print(f"request {r.rid}: admitted@step {r.admit_step}, "
+              f"done@step {r.done_step}, out={list(r.out)[:8]}...")
+    print(f"\n{len(done)} requests in {dt:.2f}s; {engine.stats.summary()}")
+    print(vpe.report())
 
 
 if __name__ == "__main__":

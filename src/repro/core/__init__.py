@@ -18,7 +18,7 @@ from .controller import Controller, Decision
 from .dispatch import DEFAULT, VPE, VPEFunction
 from .profiler import Profiler, SampleSet, Welford
 from .registry import GLOBAL, OpEntry, Registry, Variant, reset_global
-from .shape_class import bucket_label, shape_bucket
+from .shape_class import bucket_label, occupancy_bucket, pad_to_bucket, shape_bucket
 
 __all__ = [
     "VPE",
@@ -36,4 +36,6 @@ __all__ = [
     "reset_global",
     "shape_bucket",
     "bucket_label",
+    "occupancy_bucket",
+    "pad_to_bucket",
 ]

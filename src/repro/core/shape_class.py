@@ -55,9 +55,39 @@ def shape_bucket(*args: Any, granularity: float = 1.0) -> Tuple:
 def bucket_label(bucket: Tuple) -> str:
     if bucket == ("scalar",):
         return "scalar"
+    if bucket and bucket[0] == "occ":
+        _, level, total = bucket
+        return f"occ{level}/{total}slots"
     b, ranks = bucket
     lo, hi = 2 ** b, 2 ** (b + 1)
     return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}"
+
+
+def occupancy_bucket(active: int, total: int, *, levels: int = 4) -> Tuple:
+    """Dispatch key for the serve engine's decode step.
+
+    Decode cost and the best attention layout depend on how many slots
+    are live (a mostly-empty pool wastes the batched einsum; a full pool
+    amortizes it), so dispatch decisions are kept per occupancy *level*
+    rather than per exact count — the same decision-tree-on-input-size
+    idea as :func:`shape_bucket`, with slot occupancy as the size.
+    """
+    if total <= 0 or active <= 0:
+        return ("occ", 0, total)
+    level = min(levels, max(1, math.ceil(active / total * levels)))
+    return ("occ", level, total)
+
+
+def pad_to_bucket(n: int, *, minimum: int = 16) -> int:
+    """Next power of two >= n (floored at ``minimum``).
+
+    Prompt lengths are padded to these buckets so the slot-prefill jit
+    compiles once per octave instead of once per length — the serving
+    analogue of the dry-run's shape classes.
+    """
+    if n <= minimum:
+        return minimum
+    return 1 << math.ceil(math.log2(n))
 
 
 def describe_buckets(shapes) -> str:  # pragma: no cover - debug aid

@@ -1,0 +1,13 @@
+"""Version-tolerant Pallas TPU API lookups.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(and kept only one spelling per release).  Resolve whichever exists at
+import time so the kernels run against both API generations.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _conv_kernel(x_ref, w_ref, o_ref, *, bh: int, kh: int, kw: int, w_out: int):
     i = pl.program_id(0)
@@ -62,7 +64,7 @@ def conv2d_pallas(
         ],
         out_specs=pl.BlockSpec((bh, w_out), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((h_out, w_out), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -1,7 +1,7 @@
-"""Serving launcher: batched generation with the slot scheduler.
+"""Serving launcher: batched generation, wave or continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-        --requests 8 --new-tokens 16
+        --requests 8 --new-tokens 16 [--continuous]
 """
 
 from __future__ import annotations
@@ -12,8 +12,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import VPE
 from repro.models import model as model_lib
-from repro.runtime.serve_loop import BatchScheduler, Request, ServeLoop
+from repro.runtime.serve_loop import (
+    ContinuousBatchingEngine, Request, ServeLoop, WaveScheduler)
 
 
 def main() -> None:
@@ -26,20 +28,31 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="token-level continuous batching (VPE-tuned decode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
-    serve = ServeLoop(cfg, params, max_len=args.max_len, batch=args.batch)
-    sched = BatchScheduler(serve)
     rng = np.random.default_rng(args.seed)
-    for i in range(args.requests):
-        sched.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-            max_new_tokens=args.new_tokens))
+    reqs = [Request(
+        rid=i,
+        prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+        max_new_tokens=args.new_tokens) for i in range(args.requests)]
+    if args.continuous:
+        engine = ContinuousBatchingEngine(
+            cfg, params, slots=args.batch, max_len=args.max_len, vpe=VPE())
+        for r in reqs:
+            engine.submit(r)
+        done = engine.run()
+        print(f"completed {len(done)} requests; {engine.stats.summary()}")
+        return
+    serve = ServeLoop(cfg, params, max_len=args.max_len, batch=args.batch)
+    sched = WaveScheduler(serve)
+    for r in reqs:
+        sched.submit(r)
     done = sched.run()
     print(f"completed {len(done)} requests; "
           f"decode throughput {serve.stats.decode_tok_per_s:.1f} tok/s "

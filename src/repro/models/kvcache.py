@@ -7,6 +7,18 @@ Sliding-window archs keep a full-size cache here for simplicity of
 indexing, but the *windowed* variant (``window_cache=True`` in the
 sharding config) stores only ``window`` keys as a ring buffer — that is
 what makes h2o-danube's 500k-context decode O(window) in memory.
+
+Two length modes coexist:
+
+* **scalar length** ``()`` — all batch rows advance in lockstep (the
+  simple ``ServeLoop.generate`` path, ring buffers supported);
+* **per-slot lengths** ``(B,)`` — each batch row is an independent
+  decode *slot* with its own sequence length.  This is what the
+  continuous-batching engine uses: a finished slot is re-primed
+  mid-decode via :func:`insert_slot_kv` (the prompt's K/V overwrites
+  positions ``[0, S)`` and ``length[slot]`` is reset, so the causal
+  mask ``col <= length`` can never reach a previous occupant's stale
+  entries).  Ring buffers are not supported in per-slot mode.
 """
 
 from __future__ import annotations
@@ -21,26 +33,33 @@ Cache = Dict[str, jax.Array]
 
 def init_kv_cache(
     num_layers: int, batch: int, num_kv_heads: int, max_len: int, head_dim: int,
-    dtype=jnp.bfloat16,
+    dtype=jnp.bfloat16, *, per_slot: bool = False,
 ) -> Cache:
     shape = (num_layers, batch, num_kv_heads, max_len, head_dim)
+    lshape = (batch,) if per_slot else ()
     return {
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
-        "length": jnp.zeros((), jnp.int32),
+        "length": jnp.zeros(lshape, jnp.int32),
     }
 
 
 def kv_cache_specs(
     num_layers: int, batch: int, num_kv_heads: int, max_len: int, head_dim: int,
-    dtype=jnp.bfloat16,
+    dtype=jnp.bfloat16, *, per_slot: bool = False,
 ) -> Dict[str, jax.ShapeDtypeStruct]:
     shape = (num_layers, batch, num_kv_heads, max_len, head_dim)
+    lshape = (batch,) if per_slot else ()
     return {
         "k": jax.ShapeDtypeStruct(shape, dtype),
         "v": jax.ShapeDtypeStruct(shape, dtype),
-        "length": jax.ShapeDtypeStruct((), jnp.int32),
+        "length": jax.ShapeDtypeStruct(lshape, jnp.int32),
     }
+
+
+def is_per_slot(length: jax.Array) -> bool:
+    """True when ``length`` is the per-slot ``(B,)`` vector form."""
+    return getattr(length, "ndim", 0) == 1
 
 
 def update_layer_cache(
@@ -49,9 +68,24 @@ def update_layer_cache(
 ) -> Tuple[jax.Array, jax.Array]:
     """Insert (B, Hkv, S_new, D) keys at position ``length`` (no L axis).
 
+    ``length`` may be a scalar (all rows write at the same position) or a
+    per-slot ``(B,)`` vector (each row writes at its own position — the
+    continuous-batching decode step).
+
     ring_window: if set, the cache holds only that many positions and
-    writes wrap (ring buffer) — O(window) memory for SWA decode.
+    writes wrap (ring buffer) — O(window) memory for SWA decode.  Only
+    valid with a scalar length.
     """
+    if is_per_slot(length):
+        assert ring_window is None, "ring caches are lockstep-only"
+
+        def upd(c, n, pos):
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), pos, axis=1)
+
+        k_cache = jax.vmap(upd)(k_cache, k_new, length)
+        v_cache = jax.vmap(upd)(v_cache, v_new, length)
+        return k_cache, v_cache
     if ring_window is not None:
         pos = length % ring_window
     else:
@@ -59,6 +93,28 @@ def update_layer_cache(
     k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=2)
     v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=2)
     return k_cache, v_cache
+
+
+def insert_slot_kv(
+    cache: Cache, k_new: jax.Array, v_new: jax.Array, slot: jax.Array,
+    true_len: jax.Array,
+) -> Cache:
+    """Write a prefilled prompt's K/V into decode slot ``slot``.
+
+    k_new/v_new: (L, 1, Hkv, S, D) stacked prompt keys/values (S may be
+    bucket-padded; entries past ``true_len`` are garbage but unreachable
+    through the causal mask).  Resets ``length[slot] = true_len`` — the
+    slot-recycling contract: any stale positions the previous occupant
+    wrote at ``>= true_len`` are masked until overwritten by new decode
+    steps.
+    """
+    zero = jnp.int32(0)
+    slot = jnp.asarray(slot, jnp.int32)
+    start = (zero, slot, zero, zero, zero)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), start)
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), start)
+    length = cache["length"].at[slot].set(jnp.asarray(true_len, jnp.int32))
+    return {"k": k, "v": v, "length": length}
 
 
 def decode_attention(
@@ -69,9 +125,11 @@ def decode_attention(
     """Single-position attention against a cache.
 
     q: (B, Hq, 1, D); k/v_cache: (B, Hkv, T, D); positions >= length are
-    masked.  For ring caches the mask keeps every slot that has been
-    written within the window (slot ages need no unrolling because the
-    window fully covers the ring).
+    masked.  ``length`` is a scalar (lockstep decode) or a per-slot
+    ``(B,)`` vector (continuous batching — each row masks against its own
+    sequence length).  For ring caches the mask keeps every slot that has
+    been written within the window (slot ages need no unrolling because
+    the window fully covers the ring); ring mode is lockstep-only.
     """
     B, Hq, S, D = q.shape
     _, Hkv, T, _ = k_cache.shape
@@ -89,16 +147,66 @@ def decode_attention(
     # the scores were both measured WORSE than leaving GSPMD to place
     # this einsum (1392MB vs 1116MB gathered per body) — refuted, so no
     # constraint here; the GQA reshape + dtype fix above is the keeper.
-    col = jnp.arange(T)[None, None, None, None, :]
-    if ring_window is not None:
-        written = jnp.minimum(length + 1, T)  # slots containing live data
-        mask = col < written
-    else:
-        mask = col <= length  # include the token being decoded
-        if window is not None:
-            mask &= col > length - window
-    s = jnp.where(mask, s, float("-inf"))
+    s = jnp.where(_decode_mask(length, T, window=window, ring_window=ring_window),
+                  s, float("-inf"))
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgst,bhtd->bhgsd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def _decode_mask(
+    length: jax.Array, T: int, *, window: Optional[int],
+    ring_window: Optional[int],
+) -> jax.Array:
+    """(1-or-B, 1, 1, 1, T) validity mask for single-position attention."""
+    if is_per_slot(length):
+        assert ring_window is None, "ring caches are lockstep-only"
+        length = length[:, None, None, None, None]
+    col = jnp.arange(T)[None, None, None, None, :]
+    if ring_window is not None:
+        written = jnp.minimum(length + 1, T)  # slots containing live data
+        return col < written
+    mask = col <= length  # include the token being decoded
+    if window is not None:
+        mask &= col > length - window
+    return mask
+
+
+def decode_attention_flat(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, length: jax.Array,
+    *, window: Optional[int] = None, scale: Optional[float] = None,
+    ring_window: Optional[int] = None,
+) -> jax.Array:
+    """GQA-materializing decode attention — the pre-hillclimb layout.
+
+    Repeats K/V up to Hq heads before the score einsum.  Numerically it
+    computes the same function as :func:`decode_attention`; kept as the
+    alternative implementation on the serve engine's VPE axis so the
+    controller has a real blind-offload candidate to trial (on some
+    single-host shapes the flat layout vectorizes better; under GSPMD it
+    is the variant the hillclimb rejected — either way the measurement,
+    not the code, decides).
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k_cache.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    k = jnp.repeat(k_cache, group, axis=1)
+    v = jnp.repeat(v_cache, group, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = _decode_mask(length, T, window=window, ring_window=ring_window)
+    s = jnp.where(mask.reshape(mask.shape[0], 1, 1, T), s, float("-inf"))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# Serve-engine VPE axis: decode-attention implementations (first = default).
+DECODE_ATTN_VARIANTS = {
+    "grouped": decode_attention,
+    "flat": decode_attention_flat,
+}

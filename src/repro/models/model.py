@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 
-from . import encdec, hybrid, ssm_stack, transformer
+from . import encdec, hybrid, kvcache, ssm_stack, transformer
 
 _FAMILIES = {
     "dense": transformer,
@@ -96,6 +96,46 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
 def decode_step(cfg: ModelConfig, params: Any, cache: Any, tokens: jax.Array
                 ) -> Tuple[Any, jax.Array]:
     return family_module(cfg).decode_step(cfg, params, cache, tokens)
+
+
+# -- continuous-batching slot serving (transformer families only) -----------------
+
+_SLOT_FAMILIES = ("dense", "moe", "vlm")
+
+
+def supports_slot_serving(cfg: ModelConfig) -> bool:
+    """Slot-recycled continuous batching needs a positional KV cache;
+    recurrent/hybrid/encdec families keep lockstep ``ServeLoop``."""
+    return cfg.family in _SLOT_FAMILIES
+
+
+def _slot_module(cfg: ModelConfig):
+    if not supports_slot_serving(cfg):
+        raise ValueError(
+            f"continuous batching unsupported for family {cfg.family!r} "
+            f"(supported: {_SLOT_FAMILIES})")
+    return family_module(cfg)
+
+
+def init_slot_cache(cfg: ModelConfig, slots: int, max_len: int) -> Any:
+    return _slot_module(cfg).init_slot_cache(cfg, slots, max_len)
+
+
+def prefill_slot_kv(cfg: ModelConfig, params: Any, tokens: jax.Array,
+                    true_len: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return _slot_module(cfg).prefill_slot_kv(cfg, params, tokens, true_len)
+
+
+def insert_slot_kv(cache: Any, k_new: jax.Array, v_new: jax.Array,
+                   slot: jax.Array, true_len: jax.Array) -> Any:
+    return kvcache.insert_slot_kv(cache, k_new, v_new, slot, true_len)
+
+
+def decode_step_slots(cfg: ModelConfig, params: Any, cache: Any,
+                      tokens: jax.Array, decode_impl: str = "grouped"
+                      ) -> Tuple[Any, jax.Array]:
+    return _slot_module(cfg).decode_step(cfg, params, cache, tokens,
+                                         decode_impl=decode_impl)
 
 
 def prefill(cfg: ModelConfig, params: Any, batch: Dict[str, jax.Array], cache: Any

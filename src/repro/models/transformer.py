@@ -167,6 +167,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
         cfg.num_layers, batch, cfg.num_kv_heads, _cache_len(cfg, max_len), cfg.head_dim)
 
 
+def init_slot_cache(cfg: ModelConfig, slots: int, max_len: int):
+    """Per-slot cache for continuous batching: ``length`` is a (slots,)
+    vector and each slot holds an independent sequence.  Always full
+    ``max_len`` (no SWA ring — slot insertion needs absolute positions)."""
+    return kvcache.init_kv_cache(
+        cfg.num_layers, slots, cfg.num_kv_heads, max_len, cfg.head_dim,
+        per_slot=True)
+
+
+def _layer_kv_fwd(cfg: ModelConfig, s, impl: str, lp: Params, x: jax.Array,
+                  positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One prompt-pass layer; returns (x_out, k, v) — the single copy of
+    the layer wiring shared by :func:`prefill` and :func:`prefill_slot_kv`
+    (they differ only in where the K/V go)."""
+    h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+    q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+    o = layers.ATTENTION_VARIANTS[impl](q, k, v, causal=True, window=s.window)
+    x = x + layers._merge_heads(o) @ lp["attn_wo"]
+    h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        x = x + moe.moe_block(_sub(lp, "moe_"), moe_spec(cfg), h, groups=cfg.moe_groups)
+    else:
+        x = x + layers.swiglu(_sub(lp, "ffn_"), h)
+    return x, k, v
+
+
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: Dict,
             attn_impl: Optional[str] = None) -> Tuple[Dict, jax.Array]:
     """Run the prompt, fill the cache, return (cache, last-position logits)."""
@@ -178,8 +204,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: Dict,
 
     def body(x, scanned):
         lp, kc, vc = scanned
-        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
-        q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+        x, k, v = _layer_kv_fwd(cfg, s, impl, lp, x, positions)
         T_eff = kc.shape[2]
         if T_eff < S:  # ring cache: keep the trailing window (S % W == 0 holds
             # for the assigned shapes; rope is absolute so values stay valid)
@@ -187,13 +212,6 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: Dict,
                 kc, vc, k[:, :, -T_eff:], v[:, :, -T_eff:], jnp.int32(0))
         else:
             kc, vc = kvcache.update_layer_cache(kc, vc, k, v, jnp.int32(0))
-        o = layers.ATTENTION_VARIANTS[impl](q, k, v, causal=True, window=s.window)
-        x = x + layers._merge_heads(o) @ lp["attn_wo"]
-        h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
-        if cfg.family == "moe":
-            x = x + moe.moe_block(_sub(lp, "moe_"), moe_spec(cfg), h, groups=cfg.moe_groups)
-        else:
-            x = x + layers.swiglu(_sub(lp, "ffn_"), h)
         return x, (kc, vc)
 
     x, (k_new, v_new) = layers.scan_layers(
@@ -205,23 +223,67 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache: Dict,
     return new_cache, logits
 
 
-def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array
-                ) -> Tuple[Dict, jax.Array]:
-    """One decode step.  tokens: (B, 1) -> (new_cache, logits (B, 1, V))."""
+def prefill_slot_kv(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                    true_len: jax.Array, attn_impl: Optional[str] = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill ONE prompt for slot insertion (continuous batching).
+
+    tokens: (1, S_pad) right-padded to a shape bucket; true_len: number
+    of real tokens.  Returns (k, v, logits): stacked rope'd keys/values
+    (L, 1, Hkv, S_pad, D) ready for :func:`kvcache.insert_slot_kv`, and
+    the (1, V) logits at position ``true_len - 1`` (causality keeps the
+    padding out of every real position's receptive field, so the result
+    is identical to an unpadded prefill).
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(S)
+    s = attn_spec(cfg)
+    impl = attn_impl or cfg.attn_impl
+
+    def body(x, lp):
+        x, k, v = _layer_kv_fwd(cfg, s, impl, lp, x, positions)
+        return x, (k, v)
+
+    x, (k_all, v_all) = layers.scan_layers(
+        body, x, params["layers"], unroll=cfg.unroll_layers)
+    x_last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    x_last = layers.rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x_last @ head).astype(jnp.float32)[:, 0, :]
+    return k_all, v_all, logits
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array,
+                decode_impl: Optional[str] = None) -> Tuple[Dict, jax.Array]:
+    """One decode step.  tokens: (B, 1) -> (new_cache, logits (B, 1, V)).
+
+    Works in both cache modes: scalar ``length`` (lockstep batch) and
+    per-slot ``(B,)`` lengths (continuous batching — every row attends
+    and writes at its own position; freed slots decode garbage that the
+    host discards).  ``decode_impl`` picks the decode-attention variant
+    (a VPE implementation axis; ``None`` = the default "grouped").
+    """
     B, _ = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
     length = cache["length"]
-    positions = jnp.full((B, 1), length, dtype=jnp.int32)
+    per_slot = kvcache.is_per_slot(length)
+    if per_slot:
+        positions = length[:, None]
+    else:
+        positions = jnp.full((B, 1), length, dtype=jnp.int32)
     s = attn_spec(cfg)
+    attn_fn = kvcache.DECODE_ATTN_VARIANTS[decode_impl or "grouped"]
 
     def body(x, scanned):
         lp, kc, vc = scanned
-        ring = cfg.window is not None and kc.shape[2] <= cfg.window
+        ring = (not per_slot and cfg.window is not None
+                and kc.shape[2] <= cfg.window)
         rw = kc.shape[2] if ring else None
         h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
         q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
         kc, vc = kvcache.update_layer_cache(kc, vc, k, v, length, ring_window=rw)
-        o = kvcache.decode_attention(q, kc, vc, length, window=cfg.window, ring_window=rw)
+        o = attn_fn(q, kc, vc, length, window=cfg.window, ring_window=rw)
         x = x + layers._merge_heads(o) @ lp["attn_wo"]
         h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
         if cfg.family == "moe":

@@ -1,24 +1,48 @@
-"""Serving runtime: prefill + batched decode with slot-based batching.
+"""Serving runtime: prefill + batched decode, wave and continuous batching.
 
 ``ServeLoop.generate`` is the simple batch API (one prefill, N decode
-steps, jitted).  :class:`BatchScheduler` adds continuous-batching-lite:
-fixed decode slots; finished sequences free their slot for the next
-queued request (real pod serving would also reshard the cache — here
-slots are host-assigned, the cache is slot-indexed on device).
+steps, jitted, all rows in lockstep).
+
+:class:`WaveScheduler` is the baseline batcher: requests are grouped
+into fixed-size waves and the *whole wave* must finish before the next
+queued request starts — queued requests wait behind the slowest member
+of the running wave, and every slot decodes until the wave's longest
+``max_new_tokens``.  (This class used to be called ``BatchScheduler``
+and its docstring overstated it as continuous batching; the alias is
+kept for compatibility.)
+
+:class:`ContinuousBatchingEngine` is token-level continuous batching: a
+fixed pool of decode slots, each sequence tracks its own length and EOS
+state in a per-slot KV cache, a finished sequence frees its slot
+*mid-decode*, and queued requests are admitted by prefilling into the
+freed slot while the other slots keep decoding.  The decode step is the
+serving hot path and is wired through the VPE static-dispatch path:
+decode-attention implementations are an ``IMPL_AXES``-style axis keyed
+by slot-occupancy buckets, the controller's blind-offload/revert loop
+trials them online, and a selection change (``controller.version``)
+re-jits the step — the paper's function-pointer swap at re-trace
+boundaries.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import VPE, occupancy_bucket, pad_to_bucket
+from repro.models import kvcache
 from repro.models import model as model_lib
+
+# serve-engine implementation axis (IMPL_AXES analogue for decode)
+SERVE_AXES: Dict[str, List[str]] = {
+    "serve_decode_impl": list(kvcache.DECODE_ATTN_VARIANTS),
+}
 
 
 @dataclasses.dataclass
@@ -26,10 +50,39 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_out: int = 0
+    prefill_tokens: int = 0          # tokens produced by prefill, not decode
+    decode_steps: int = 0
+    rejits: int = 0                  # decode-step re-traces (VPE swaps)
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    queue_wait_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def decode_tok_per_s(self) -> float:
-        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+        if not self.decode_s:
+            return 0.0
+        return (self.tokens_out - self.prefill_tokens) / self.decode_s
+
+    @property
+    def total_tok_per_s(self) -> float:
+        """Aggregate throughput: useful tokens over prefill+decode wall."""
+        wall = self.prefill_s + self.decode_s
+        return self.tokens_out / wall if wall else 0.0
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return sum(self.ttft_s) / len(self.ttft_s) if self.ttft_s else 0.0
+
+    @property
+    def mean_queue_wait_s(self) -> float:
+        return (sum(self.queue_wait_s) / len(self.queue_wait_s)
+                if self.queue_wait_s else 0.0)
+
+    def summary(self) -> str:
+        return (f"{self.tokens_out} tok, {self.total_tok_per_s:.1f} tok/s agg "
+                f"({self.decode_tok_per_s:.1f} decode), "
+                f"ttft {self.mean_ttft_s * 1e3:.1f}ms, "
+                f"queue {self.mean_queue_wait_s * 1e3:.1f}ms, "
+                f"{self.rejits} rejits")
 
 
 class ServeLoop:
@@ -72,12 +125,25 @@ class Request:
     rid: int
     prompt: np.ndarray           # (S,)
     max_new_tokens: int
+    eos_id: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # filled by the engine: submit wall-clock (queue-wait/TTFT baseline)
+    # and the decode-step indices bounding the request's slot residency
+    submit_t: float = 0.0
+    admit_step: int = -1
+    done_step: int = -1
 
 
-class BatchScheduler:
-    """Slot-based continuous batching over a fixed decode batch."""
+class WaveScheduler:
+    """Wave batching over a fixed decode batch (the baseline).
+
+    A wave of ``serve.batch`` requests runs to completion — left-padded
+    to the longest prompt and decoded for the wave's longest
+    ``max_new_tokens`` — before the next wave starts.  No mid-decode
+    admission: this is what :class:`ContinuousBatchingEngine` is
+    benchmarked against.
+    """
 
     def __init__(self, serve: ServeLoop) -> None:
         self.serve = serve
@@ -85,6 +151,7 @@ class BatchScheduler:
         self.completed: List[Request] = []
 
     def submit(self, req: Request) -> None:
+        req.submit_t = time.perf_counter()
         self.queue.append(req)
 
     def run(self) -> List[Request]:
@@ -101,4 +168,197 @@ class BatchScheduler:
                 r.out = list(new[i, : r.max_new_tokens])
                 r.done = True
                 self.completed.append(r)
+        return self.completed
+
+
+# kept for compatibility with callers of the old (misleading) name
+BatchScheduler = WaveScheduler
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    tok: int = 0                 # last generated token (next decode input)
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousBatchingEngine:
+    """Token-level continuous batching over a fixed pool of decode slots.
+
+    Engine iteration (:meth:`step`):
+
+    1. **admit** — while a slot is free and the queue is non-empty, pop a
+       request, pad its prompt to a power-of-two bucket, prefill it
+       (batch of one) and insert the resulting K/V into the freed slot
+       (``insert_slot_kv`` resets that slot's cache length, so the new
+       occupant can never see the previous one's stale entries);
+    2. **decode** — one jitted per-slot decode step advances *all* live
+       slots by one token (free slots decode garbage that is discarded);
+    3. **retire** — sequences hitting EOS or ``max_new_tokens`` are
+       completed and free their slot immediately, so the *next* step's
+       admission phase can refill it mid-decode of the others.
+
+    When a ``vpe`` is supplied, each decode step is timed and fed to the
+    controller under the current occupancy bucket; variant selection
+    (including in-flight blind-offload trials) picks the decode-attention
+    implementation, and a selection change re-jits the step.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 256, vpe: Optional[VPE] = None,
+                 occupancy_levels: int = 4, min_prompt_pad: int = 16) -> None:
+        if not model_lib.supports_slot_serving(cfg):
+            raise ValueError(f"family {cfg.family!r} has no slot-serving path")
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = slots
+        self.max_len = max_len
+        self.vpe = vpe
+        self.occupancy_levels = occupancy_levels
+        self.min_prompt_pad = min_prompt_pad
+        self.stats = ServeStats()
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self.slots = [_Slot() for _ in range(slots)]
+        self.cache = model_lib.init_slot_cache(cfg, slots, max_len)
+        self._prefill = jax.jit(
+            lambda p, t, n: model_lib.prefill_slot_kv(cfg, p, t, n))
+        self._insert = jax.jit(
+            lambda c, k, v, s, n: model_lib.insert_slot_kv(c, k, v, s, n))
+        self._decode_fns: Dict[str, Callable] = {}
+        self._axis = "serve_decode_impl"
+        self._default_variant = SERVE_AXES[self._axis][0]
+        self._last_variant: Optional[str] = None
+        if vpe is not None and not vpe.registry.has_op(self._axis):
+            vpe.registry.register_op(self._axis)
+            for i, name in enumerate(SERVE_AXES[self._axis]):
+                vpe.registry.register_variant(
+                    self._axis, name, fn=(lambda name=name: name), default=(i == 0))
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new_tokens={need} exceeds "
+                f"slot capacity max_len={self.max_len}")
+        req.submit_t = time.perf_counter()
+        self.queue.append(req)
+
+    @property
+    def num_active(self) -> int:
+        return sum(1 for s in self.slots if not s.free)
+
+    # -- engine internals --------------------------------------------------
+    def _admit(self) -> None:
+        while self.queue:
+            # re-scan each time: a request finishing at prefill (e.g.
+            # max_new_tokens == 1) frees its slot for the next in queue
+            i = next((j for j, s in enumerate(self.slots) if s.free), None)
+            if i is None:
+                return
+            slot = self.slots[i]
+            req = self.queue.pop(0)
+            now = time.perf_counter()
+            req.admit_step = self.stats.decode_steps
+            self.stats.queue_wait_s.append(now - req.submit_t)
+            prompt = np.asarray(req.prompt, np.int32)
+            S = len(prompt)
+            pad = min(pad_to_bucket(S, minimum=self.min_prompt_pad), self.max_len)
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :S] = prompt
+            t0 = time.perf_counter()
+            k, v, logits = self._prefill(self.params, jnp.asarray(toks), jnp.int32(S))
+            self.cache = self._insert(self.cache, k, v, jnp.int32(i), jnp.int32(S))
+            first = int(np.asarray(jnp.argmax(logits[0])))
+            # fence the insert too: otherwise its device time leaks into
+            # the NEXT decode step's VPE sample and skews the controller
+            jax.block_until_ready(self.cache)
+            now = time.perf_counter()
+            self.stats.prefill_s += now - t0
+            self.stats.ttft_s.append(now - req.submit_t)
+            req.out.append(first)
+            self.stats.tokens_out += 1
+            self.stats.prefill_tokens += 1
+            slot.req = req
+            slot.tok = first
+            self._retire_if_done(i)
+
+    def _retire_if_done(self, i: int) -> None:
+        slot = self.slots[i]
+        req = slot.req
+        if req is None:
+            return
+        hit_eos = req.eos_id is not None and req.out and req.out[-1] == req.eos_id
+        if len(req.out) >= req.max_new_tokens or hit_eos:
+            req.done = True
+            req.done_step = self.stats.decode_steps
+            self.completed.append(req)
+            slot.req = None   # freed mid-decode; refilled next admission
+
+    def _decode_fn(self, bucket) -> Callable:
+        if self.vpe is not None:
+            # per-call selection (returns in-flight trials too) — the
+            # eager analogue of the paper's patched function pointer
+            vname = self.vpe.controller.select(self._axis, bucket)
+        else:
+            vname = self._default_variant
+        self._last_variant = vname
+        fn = self._decode_fns.get(vname)
+        if fn is None:
+            if self._decode_fns:
+                # an actual re-trace: a not-yet-compiled variant is baked
+                # into the step (flips between already-compiled variants
+                # are pointer swaps served from the jit cache, not rejits)
+                self.stats.rejits += 1
+            def _step(p, c, t, v=vname):
+                c, logits = model_lib.decode_step_slots(
+                    self.cfg, p, c, t, decode_impl=v)
+                # greedy argmax on device: only (slots,) ints cross to host
+                return c, jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            fn = jax.jit(_step)
+            self._decode_fns[vname] = fn
+        return fn
+
+    def step(self) -> bool:
+        """One engine iteration; returns False when fully idle."""
+        self._admit()
+        if self.num_active == 0:
+            return False
+        bucket = occupancy_bucket(self.num_active, self.num_slots,
+                                  levels=self.occupancy_levels)
+        fn = self._decode_fn(bucket)
+        tokens = np.array([[s.tok] for s in self.slots], np.int32)
+        t0 = time.perf_counter()
+        cache, next_tok = fn(self.params, self.cache, jnp.asarray(tokens))
+        toks = np.asarray(next_tok)  # fences the step
+        dt = time.perf_counter() - t0
+        self.cache = cache
+        self.stats.decode_s += dt
+        self.stats.decode_steps += 1
+        if self.vpe is not None:
+            self.vpe.profiler.record(self._axis, self._last_variant, bucket, dt)
+            self.vpe.controller.on_sample(self._axis, bucket, self._last_variant)
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue          # free slot decoded garbage; discard
+            t = int(toks[i])
+            slot.tok = t
+            slot.req.out.append(t)
+            self.stats.tokens_out += 1
+            self._retire_if_done(i)
+        return True
+
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Drain queue + slots; returns completed requests."""
+        steps = 0
+        while self.queue or self.num_active > 0:
+            if not self.step():
+                break
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
         return self.completed

@@ -1,4 +1,8 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+The whole module degrades to a skip when hypothesis is not installed
+(it is an optional ``test`` extra, not a runtime dependency).
+"""
 
 import math
 
@@ -6,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Welford, shape_bucket

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import VPE, Registry, shape_bucket
+from repro.core import VPE, Controller, Registry, shape_bucket
 from repro.core import state as vpe_state
 
 
@@ -166,6 +166,70 @@ class TestCostGuidedOrdering:
         # 'good' (lower predicted cost) must be the first trial
         first_trial = [v for e, v, _ in d.history if e == "trial"][0]
         assert first_trial == "good"
+
+
+class TestControllerEdgeCases:
+    def test_slow_trial_reverts_without_version_bump(self):
+        """A regressing blind offload restores the incumbent, logs the
+        revert, and does NOT move ``version`` (no re-jit for a no-op)."""
+        vpe, clock = make_vpe()
+        op = register_pair(vpe, clock, 0.004, 0.012)
+        v0 = vpe.controller.version
+        for _ in range(12):
+            op(X)
+        d = vpe.controller.decision("op", shape_bucket(X))
+        assert d.selected == "reference"
+        reverts = [(e, v) for e, v, _ in d.history if e == "revert"]
+        assert ("revert", "accel") in reverts
+        assert vpe.controller.version == v0
+
+    def test_noise_gate_blocks_small_win(self):
+        """A win inside ``noise_sigmas`` joint standard errors must not
+        switch even with zero hysteresis."""
+        vpe, clock = make_vpe(hysteresis=0.0, noise_sigmas=5.0,
+                              min_samples=4, trial_samples=4)
+        ref_times = iter([0.008, 0.014] * 50)  # noisy incumbent, mean 11ms
+
+        @vpe.op("noisy")
+        def ref(x):
+            clock[0] += next(ref_times)
+            return x
+
+        @vpe.variant("noisy", variant="accel")
+        def accel(x):
+            clock[0] += 0.0105  # mean win 0.5ms << 5 sigma of the noise
+            return x
+
+        for _ in range(20):
+            ref(X)
+        d = vpe.controller.decision("noisy", shape_bucket(X))
+        assert d.selected == "reference"
+        events = [e for e, _, _ in d.history]
+        assert "trial" in events and "switch" not in events
+
+    def test_controller_dict_roundtrip_nontrivial_buckets(self):
+        """as_dict/load_dict must round-trip decisions keyed by real
+        shape buckets (nested tuples), including history and version."""
+        vpe, clock = make_vpe()
+        op = register_pair(vpe, clock, 0.010, 0.002)
+        small = np.ones((8, 8), np.float32)
+        for _ in range(12):
+            op(X)
+            op(small)
+        ctrl = vpe.controller
+        payload = ctrl.as_dict()
+        ctrl2 = Controller(vpe.registry, vpe.profiler)
+        ctrl2.load_dict(payload)
+        assert ctrl2.version == ctrl.version
+        for key, d in ctrl._decisions.items():
+            d2 = ctrl2._decisions[key]
+            assert d2.selected == d.selected
+            assert d2.tried == d.tried
+            assert d2.history == d.history
+        # both octaves present as distinct keys
+        buckets = {b for _, b in ctrl2._decisions}
+        assert shape_bucket(X) in buckets and shape_bucket(small) in buckets
+        assert shape_bucket(X) != shape_bucket(small)
 
 
 class TestRegistry:
