@@ -1,14 +1,24 @@
-# Wave vs continuous batching on a mixed workload. Prints name,tok_per_s CSV.
-"""Serving benchmark: wave batching vs token-level continuous batching.
+# Wave vs continuous batching + prefix-cache TTFT. CSV + one JSON line.
+"""Serving benchmark: wave vs continuous batching, and prefix-cache TTFT.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
 
-Workload: mixed prompt lengths (4..24) and strongly mixed output
-lengths (short interactive turns interleaved with long generations).
-Wave batching decodes every slot until the wave's longest request and
-holds the queue until the wave finishes; the continuous engine retires
-each sequence at its own length and refills the freed slot mid-decode.
-Aggregate tokens/s = useful generated tokens / (prefill + decode) wall.
+Part 1 — wave vs continuous: mixed prompt lengths (4..24) and strongly
+mixed output lengths (short interactive turns interleaved with long
+generations).  Wave batching decodes every slot until the wave's longest
+request and holds the queue until the wave finishes; the continuous
+engine retires each sequence at its own length and refills the freed
+slot mid-decode.  Aggregate tokens/s = useful generated tokens /
+(prefill + decode) wall.
+
+Part 2 — shared-system-prompt workload: every request shares a long
+prefix (the production shape: one system prompt, many users).  The same
+engine runs it with the radix-tree prefix cache off and on; with the
+cache, admission copies the cached prefix pages into the slot and
+prefills only the short tail, which must cut TTFT by >= 2x at exact
+greedy parity.  Results are emitted as one machine-readable JSON line
+(tok/s, TTFT p50/p95, hit rate) and written to BENCH_serve.json so the
+bench trajectory accumulates across PRs.
 
 Both paths are warmed (jit compiles + VPE tuning excluded from the
 timed run).
@@ -17,6 +27,8 @@ timed run).
 from __future__ import annotations
 
 import copy
+import json
+import os
 import sys
 import time
 from typing import List
@@ -32,6 +44,9 @@ from repro.runtime.serve_loop import (
 
 SLOTS = 4
 MAX_LEN = 96
+PREFIX_MAX_LEN = 512
+PREFIX_LEN = 384         # shared system prompt (24 KV blocks of 16)
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
 
 def make_workload(rng, n: int, vocab: int) -> List[Request]:
@@ -71,6 +86,84 @@ def run_continuous(eng: ContinuousBatchingEngine, reqs: List[Request]) -> float:
     return useful_tokens(reqs) / wall
 
 
+def make_shared_prefix_workload(rng, n: int, vocab: int) -> List[Request]:
+    """One shared system prompt, per-request tails: the warm-serving shape."""
+    shared = rng.integers(0, vocab, PREFIX_LEN).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, vocab, int(rng.integers(4, 9))).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                            max_new_tokens=4))
+    return reqs
+
+
+def percentile(xs: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def run_engine(eng: ContinuousBatchingEngine, reqs: List[Request]) -> dict:
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    # parity outputs from THIS call's requests (eng.completed is
+    # cumulative and would also contain the warm-up pass's rids)
+    outs = {r.rid: list(map(int, r.out)) for r in reqs}
+    return {
+        "tok_per_s": useful_tokens(reqs) / wall,
+        "ttft_p50_ms": percentile(eng.stats.ttft_s, 50) * 1e3,
+        "ttft_p95_ms": percentile(eng.stats.ttft_s, 95) * 1e3,
+        "hit_rate": eng.stats.prefix_hit_rate,
+        "tokens_saved": eng.stats.prefix_tokens_saved,
+        "outs": outs,
+    }
+
+
+def bench_prefix_cache(cfg, params, n_requests: int) -> bool:
+    """Shared-prefix workload, cache off vs on; returns pass/fail."""
+    rng = np.random.default_rng(1)
+    reqs = make_shared_prefix_workload(rng, n_requests, cfg.vocab_size)
+
+    def fresh_engine(blocks: int) -> ContinuousBatchingEngine:
+        return ContinuousBatchingEngine(
+            cfg, params, slots=SLOTS, max_len=PREFIX_MAX_LEN,
+            prefix_blocks=blocks, block_size=16)
+
+    off = fresh_engine(0)
+    on = fresh_engine(64)
+    # warm: compiles out of the timed pass; for the cached engine this is
+    # also the paper's warm-up phase — the tree fills, later passes hit
+    run_engine(off, copy.deepcopy(reqs))
+    run_engine(on, copy.deepcopy(reqs))
+    off.stats, on.stats = type(off.stats)(), type(on.stats)()
+
+    r_off = run_engine(off, copy.deepcopy(reqs))
+    r_on = run_engine(on, copy.deepcopy(reqs))
+    parity = r_off.pop("outs") == r_on.pop("outs")
+    speedup = (r_off["ttft_p50_ms"] / r_on["ttft_p50_ms"]
+               if r_on["ttft_p50_ms"] else 0.0)
+    record = {
+        "bench": "serve_prefix_cache",
+        "n_requests": n_requests,
+        "prefix_len": PREFIX_LEN,
+        "cache_off": r_off,
+        "cache_on": r_on,
+        "ttft_p50_speedup": round(speedup, 2),
+        "greedy_parity": parity,
+    }
+    line = json.dumps(record, sort_keys=True)
+    print(line)
+    with open(BENCH_JSON, "a") as f:  # append: the trajectory accumulates
+        f.write(line + "\n")
+    ok = parity and speedup >= 2.0
+    print(f"# prefix-cache ttft p50 speedup: {speedup:.2f}x, "
+          f"hit rate {r_on['hit_rate']:.2f}, parity "
+          f"{'exact' if parity else 'BROKEN'} "
+          f"({'PASS' if ok else 'FAIL'}: need >=2x at exact parity)")
+    return ok
+
+
 def main(n_requests: int = 24) -> None:
     cfg = get_config("qwen3-8b").reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -100,7 +193,8 @@ def main(n_requests: int = 24) -> None:
     print(f"# continuous/wave speedup: {cont / wave:.2f}x "
           f"({'PASS' if ok else 'FAIL'}: continuous must win on "
           f"mixed-length workloads)")
-    if not ok:
+    ok_prefix = bench_prefix_cache(cfg, params, n_requests)
+    if not (ok and ok_prefix):
         sys.exit(1)
 
 

@@ -18,7 +18,9 @@ from .controller import Controller, Decision
 from .dispatch import DEFAULT, VPE, VPEFunction
 from .profiler import Profiler, SampleSet, Welford
 from .registry import GLOBAL, OpEntry, Registry, Variant, reset_global
-from .shape_class import bucket_label, occupancy_bucket, pad_to_bucket, shape_bucket
+from .shape_class import (
+    bucket_label, occupancy_bucket, pad_to_bucket, prefix_len_bucket,
+    shape_bucket)
 
 __all__ = [
     "VPE",
@@ -38,4 +40,5 @@ __all__ = [
     "bucket_label",
     "occupancy_bucket",
     "pad_to_bucket",
+    "prefix_len_bucket",
 ]

@@ -58,6 +58,11 @@ def bucket_label(bucket: Tuple) -> str:
     if bucket and bucket[0] == "occ":
         _, level, total = bucket
         return f"occ{level}/{total}slots"
+    if bucket and bucket[0] == "plen":
+        _, b = bucket
+        if b == 0:
+            return "plen0"
+        return f"plen[{2 ** (b - 1)},{2 ** b})tok"
     b, ranks = bucket
     lo, hi = 2 ** b, 2 ** (b + 1)
     return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}"
@@ -76,6 +81,21 @@ def occupancy_bucket(active: int, total: int, *, levels: int = 4) -> Tuple:
         return ("occ", 0, total)
     level = min(levels, max(1, math.ceil(active / total * levels)))
     return ("occ", level, total)
+
+
+def prefix_len_bucket(matched: int) -> Tuple:
+    """Dispatch key for the serve engine's ``prefix_reuse`` axis.
+
+    Whether copying cached KV pages into a slot beats recomputing the
+    prefix depends on how long the matched prefix is (copy-in cost is
+    ~flat, recompute cost grows with length) — the same flip-at-a-size
+    the paper measures for matmul offload (Fig. 2b, ~75x75).  Keying
+    decisions by log2 length buckets lets the controller learn the
+    crossover point instead of hard-coding it.
+    """
+    if matched <= 0:
+        return ("plen", 0)
+    return ("plen", int(math.floor(math.log2(matched))) + 1)
 
 
 def pad_to_bucket(n: int, *, minimum: int = 16) -> int:

@@ -30,6 +30,12 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--continuous", action="store_true",
                     help="token-level continuous batching (VPE-tuned decode)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree shared-prefix KV cache (continuous only)")
+    ap.add_argument("--prefix-blocks", type=int, default=64,
+                    help="KV page pool size for --prefix-cache")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page for --prefix-cache")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -43,7 +49,9 @@ def main() -> None:
         max_new_tokens=args.new_tokens) for i in range(args.requests)]
     if args.continuous:
         engine = ContinuousBatchingEngine(
-            cfg, params, slots=args.batch, max_len=args.max_len, vpe=VPE())
+            cfg, params, slots=args.batch, max_len=args.max_len, vpe=VPE(),
+            prefix_blocks=args.prefix_blocks if args.prefix_cache else 0,
+            block_size=args.block_size)
         for r in reqs:
             engine.submit(r)
         done = engine.run()

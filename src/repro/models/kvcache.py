@@ -108,13 +108,79 @@ def insert_slot_kv(
     wrote at ``>= true_len`` are masked until overwritten by new decode
     steps.
     """
+    return insert_slot_kv_at(cache, k_new, v_new, slot, jnp.int32(0), true_len)
+
+
+def insert_slot_kv_at(
+    cache: Cache, k_new: jax.Array, v_new: jax.Array, slot: jax.Array,
+    start_pos: jax.Array, true_len: jax.Array,
+) -> Cache:
+    """Write K/V pages into slot ``slot`` starting at position ``start_pos``.
+
+    The offset form is the prefix-cache admission path: cached prefix
+    pages are written at position 0, then the suffix prefill's K/V at
+    ``start_pos = prefix_len`` (in that order — a bucket-padded prefix
+    write may spill garbage past ``prefix_len``, which the suffix write
+    then overwrites; anything beyond stays masked by ``length``).  The
+    caller guarantees ``start_pos + S <= max_len`` so the update never
+    clamps.  ``length[slot]`` is set to ``true_len`` (pass the FULL
+    sequence length, not the write width).
+    """
     zero = jnp.int32(0)
     slot = jnp.asarray(slot, jnp.int32)
-    start = (zero, slot, zero, zero, zero)
+    start = (zero, slot, zero, jnp.asarray(start_pos, jnp.int32), zero)
     k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), start)
     v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), start)
     length = cache["length"].at[slot].set(jnp.asarray(true_len, jnp.int32))
     return {"k": k, "v": v, "length": length}
+
+
+# -- block-granular KV page pool (shared-prefix cache) ------------------------
+#
+# The radix tree (runtime/prefix_cache.py) hands out integer page ids;
+# these helpers own the device arrays behind them.  Pages are stored in
+# the model's COMPUTE dtype, not the (possibly narrower) slot-cache
+# dtype: a warm admission must hand the suffix prefill bit-identical
+# prefix K/V to what a cold full prefill would have computed, otherwise
+# greedy parity breaks.  The slot-cache cast happens at insert time on
+# both paths, so downstream decode sees identical values either way.
+
+def init_block_pool(
+    num_blocks: int, num_layers: int, num_kv_heads: int, block_size: int,
+    head_dim: int, dtype=jnp.float32,
+) -> Cache:
+    """Pool of KV pages: {"k","v"}: (N, L, Hkv, block_size, D)."""
+    shape = (num_blocks, num_layers, num_kv_heads, block_size, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def write_block(
+    pool: Cache, k_src: jax.Array, v_src: jax.Array, block_id: jax.Array,
+    start: jax.Array, block_size: int,
+) -> Cache:
+    """Scatter one page: copy ``[start, start+block_size)`` of a prefill's
+    stacked K/V (L, 1, Hkv, S, D) into pool page ``block_id``."""
+    def cut(src):
+        return jax.lax.dynamic_slice_in_dim(src, start, block_size, axis=3)[:, 0]
+    return {
+        "k": pool["k"].at[block_id].set(cut(k_src).astype(pool["k"].dtype)),
+        "v": pool["v"].at[block_id].set(cut(v_src).astype(pool["v"].dtype)),
+    }
+
+
+def gather_blocks(pool: Cache, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Gather pages ``ids`` (nb,) into contiguous prefix K/V.
+
+    Returns (k, v) of shape (L, 1, Hkv, nb*block_size, D) — the layout
+    :func:`insert_slot_kv_at` and the suffix prefill expect.  ``ids``
+    may be padded (repeat any valid id); padded columns land past the
+    true prefix length and are masked by the caller.
+    """
+    def take(p):
+        g = p[ids]                                # (nb, L, Hkv, bs, D)
+        nb, L, Hkv, bs, D = g.shape
+        return g.transpose(1, 2, 0, 3, 4).reshape(L, Hkv, nb * bs, D)[:, None]
+    return take(pool["k"]), take(pool["v"])
 
 
 def decode_attention(

@@ -131,6 +131,21 @@ def insert_slot_kv(cache: Any, k_new: jax.Array, v_new: jax.Array,
     return kvcache.insert_slot_kv(cache, k_new, v_new, slot, true_len)
 
 
+def insert_slot_kv_at(cache: Any, k_new: jax.Array, v_new: jax.Array,
+                      slot: jax.Array, start_pos: jax.Array,
+                      true_len: jax.Array) -> Any:
+    return kvcache.insert_slot_kv_at(cache, k_new, v_new, slot, start_pos, true_len)
+
+
+def prefill_suffix_kv(cfg: ModelConfig, params: Any, tokens: jax.Array,
+                      prefix_k: jax.Array, prefix_v: jax.Array,
+                      prefix_len: jax.Array, true_len: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Suffix-only prefill against cached prefix KV pages (prefix cache)."""
+    return _slot_module(cfg).prefill_suffix_kv(
+        cfg, params, tokens, prefix_k, prefix_v, prefix_len, true_len)
+
+
 def decode_step_slots(cfg: ModelConfig, params: Any, cache: Any,
                       tokens: jax.Array, decode_impl: str = "grouped"
                       ) -> Tuple[Any, jax.Array]:

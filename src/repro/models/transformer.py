@@ -176,14 +176,20 @@ def init_slot_cache(cfg: ModelConfig, slots: int, max_len: int):
         per_slot=True)
 
 
-def _layer_kv_fwd(cfg: ModelConfig, s, impl: str, lp: Params, x: jax.Array,
-                  positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def _layer_kv_fwd(cfg: ModelConfig, s, impl: Optional[str], lp: Params,
+                  x: jax.Array, positions: jax.Array, attn_call=None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One prompt-pass layer; returns (x_out, k, v) — the single copy of
-    the layer wiring shared by :func:`prefill` and :func:`prefill_slot_kv`
-    (they differ only in where the K/V go)."""
+    the layer wiring shared by :func:`prefill`, :func:`prefill_slot_kv`
+    and :func:`prefill_suffix_kv` (they differ only in where the K/V go
+    and, for the suffix path, how attention reads the cached prefix —
+    ``attn_call(q, k, v)`` overrides the stock causal SDPA)."""
     h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
     q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
-    o = layers.ATTENTION_VARIANTS[impl](q, k, v, causal=True, window=s.window)
+    if attn_call is not None:
+        o = attn_call(q, k, v)
+    else:
+        o = layers.ATTENTION_VARIANTS[impl](q, k, v, causal=True, window=s.window)
     x = x + layers._merge_heads(o) @ lp["attn_wo"]
     h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
     if cfg.family == "moe":
@@ -247,6 +253,90 @@ def prefill_slot_kv(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
     x, (k_all, v_all) = layers.scan_layers(
         body, x, params["layers"], unroll=cfg.unroll_layers)
+    x_last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    x_last = layers.rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x_last @ head).astype(jnp.float32)[:, 0, :]
+    return k_all, v_all, logits
+
+
+def _prefix_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      mask: jax.Array) -> jax.Array:
+    """GQA attention of suffix queries against prefix+suffix K/V.
+
+    q: (B, Hq, S, D); k/v: (B, Hkv, T, D) with T = P_pad + S; mask:
+    (1, S, T) validity.  Grouped layout and f32 accumulators, matching
+    :func:`repro.models.kvcache.decode_attention`.
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, group, S, D)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None], s, float("-inf"))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def prefill_suffix_kv(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                      prefix_k: jax.Array, prefix_v: jax.Array,
+                      prefix_len: jax.Array, true_len: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill ONLY a prompt's suffix against cached prefix K/V pages.
+
+    The prefix-cache fast path: positions ``[0, prefix_len)`` were paid
+    for by an earlier prompt and come in as gathered pages ``prefix_k``/
+    ``prefix_v`` (L, 1, Hkv, P_pad, D); only the suffix ``tokens``
+    (1, S_pad), right-padded, is run through the model at absolute
+    positions ``prefix_len + i``.  Columns ``[prefix_len, P_pad)`` of the
+    gathered prefix are padding and masked out; suffix attention is
+    causal (and sliding-window when the arch has one).
+
+    Returns (k, v, logits): the SUFFIX-only stacked K/V
+    (L, 1, Hkv, S_pad, D) — insert at slot position ``prefix_len`` —
+    and the (1, V) logits at suffix position ``true_len - 1`` (absolute
+    position ``prefix_len + true_len - 1``).  Causality makes the result
+    mathematically identical to a full prefill of the whole prompt;
+    bitwise it differs only by floating-point reduction order (the
+    suffix path always uses the grouped einsum below, a full prefill
+    uses ``cfg.attn_impl``), which the greedy-parity tests pin down
+    empirically for the served configs.
+    """
+    B, S = tokens.shape
+    P_pad = prefix_k.shape[3]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.asarray(prefix_len, jnp.int32) + jnp.arange(S)
+    s = attn_spec(cfg)
+
+    cols = jnp.arange(P_pad + S)
+    # absolute position of each K/V column: prefix pages sit at [0, P_pad)
+    # (valid below prefix_len), suffix keys at prefix_len + local index
+    col_abs = jnp.where(cols < P_pad, cols, prefix_len + cols - P_pad)
+    col_valid = (cols >= P_pad) | (cols < prefix_len)
+    row_abs = prefix_len + jnp.arange(S)
+    mask = col_valid[None, :] & (col_abs[None, :] <= row_abs[:, None])
+    if s.window is not None:
+        mask &= col_abs[None, :] > row_abs[:, None] - s.window
+    mask = mask[None]  # (1, S, P_pad + S)
+
+    def body(x, scanned):
+        lp, pk, pv = scanned
+
+        def attn_call(q, k, v):
+            k_full = jnp.concatenate([pk.astype(k.dtype), k], axis=2)
+            v_full = jnp.concatenate([pv.astype(v.dtype), v], axis=2)
+            return _prefix_attention(q, k_full, v_full, mask)
+
+        x, k, v = _layer_kv_fwd(cfg, s, None, lp, x, positions,
+                                attn_call=attn_call)
+        return x, (k, v)
+
+    x, (k_all, v_all) = layers.scan_layers(
+        body, x, (params["layers"], prefix_k, prefix_v), unroll=cfg.unroll_layers)
     x_last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
     x_last = layers.rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

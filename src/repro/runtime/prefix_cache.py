@@ -1,0 +1,287 @@
+"""Radix-tree shared-prefix KV cache — transparent reuse of paid-for work.
+
+The paper's thesis is that a transparent runtime should notice work it
+has already paid for and reuse it "without requiring any human
+intervention", accepting a warm-up phase in exchange for large steady
+state gains.  At serving scale the dominant recomputed work is prefill
+over shared prompt prefixes (system prompts, few-shot templates).  This
+module is the bookkeeping half of that reuse: a radix tree over
+*block-granular* KV pages.
+
+Mapping to the paper's mechanisms:
+
+* **profile → notice redundancy** (§3.1 hot detection): the tree *is*
+  the profile — every admitted prompt inserts its full blocks, so a
+  prefix shared by later prompts is found by a pure lookup instead of a
+  recomputed prefill, exactly like the runtime noticing a hot function.
+* **blind offload / keep-or-revert** (§3.1/§5.2): whether copying cached
+  pages into a decode slot actually beats recomputing a *short* prefix
+  is a measured dispatch decision, not a policy constant.  The serve
+  engine exposes it as the ``prefix_reuse`` VPE axis (variants ``reuse``
+  vs ``recompute``), keyed by matched-prefix-length buckets — the
+  decision-tree-on-input-size of Fig. 2b applied to memory reuse.
+* **warm-up phase**: a cold cache recomputes everything (and pays the
+  insert bookkeeping); the hit rate climbs as traffic repeats — "gains
+  … after an initial warm-up phase".
+
+Design (vLLM/SGLang-style, but block-atomic): each tree node owns
+exactly ONE block of ``block_size`` consecutive tokens; the edge label
+is that token tuple.  A prompt's cacheable region is its full blocks
+(the partial tail block is never cached).  Matching walks the tree
+block-by-block, so a matched prefix is by construction a true token
+prefix and a multiple of ``block_size``.
+
+Lifetime rules:
+
+* ``acquire`` pins (refcounts) every node on the matched path for the
+  duration of a request's slot residency; ``release`` unpins.
+* ``extend`` inserts the prompt's not-yet-cached full blocks (allocating
+  page ids from the free list, evicting if needed) and pins them too;
+  the *caller* copies the K/V pages onto the device — this module only
+  hands out ``(block_id, token_start)`` pairs so it stays testable
+  without a device.
+* eviction is LRU over unpinned leaves only; freeing a leaf may expose
+  its parent as the next candidate.  Pinned nodes are unevictable, so a
+  mid-stream eviction can never pull pages out from under a live
+  request.
+
+This module is pure Python/host-side on purpose: the device half (page
+pool gather/scatter) lives in :mod:`repro.models.kvcache`, and the
+policy half (reuse-vs-recompute) in the serve engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(eq=False)  # identity semantics: nodes live in sets
+class _Node:
+    """One cached block: ``block_size`` tokens and their KV page id."""
+
+    tokens: Tuple[int, ...]            # edge label (root: empty tuple)
+    block_id: int                      # page id in the device pool (-1: root)
+    parent: Optional["_Node"]
+    children: Dict[Tuple[int, ...], "_Node"] = dataclasses.field(default_factory=dict)
+    refcount: int = 0                  # live requests pinning this node
+    last_access: int = 0               # logical LRU clock
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+@dataclasses.dataclass
+class CacheHandle:
+    """A request's pinned path through the tree (acquire → release)."""
+
+    nodes: List[_Node]
+    matched_len: int                   # tokens served from cache at acquire
+
+    @property
+    def block_ids(self) -> List[int]:
+        return [n.block_id for n in self.nodes]
+
+    @property
+    def pinned_len(self) -> int:
+        return sum(len(n.tokens) for n in self.nodes)
+
+
+@dataclasses.dataclass
+class PrefixCacheStats:
+    lookups: int = 0
+    hits: int = 0                      # lookups with matched_len > 0
+    tokens_matched: int = 0            # cumulative matched prefix tokens
+    blocks_inserted: int = 0
+    evictions: int = 0                 # blocks returned to the free list
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class PrefixCache:
+    """Radix tree over refcounted, block-granular KV page ids."""
+
+    def __init__(self, num_blocks: int, block_size: int) -> None:
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError("num_blocks and block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.root = _Node(tokens=(), block_id=-1, parent=None)
+        self.free: List[int] = list(range(num_blocks))
+        self.stats = PrefixCacheStats()
+        self._clock = 0
+        # incrementally maintained eviction frontier: exactly the unpinned
+        # leaves.  Keeps allocation-under-pressure O(|frontier|) instead of
+        # a full-tree DFS per evicted block (admission-path host work).
+        self._frontier: set = set()
+
+    # -- clock -----------------------------------------------------------
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # -- lookup ----------------------------------------------------------
+    def match(self, tokens: Sequence[int], *,
+              max_match: Optional[int] = None) -> List[_Node]:
+        """Longest cached block-path that is a prefix of ``tokens``.
+
+        ``max_match`` caps the matched token count (the engine passes
+        ``len(prompt) - 1`` so at least one token is always prefilled —
+        the suffix prefill must produce first-token logits).
+        """
+        limit = len(tokens)
+        if max_match is not None:
+            limit = min(limit, max_match)
+        node, path, pos = self.root, [], 0
+        while pos + self.block_size <= limit:
+            key = tuple(int(t) for t in tokens[pos:pos + self.block_size])
+            child = node.children.get(key)
+            if child is None:
+                break
+            path.append(child)
+            node = child
+            pos += self.block_size
+        return path
+
+    def acquire(self, tokens: Sequence[int], *,
+                max_match: Optional[int] = None) -> CacheHandle:
+        """Match and pin: refcount++ on every node of the matched path."""
+        path = self.match(tokens, max_match=max_match)
+        t = self._tick()
+        for n in path:
+            n.refcount += 1
+            n.last_access = t
+            self._frontier.discard(n)   # pinned -> unevictable
+        matched = self.block_size * len(path)
+        self.stats.lookups += 1
+        if matched:
+            self.stats.hits += 1
+            self.stats.tokens_matched += matched
+        return CacheHandle(nodes=list(path), matched_len=matched)
+
+    # -- insertion -------------------------------------------------------
+    def extend(self, handle: CacheHandle,
+               tokens: Sequence[int]) -> List[Tuple[int, int]]:
+        """Cache the full blocks of ``tokens`` beyond the handle's path.
+
+        Walks/creates children block-by-block; every visited node is
+        pinned onto ``handle``.  Returns ``(block_id, token_start)`` for
+        each NEWLY allocated block — the caller must fill those device
+        pages before the next admission can match them.  Stops early
+        (without error) when no block can be allocated even after
+        eviction; partial insertion keeps the path contiguous.
+        """
+        node = handle.nodes[-1] if handle.nodes else self.root
+        pos = handle.pinned_len
+        t = self._tick()
+        fresh: List[Tuple[int, int]] = []
+        while pos + self.block_size <= len(tokens):
+            key = tuple(int(x) for x in tokens[pos:pos + self.block_size])
+            child = node.children.get(key)
+            if child is None:
+                bid = self._alloc()
+                if bid is None:
+                    break
+                child = _Node(tokens=key, block_id=bid, parent=node)
+                node.children[key] = child
+                self._frontier.discard(node)  # gained a child: not a leaf
+                fresh.append((bid, pos))
+                self.stats.blocks_inserted += 1
+            child.refcount += 1
+            child.last_access = t
+            self._frontier.discard(child)     # pinned -> unevictable
+            handle.nodes.append(child)
+            node = child
+            pos += self.block_size
+        return fresh
+
+    def release(self, handle: CacheHandle) -> None:
+        """Unpin a request's path (refcount--), refreshing LRU recency."""
+        t = self._tick()
+        for n in handle.nodes:
+            assert n.refcount > 0, "release without matching acquire/extend"
+            n.refcount -= 1
+            n.last_access = t
+            if n.refcount == 0 and n.is_leaf:
+                self._frontier.add(n)
+        handle.nodes = []
+
+    # -- eviction --------------------------------------------------------
+    def _evict_one(self) -> bool:
+        if not self._frontier:
+            return False
+        victim = min(self._frontier, key=lambda n: n.last_access)
+        assert victim.refcount == 0 and victim.is_leaf, \
+            "pinned or interior node on the eviction frontier"
+        self._frontier.discard(victim)
+        parent = victim.parent
+        assert parent is not None
+        del parent.children[victim.tokens]
+        victim.parent = None
+        self.free.append(victim.block_id)
+        self.stats.evictions += 1
+        if parent is not self.root and parent.is_leaf and parent.refcount == 0:
+            self._frontier.add(parent)    # exposed as the next candidate
+        return True
+
+    def evict(self, n_blocks: int) -> int:
+        """Evict up to ``n_blocks`` LRU unpinned leaves; returns count."""
+        done = 0
+        while done < n_blocks and self._evict_one():
+            done += 1
+        return done
+
+    def _alloc(self) -> Optional[int]:
+        if not self.free and not self._evict_one():
+            return None
+        return self.free.pop()
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def live_blocks(self) -> int:
+        return self.num_blocks - len(self.free)
+
+    def total_refcount(self) -> int:
+        return sum(n.refcount for n in self._walk())
+
+    def _walk(self) -> List[_Node]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            if n is not self.root:
+                out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    def check(self) -> None:
+        """Structural invariants; raises AssertionError on violation.
+
+        * every block id is owned by exactly one node XOR the free list;
+        * allocated + free == pool size (no leak, no double-free);
+        * refcounts are never negative;
+        * every edge label has exactly ``block_size`` tokens and matches
+          its child's stored tokens (path = true token prefix);
+        * parent back-links are consistent;
+        * the incremental eviction frontier equals the recomputed set of
+          unpinned leaves.
+        """
+        nodes = self._walk()
+        assert self._frontier == {
+            n for n in nodes if n.is_leaf and n.refcount == 0}, \
+            "eviction frontier out of sync with tree"
+        ids = [n.block_id for n in nodes]
+        assert len(ids) == len(set(ids)), "duplicate block id in tree"
+        assert not (set(ids) & set(self.free)), "block both live and free"
+        assert len(ids) + len(self.free) == self.num_blocks, (
+            f"leak: {len(ids)} live + {len(self.free)} free "
+            f"!= pool {self.num_blocks}")
+        assert len(self.free) == len(set(self.free)), "double-free"
+        for n in nodes:
+            assert n.refcount >= 0, "negative refcount"
+            assert len(n.tokens) == self.block_size, "partial block cached"
+            assert 0 <= n.block_id < self.num_blocks, "block id out of range"
+            assert n.parent is not None, "orphan node reachable from root"
+            assert n.parent.children.get(n.tokens) is n, "broken parent link"

@@ -35,13 +35,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import VPE, occupancy_bucket, pad_to_bucket
+from repro.core import VPE, occupancy_bucket, pad_to_bucket, prefix_len_bucket
 from repro.models import kvcache
 from repro.models import model as model_lib
+from repro.runtime.prefix_cache import PrefixCache
 
-# serve-engine implementation axis (IMPL_AXES analogue for decode)
+# serve-engine implementation axes (IMPL_AXES analogue):
+# * serve_decode_impl — decode-attention layout, keyed by occupancy bucket;
+# * prefix_reuse — copy cached prefix KV pages in vs recompute the whole
+#   prompt, keyed by matched-prefix-length bucket (the paper's measured
+#   keep-or-revert applied to memory reuse instead of compute offload).
 SERVE_AXES: Dict[str, List[str]] = {
     "serve_decode_impl": list(kvcache.DECODE_ATTN_VARIANTS),
+    "prefix_reuse": ["reuse", "recompute"],
 }
 
 
@@ -55,6 +61,10 @@ class ServeStats:
     rejits: int = 0                  # decode-step re-traces (VPE swaps)
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     queue_wait_s: List[float] = dataclasses.field(default_factory=list)
+    # shared-prefix cache counters (0/empty when the cache is disabled)
+    prefix_lookups: int = 0
+    prefix_hits: int = 0             # admissions that matched a cached prefix
+    prefix_tokens_saved: int = 0     # prompt tokens served from cached pages
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -77,12 +87,21 @@ class ServeStats:
         return (sum(self.queue_wait_s) / len(self.queue_wait_s)
                 if self.queue_wait_s else 0.0)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        return (self.prefix_hits / self.prefix_lookups
+                if self.prefix_lookups else 0.0)
+
     def summary(self) -> str:
-        return (f"{self.tokens_out} tok, {self.total_tok_per_s:.1f} tok/s agg "
-                f"({self.decode_tok_per_s:.1f} decode), "
-                f"ttft {self.mean_ttft_s * 1e3:.1f}ms, "
-                f"queue {self.mean_queue_wait_s * 1e3:.1f}ms, "
-                f"{self.rejits} rejits")
+        s = (f"{self.tokens_out} tok, {self.total_tok_per_s:.1f} tok/s agg "
+             f"({self.decode_tok_per_s:.1f} decode), "
+             f"ttft {self.mean_ttft_s * 1e3:.1f}ms, "
+             f"queue {self.mean_queue_wait_s * 1e3:.1f}ms, "
+             f"{self.rejits} rejits")
+        if self.prefix_lookups:
+            s += (f", prefix-cache {self.prefix_hits}/{self.prefix_lookups} "
+                  f"hits ({self.prefix_tokens_saved} tok saved)")
+        return s
 
 
 class ServeLoop:
@@ -133,6 +152,11 @@ class Request:
     submit_t: float = 0.0
     admit_step: int = -1
     done_step: int = -1
+    # per-request latency record (soak invariants: 0 <= queue <= ttft
+    # <= done_t - submit_t) and the prefix-cache pin held while resident
+    ttft_s: float = 0.0
+    done_t: float = 0.0
+    cache_handle: Optional[Any] = None
 
 
 class WaveScheduler:
@@ -205,11 +229,22 @@ class ContinuousBatchingEngine:
     controller under the current occupancy bucket; variant selection
     (including in-flight blind-offload trials) picks the decode-attention
     implementation, and a selection change re-jits the step.
+
+    With ``prefix_blocks > 0`` a radix-tree shared-prefix KV cache
+    (:class:`~repro.runtime.prefix_cache.PrefixCache`) sits in front of
+    admission: the longest cached block-prefix of the prompt is matched,
+    its pages are pinned for the request's residency and copied into the
+    freed slot, and only the suffix is prefilled.  Whether that copy-in
+    actually beats recomputing a short prefix is the ``prefix_reuse``
+    VPE axis, measured per matched-length bucket from admission wall
+    time.  Eviction is LRU over unpinned leaves; every admission inserts
+    the prompt's new full blocks so later prompts can reuse them.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  max_len: int = 256, vpe: Optional[VPE] = None,
-                 occupancy_levels: int = 4, min_prompt_pad: int = 16) -> None:
+                 occupancy_levels: int = 4, min_prompt_pad: int = 16,
+                 prefix_blocks: int = 0, block_size: int = 16) -> None:
         if not model_lib.supports_slot_serving(cfg):
             raise ValueError(f"family {cfg.family!r} has no slot-serving path")
         self.cfg = cfg
@@ -226,8 +261,11 @@ class ContinuousBatchingEngine:
         self.cache = model_lib.init_slot_cache(cfg, slots, max_len)
         self._prefill = jax.jit(
             lambda p, t, n: model_lib.prefill_slot_kv(cfg, p, t, n))
+        # the old cache is dead after every insert — donate it so XLA
+        # updates the slot pages in place instead of copying the pool
         self._insert = jax.jit(
-            lambda c, k, v, s, n: model_lib.insert_slot_kv(c, k, v, s, n))
+            lambda c, k, v, s, n: model_lib.insert_slot_kv(c, k, v, s, n),
+            donate_argnums=0)
         self._decode_fns: Dict[str, Callable] = {}
         self._axis = "serve_decode_impl"
         self._default_variant = SERVE_AXES[self._axis][0]
@@ -237,6 +275,34 @@ class ContinuousBatchingEngine:
             for i, name in enumerate(SERVE_AXES[self._axis]):
                 vpe.registry.register_variant(
                     self._axis, name, fn=(lambda name=name: name), default=(i == 0))
+        # -- shared-prefix KV cache (radix tree + device page pool) --------
+        self.block_size = block_size
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_blocks > 0:
+            self.prefix_cache = PrefixCache(prefix_blocks, block_size)
+            # pages live in the COMPUTE dtype so a warm suffix prefill sees
+            # bit-identical prefix K/V to a cold full prefill (parity)
+            self.block_pool = kvcache.init_block_pool(
+                prefix_blocks, cfg.num_layers, cfg.num_kv_heads, block_size,
+                cfg.head_dim, dtype=jnp.dtype(cfg.dtype))
+            self._gather = jax.jit(kvcache.gather_blocks)
+            self._write_block = jax.jit(
+                lambda pool, k, v, bid, st: kvcache.write_block(
+                    pool, k, v, bid, st, block_size),
+                donate_argnums=0)
+            self._insert_at = jax.jit(
+                lambda c, k, v, s, st, n: model_lib.insert_slot_kv_at(
+                    c, k, v, s, st, n),
+                donate_argnums=0)
+            self._prefill_suffix = jax.jit(
+                lambda p, t, pk, pv, pl, tl: model_lib.prefill_suffix_kv(
+                    cfg, p, t, pk, pv, pl, tl))
+            if vpe is not None and not vpe.registry.has_op("prefix_reuse"):
+                vpe.registry.register_op("prefix_reuse")
+                for i, name in enumerate(SERVE_AXES["prefix_reuse"]):
+                    vpe.registry.register_variant(
+                        "prefix_reuse", name, fn=(lambda name=name: name),
+                        default=(i == 0))
 
     # -- request intake ----------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -265,27 +331,141 @@ class ContinuousBatchingEngine:
             now = time.perf_counter()
             req.admit_step = self.stats.decode_steps
             self.stats.queue_wait_s.append(now - req.submit_t)
-            prompt = np.asarray(req.prompt, np.int32)
-            S = len(prompt)
-            pad = min(pad_to_bucket(S, minimum=self.min_prompt_pad), self.max_len)
-            toks = np.zeros((1, pad), np.int32)
-            toks[0, :S] = prompt
-            t0 = time.perf_counter()
-            k, v, logits = self._prefill(self.params, jnp.asarray(toks), jnp.int32(S))
-            self.cache = self._insert(self.cache, k, v, jnp.int32(i), jnp.int32(S))
-            first = int(np.asarray(jnp.argmax(logits[0])))
-            # fence the insert too: otherwise its device time leaks into
-            # the NEXT decode step's VPE sample and skews the controller
-            jax.block_until_ready(self.cache)
+            first, k_all, v_all, base = self._admit_prefill(i, req)
             now = time.perf_counter()
-            self.stats.prefill_s += now - t0
-            self.stats.ttft_s.append(now - req.submit_t)
+            req.ttft_s = now - req.submit_t
+            self.stats.ttft_s.append(req.ttft_s)
             req.out.append(first)
             self.stats.tokens_out += 1
             self.stats.prefill_tokens += 1
             slot.req = req
             slot.tok = first
+            # population is off the TTFT critical path: the first token is
+            # already out; new full blocks are copied into the page pool now
+            self._cache_extend(req, k_all, v_all, base)
             self._retire_if_done(i)
+
+    def _admit_prefill(self, i: int, req: Request):
+        """Prefill ``req`` into slot ``i`` — whole prompt, or suffix only
+        against cached prefix pages when the radix tree has a hit AND the
+        ``prefix_reuse`` controller says copy-in beats recompute for this
+        matched-length bucket.  Returns (first_token, k, v, base) where
+        k/v are the computed stacked K/V covering prompt positions
+        ``[base, S)`` (the block-write source for :meth:`_cache_extend`).
+        """
+        prompt = np.asarray(req.prompt, np.int32)
+        S = len(prompt)
+        matched, variant, bucket = 0, "reuse", None
+        jits_before = self._prefill_jit_cache_size()
+        if self.prefix_cache is not None:
+            # never match the full prompt: the suffix prefill must still
+            # produce the first generated token's logits
+            req.cache_handle = self.prefix_cache.acquire(prompt, max_match=S - 1)
+            matched = req.cache_handle.matched_len
+            self.stats.prefix_lookups += 1
+            if matched:
+                self.stats.prefix_hits += 1
+                if self.vpe is not None:
+                    bucket = prefix_len_bucket(matched)
+                    variant = self.vpe.controller.select("prefix_reuse", bucket)
+        t0 = time.perf_counter()
+        if matched and variant == "reuse":
+            out = self._prefill_from_prefix(i, prompt, req.cache_handle)
+            self.stats.prefix_tokens_saved += matched
+        else:
+            out = self._prefill_full(i, prompt)
+        # fence the insert too: otherwise its device time leaks into
+        # the NEXT decode step's VPE sample and skews the controller
+        jax.block_until_ready(self.cache)
+        dt = time.perf_counter() - t0
+        self.stats.prefill_s += dt
+        if bucket is not None and self._prefill_jit_cache_size() == jits_before:
+            # feed the measured TTFT contribution back: the controller
+            # blind-trials "recompute" and keeps whichever is faster for
+            # this matched-length bucket (the paper's offload-or-revert).
+            # Samples that paid a fresh jit compile are dropped: a plen
+            # bucket spans many pad shapes, and the profiler's per-variant
+            # warm-up split can't see shape-level compiles — one recorded
+            # multi-second compile would permanently flip the bucket.
+            self.vpe.profiler.record("prefix_reuse", variant, bucket, dt)
+            self.vpe.controller.on_sample("prefix_reuse", bucket, variant)
+        return out
+
+    def _prefill_jit_cache_size(self) -> int:
+        """Total compiled-specialization count of the admission-path jits
+        (a growth across a timed section means that sample paid a trace+
+        compile and must not feed the ``prefix_reuse`` controller)."""
+        fns = [self._prefill, self._insert]
+        if self.prefix_cache is not None:
+            fns += [self._gather, self._insert_at, self._prefill_suffix]
+        try:
+            return sum(f._cache_size() for f in fns)
+        except AttributeError:  # pragma: no cover - older/newer jax
+            return -1           # constant: comparison never skips a sample
+
+    def _prefill_full(self, i: int, prompt: np.ndarray):
+        """Cold path: run the whole prompt and insert at slot position 0."""
+        S = len(prompt)
+        pad = min(pad_to_bucket(S, minimum=self.min_prompt_pad), self.max_len)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :S] = prompt
+        k, v, logits = self._prefill(self.params, jnp.asarray(toks), jnp.int32(S))
+        self.cache = self._insert(self.cache, k, v, jnp.int32(i), jnp.int32(S))
+        first = int(np.asarray(jnp.argmax(logits[0])))
+        return first, k, v, 0
+
+    def _prefill_from_prefix(self, i: int, prompt: np.ndarray, handle):
+        """Warm path: gather the matched pages, prefill only the suffix.
+
+        Page ids are padded to a power-of-two count (bounded jit shapes);
+        padded columns sit past ``prefix_len`` and are masked inside the
+        suffix prefill.  Slot writes go prefix-then-suffix so any padded
+        prefix garbage in ``[prefix_len, P_pad)`` is overwritten or
+        masked by ``length``.
+        """
+        S = len(prompt)
+        P = handle.matched_len
+        bs = self.block_size
+        nb = P // bs
+        nb_pad = min(pad_to_bucket(nb, minimum=1), self.max_len // bs)
+        # pad by repeating a pinned id (gather_blocks contract: padded ids
+        # must be valid pages; matched > 0 guarantees at least one)
+        ids = np.asarray(
+            handle.block_ids + [handle.block_ids[0]] * (nb_pad - nb), np.int32)
+        pk, pv = self._gather(self.block_pool, jnp.asarray(ids))
+        sl = S - P
+        pad_s = min(pad_to_bucket(sl, minimum=self.min_prompt_pad),
+                    self.max_len - P)
+        toks = np.zeros((1, pad_s), np.int32)
+        toks[0, :sl] = prompt[P:]
+        k, v, logits = self._prefill_suffix(
+            self.params, jnp.asarray(toks), pk, pv, jnp.int32(P), jnp.int32(sl))
+        cache = self._insert_at(self.cache, pk, pv, jnp.int32(i), jnp.int32(0),
+                                jnp.int32(S))
+        self.cache = self._insert_at(cache, k, v, jnp.int32(i), jnp.int32(P),
+                                     jnp.int32(S))
+        first = int(np.asarray(jnp.argmax(logits[0])))
+        return first, k, v, P
+
+    def _cache_extend(self, req: Request, k_all, v_all, base: int) -> None:
+        """Insert the prompt's not-yet-cached full blocks into the tree
+        and copy their K/V pages (computed by this admission's prefill,
+        covering prompt positions ``[base, S)``) into the device pool."""
+        if self.prefix_cache is None:
+            return
+        fresh = self.prefix_cache.extend(req.cache_handle, req.prompt)
+        # one dispatch per fresh block: acceptable because it is paid only
+        # when a prefix is seen for the FIRST time (the paper's warm-up
+        # phase); a batched scatter would trade it for a jit
+        # specialization per distinct block count
+        for bid, start in fresh:
+            self.block_pool = self._write_block(
+                self.block_pool, k_all, v_all, jnp.int32(bid),
+                jnp.int32(start - base))
+        if fresh:
+            # fence the page writes: otherwise their device time leaks
+            # into the next decode step's timed VPE sample
+            jax.block_until_ready(self.block_pool)
 
     def _retire_if_done(self, i: int) -> None:
         slot = self.slots[i]
@@ -296,6 +476,12 @@ class ContinuousBatchingEngine:
         if len(req.out) >= req.max_new_tokens or hit_eos:
             req.done = True
             req.done_step = self.stats.decode_steps
+            req.done_t = time.perf_counter()
+            if req.cache_handle is not None:
+                # unpin: the slot holds its own KV copy, so the pages this
+                # request matched/inserted become evictable again
+                self.prefix_cache.release(req.cache_handle)
+                req.cache_handle = None
             self.completed.append(req)
             slot.req = None   # freed mid-decode; refilled next admission
 

@@ -1,0 +1,233 @@
+"""Shared-prefix KV cache: engine integration + greedy-parity proofs.
+
+The contract: the prefix cache must be *transparent* — generation with a
+warm cache hit is token-for-token identical to a cold prefill, across
+occupancy buckets, across the reuse/recompute policy axis, and across a
+mid-stream eviction of an unrelated entry.  (The paper's transparency
+bar: the runtime may reuse paid-for work only if the program cannot
+tell.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import VPE, prefix_len_bucket
+from repro.models import kvcache
+from repro.models import model
+from repro.runtime.prefix_cache import PrefixCache
+from repro.runtime.serve_loop import ContinuousBatchingEngine, Request, ServeLoop
+
+MAX_LEN = 128
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["qwen3-8b"].reduced()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def cold_greedy(cfg, params, prompt, max_new):
+    serve = ServeLoop(cfg, params, max_len=MAX_LEN, batch=1)
+    return [int(t) for t in serve.generate({"tokens": prompt[None, :]}, max_new)[0]]
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("prefix_blocks", 32)
+    kw.setdefault("block_size", 16)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+class TestWarmHitParity:
+    def test_warm_hit_matches_cold(self, setup):
+        """Second serving of a shared prefix reuses cached pages and still
+        produces the exact cold-prefill output."""
+        cfg, params = setup
+        rng = np.random.default_rng(0)
+        shared = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+        tails = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                 for n in (5, 9, 3)]
+        prompts = [np.concatenate([shared, t]) for t in tails]
+        refs = [cold_greedy(cfg, params, p, 6) for p in prompts]
+        eng = make_engine(cfg, params)
+        eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=6))
+        eng.run()  # cold pass populates the tree
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=10 + i, prompt=p, max_new_tokens=6))
+        done = sorted((r for r in eng.run() if r.rid >= 10), key=lambda r: r.rid)
+        assert len(done) == 3
+        for i, r in enumerate(done):
+            assert r.out == refs[i], f"warm request {i} diverged from cold"
+        assert eng.stats.prefix_hits >= 3
+        assert eng.stats.prefix_tokens_saved >= 3 * 48
+        assert "prefix-cache" in eng.stats.summary()
+        eng.prefix_cache.check()
+        assert eng.prefix_cache.total_refcount() == 0
+
+    def test_parity_across_occupancy_buckets(self, setup):
+        """Warm hits at 1-of-4 and 4-of-4 occupancy both match cold."""
+        cfg, params = setup
+        rng = np.random.default_rng(1)
+        shared = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        prompts = [np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, 4 + i).astype(np.int32)])
+            for i in range(4)]
+        refs = [cold_greedy(cfg, params, p, 5) for p in prompts]
+        eng = make_engine(cfg, params, slots=4)
+        # warm the cache at occupancy 1 (solo request)
+        eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=5))
+        eng.run()
+        (solo,) = (r for r in eng.completed if r.rid == 0)
+        assert solo.out == refs[0]
+        # all four at once: admissions at occupancy 1..4, all warm
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=10 + i, prompt=p, max_new_tokens=5))
+        done = sorted((r for r in eng.run() if r.rid >= 10), key=lambda r: r.rid)
+        for i, r in enumerate(done):
+            assert r.out == refs[i], f"occupancy-varied request {i} diverged"
+        assert eng.stats.prefix_hits >= 4
+
+    def test_parity_across_midstream_eviction(self, setup):
+        """Evicting an UNRELATED entry mid-generation cannot perturb a
+        live request — its own path is pinned, and its slot already holds
+        a private copy of the pages."""
+        cfg, params = setup
+        rng = np.random.default_rng(2)
+        a = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+        b = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+        ref = cold_greedy(cfg, params, a, 16)
+        eng = make_engine(cfg, params)
+        for rid, p in ((0, a), (1, b)):  # populate both entries
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=2))
+        eng.run()
+        blocks_before = eng.prefix_cache.live_blocks
+        assert blocks_before >= 4  # two 40-token prompts -> 2x2 full blocks
+        eng.submit(Request(rid=2, prompt=a, max_new_tokens=16))
+        for _ in range(4):  # admit (warm hit on a) + a few decode steps
+            assert eng.step()
+        live = next(s.req for s in eng.slots if s.req is not None)
+        pinned = set(live.cache_handle.block_ids)
+        evicted = eng.prefix_cache.evict(10 ** 6)  # drop everything unpinned
+        assert evicted > 0  # b's entry really was evicted mid-stream
+        assert not (pinned & set(eng.prefix_cache.free)), \
+            "pinned pages of the live request were freed"
+        done = [r for r in eng.run() if r.rid == 2]
+        assert done[0].out == ref, "mid-stream eviction changed live output"
+        eng.prefix_cache.check()
+        assert eng.prefix_cache.total_refcount() == 0
+
+    def test_recompute_variant_parity(self, setup):
+        """Forcing the ``prefix_reuse`` axis to "recompute" must serve the
+        identical output (policy changes dispatch, never results)."""
+        cfg, params = setup
+        rng = np.random.default_rng(3)
+        prompt = np.concatenate([
+            rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
+            rng.integers(0, cfg.vocab_size, 6).astype(np.int32)])
+        ref = cold_greedy(cfg, params, prompt, 5)
+        vpe = VPE()
+        eng = make_engine(cfg, params, vpe=vpe)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+        eng.run()
+        bucket = prefix_len_bucket(32)
+        vpe.controller.force("prefix_reuse", bucket, "recompute")
+        eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=5))
+        done = [r for r in eng.run() if r.rid == 1]
+        assert done[0].out == ref
+        # the hit was counted but no prefill work was skipped
+        assert eng.stats.prefix_hits >= 1
+        assert eng.stats.prefix_tokens_saved == 0
+
+
+class TestBlockPoolDevice:
+    def test_write_then_gather_roundtrip(self, setup):
+        cfg, _ = setup
+        L, Hkv, bs, D = cfg.num_layers, cfg.num_kv_heads, 8, cfg.head_dim
+        pool = kvcache.init_block_pool(4, L, Hkv, bs, D, dtype=jnp.float32)
+        rng = np.random.default_rng(0)
+        k = rng.standard_normal((L, 1, Hkv, 24, D)).astype(np.float32)
+        v = rng.standard_normal((L, 1, Hkv, 24, D)).astype(np.float32)
+        # write tokens [8, 16) into page 2 and [16, 24) into page 0
+        pool = kvcache.write_block(pool, k, v, 2, 8, bs)
+        pool = kvcache.write_block(pool, k, v, 0, 16, bs)
+        gk, gv = kvcache.gather_blocks(pool, jnp.asarray([2, 0], np.int32))
+        assert gk.shape == (L, 1, Hkv, 2 * bs, D)
+        np.testing.assert_array_equal(np.asarray(gk), k[:, :, :, 8:24])
+        np.testing.assert_array_equal(np.asarray(gv), v[:, :, :, 8:24])
+
+    def test_insert_slot_kv_at_offset(self):
+        cache = kvcache.init_kv_cache(2, 3, 2, 32, 4, dtype=jnp.float32,
+                                      per_slot=True)
+        rng = np.random.default_rng(1)
+        part = rng.standard_normal((2, 1, 2, 8, 4)).astype(np.float32)
+        out = kvcache.insert_slot_kv_at(
+            cache, jnp.asarray(part), jnp.asarray(part), jnp.int32(1),
+            jnp.int32(16), jnp.int32(24))
+        got = np.asarray(out["k"][:, 1])
+        np.testing.assert_array_equal(got[:, :, 16:24], part[:, 0])
+        assert np.all(got[:, :, :16] == 0)
+        assert int(out["length"][1]) == 24
+        assert int(out["length"][0]) == 0
+
+
+class TestPrefixReuseAxis:
+    def test_controller_trials_reuse_policy(self, setup):
+        """Enough warm admissions in one matched-length bucket make the
+        controller blind-trial "recompute" and conclude with a measured
+        keep-or-revert — the paper loop on the memory-reuse axis."""
+        cfg, params = setup
+        rng = np.random.default_rng(4)
+        shared = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        vpe = VPE(controller_kwargs=dict(min_samples=2, trial_samples=2))
+        eng = make_engine(cfg, params, vpe=vpe, prefix_blocks=16)
+        for i in range(10):
+            tail = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+            eng.submit(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                               max_new_tokens=2))
+        eng.run()
+        bucket = prefix_len_bucket(64)
+        d = vpe.controller.decision("prefix_reuse", bucket)
+        assert set(d.tried) == {"reuse", "recompute"}
+        events = [e for e, _, _ in d.history]
+        assert "trial" in events
+        assert ("switch" in events) or ("revert" in events)
+
+    def test_disabled_cache_untouched_behavior(self, setup):
+        """prefix_blocks=0 keeps the exact pre-cache admission path."""
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+        ref = cold_greedy(cfg, params, prompt, 4)
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=MAX_LEN)
+        assert eng.prefix_cache is None
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+        (r,) = eng.run()
+        assert r.out == ref
+        assert eng.stats.prefix_lookups == 0
+        assert "prefix-cache" not in eng.stats.summary()
+
+
+class TestHandleLifecycle:
+    def test_no_leaked_pins_after_drain(self, setup):
+        cfg, params = setup
+        rng = np.random.default_rng(6)
+        shared = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        eng = make_engine(cfg, params, prefix_blocks=8)
+        for i in range(6):
+            tail = rng.integers(0, cfg.vocab_size, 3 + i).astype(np.int32)
+            eng.submit(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                               max_new_tokens=1 + i % 3))
+        done = eng.run()
+        assert len(done) == 6
+        assert all(s.free for s in eng.slots)
+        assert all(r.cache_handle is None for r in done)
+        eng.prefix_cache.check()
+        assert eng.prefix_cache.total_refcount() == 0
+        # full drain: every page is evictable once nothing is pinned
+        eng.prefix_cache.evict(10 ** 6)
+        assert eng.prefix_cache.live_blocks == 0

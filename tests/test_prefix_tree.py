@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) for the radix-tree prefix cache.
+
+The tree is pure host-side bookkeeping (no device arrays), so random
+insert/match/evict/release sequences can be driven hard and cheaply.
+Invariants under test, after EVERY operation:
+
+* refcounts never go negative;
+* pinned blocks are never evicted (a held handle's pages stay allocated);
+* a matched prefix is always a true token-prefix of the query and a
+  multiple of ``block_size``;
+* allocated + free == pool size — no block is ever leaked or
+  double-freed, total blocks never exceed the pool.
+
+Degrades to a skip when hypothesis is not installed (optional ``test``
+extra), as in ``tests/test_properties.py``.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.prefix_cache import PrefixCache
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+BS = 4  # small block size so short random prompts still share blocks
+
+# tiny alphabet + short lengths force heavy prefix collisions
+prompts = st.lists(st.integers(0, 2), min_size=1, max_size=18)
+
+
+def token_path(handle):
+    out = []
+    for n in handle.nodes:
+        out.extend(n.tokens)
+    return out
+
+
+class TestMatchIsTruePrefix:
+    @given(st.lists(prompts, min_size=1, max_size=8))
+    def test_match_returns_token_prefix(self, batch):
+        # pool sized so no insert can trigger eviction (8 prompts x <= 4
+        # full blocks) — the every-full-block-hits claim needs that
+        cache = PrefixCache(num_blocks=64, block_size=BS)
+        for toks in batch:
+            h = cache.acquire(toks)
+            cache.extend(h, toks)
+            cache.release(h)
+            cache.check()
+        for toks in batch:
+            h = cache.acquire(toks)
+            assert h.matched_len % BS == 0
+            assert h.matched_len <= len(toks)
+            assert token_path(h) == [int(t) for t in toks[:h.matched_len]]
+            # every full block of a previously inserted prompt must hit
+            assert h.matched_len == (len(toks) // BS) * BS
+            cache.release(h)
+            cache.check()
+
+    @given(prompts, st.integers(0, 18))
+    def test_max_match_cap_respected(self, toks, cap):
+        cache = PrefixCache(num_blocks=16, block_size=BS)
+        h = cache.acquire(toks)
+        cache.extend(h, toks)
+        cache.release(h)
+        h2 = cache.acquire(toks, max_match=cap)
+        assert h2.matched_len <= cap
+        assert h2.matched_len % BS == 0
+        cache.release(h2)
+        cache.check()
+
+
+class TestRandomSoakSequences:
+    @given(st.data())
+    def test_invariants_under_random_ops(self, data):
+        cache = PrefixCache(num_blocks=8, block_size=BS)
+        held = []
+        n_ops = data.draw(st.integers(1, 40), label="n_ops")
+        for _ in range(n_ops):
+            op = data.draw(st.sampled_from(
+                ["acquire", "extend", "release", "evict"]), label="op")
+            if op == "acquire":
+                toks = data.draw(prompts, label="toks")
+                held.append((cache.acquire(toks), toks))
+            elif op == "extend" and held:
+                h, toks = held[data.draw(
+                    st.integers(0, len(held) - 1), label="which")]
+                cache.extend(h, toks)
+            elif op == "release" and held:
+                idx = data.draw(st.integers(0, len(held) - 1), label="rel")
+                h, _ = held.pop(idx)
+                cache.release(h)
+            elif op == "evict":
+                cache.evict(data.draw(st.integers(1, 8), label="n_evict"))
+            cache.check()
+            assert cache.live_blocks <= cache.num_blocks
+            # pinned pages can never be on the free list
+            for h, _ in held:
+                assert not (set(h.block_ids) & set(cache.free)), \
+                    "pinned block was evicted/freed"
+        for h, _ in held:
+            cache.release(h)
+        cache.check()
+        assert cache.total_refcount() == 0
+        # with zero pins, everything must be evictable: full drain leaks
+        # nothing
+        cache.evict(cache.num_blocks + 1)
+        assert cache.live_blocks == 0
+        assert sorted(cache.free) == list(range(cache.num_blocks))
+
+    @given(st.lists(prompts, min_size=1, max_size=6))
+    def test_pinned_survive_full_eviction(self, batch):
+        cache = PrefixCache(num_blocks=32, block_size=BS)
+        # insert everything, keep the FIRST prompt pinned
+        first = batch[0]
+        h0 = cache.acquire(first)
+        cache.extend(h0, first)
+        for toks in batch[1:]:
+            h = cache.acquire(toks)
+            cache.extend(h, toks)
+            cache.release(h)
+        pinned_ids = set(h0.block_ids)
+        cache.evict(cache.num_blocks + 1)
+        cache.check()
+        # the pinned path is fully intact: a re-match still finds it
+        h1 = cache.acquire(first, max_match=len(h0.nodes) * BS)
+        assert set(h1.block_ids) == pinned_ids
+        cache.release(h0)
+        cache.release(h1)
+        cache.check()
+        assert cache.total_refcount() == 0
+
+
+class TestPoolExhaustion:
+    @given(st.lists(prompts, min_size=1, max_size=10))
+    def test_never_exceeds_pool_and_degrades_gracefully(self, batch):
+        cache = PrefixCache(num_blocks=2, block_size=BS)  # starved pool
+        for toks in batch:
+            h = cache.acquire(toks)
+            fresh = cache.extend(h, toks)  # may insert 0..2 blocks
+            assert len(fresh) <= cache.num_blocks
+            cache.check()
+            cache.release(h)
+        cache.check()
+        assert cache.live_blocks <= 2
