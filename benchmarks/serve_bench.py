@@ -1,7 +1,18 @@
-# Wave vs continuous batching + prefix-cache TTFT. CSV + one JSON line.
-"""Serving benchmark: wave vs continuous batching, and prefix-cache TTFT.
+# Wave vs continuous batching + prefix-cache TTFT + paged admission. CSV+JSON.
+"""Serving benchmark: wave vs continuous batching, prefix-cache TTFT, and
+paged-vs-contiguous admission cost.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+
+Part 3 — long-shared-prefix admission (the paged layout's raison
+d'être): a cached system prompt of 1k..8k tokens, warm admissions with
+a short tail.  The contiguous layout must gather the matched pages and
+COPY them into the slot's KV region — O(matched length); the paged
+layout aliases them into the slot's block table — O(1).  The engine's
+``kv_place_s`` stat isolates exactly that placement span, so the
+benchmark's pass criterion is the asymptotic *shape*: flat for paged
+across 1k->8k matched tokens, growing for contiguous.  Appended to
+BENCH_serve.json like every other record (the trajectory accumulates).
 
 Part 1 — wave vs continuous: mixed prompt lengths (4..24) and strongly
 mixed output lengths (short interactive turns interleaved with long
@@ -164,6 +175,111 @@ def bench_prefix_cache(cfg, params, n_requests: int) -> bool:
     return ok
 
 
+# paged-admission bench: matched lengths swept at fixed tail length
+ADMIT_MATCHED = [1024, 2048, 4096, 8192]
+ADMIT_BLOCK = 64            # bigger pages at this scale: 8k = 128 pages
+ADMIT_TAIL = 8
+ADMIT_REPS = 8
+
+
+def _seed_template(eng: ContinuousBatchingEngine, template: np.ndarray) -> None:
+    """Install a template's full blocks into the engine's prefix tree
+    WITHOUT serving it: an 8k cold prefill is quadratic in the prompt on
+    the CPU reference path, and the admission measurement only needs the
+    tree topology + device pages to exist (their values don't affect
+    placement wall time)."""
+    h = eng.prefix_cache.acquire(template)
+    eng.prefix_cache.extend(h, template)
+    eng.prefix_cache.release(h)
+
+
+def bench_paged_admission(cfg, params) -> bool:
+    """Warm-admission placement cost vs matched prefix length."""
+    rng = np.random.default_rng(2)
+    results: dict = {}
+    for layout in ("contiguous", "paged"):
+        for matched in ADMIT_MATCHED:
+            template = rng.integers(0, cfg.vocab_size, matched).astype(np.int32)
+            # slots are provisioned for the workload (prompt + headroom),
+            # as a deployment would: the contiguous slot region — and
+            # therefore its admission copy-in — scales with it, the
+            # paged block table costs the same few hundred ids either way
+            max_len = matched + 2 * ADMIT_BLOCK
+            eng = ContinuousBatchingEngine(
+                cfg, params, slots=1, max_len=max_len,
+                prefix_blocks=matched // ADMIT_BLOCK + 4,
+                block_size=ADMIT_BLOCK, kv_layout=layout)
+            _seed_template(eng, template)
+
+            def burst(n):
+                for i in range(n):
+                    tail = rng.integers(0, cfg.vocab_size,
+                                        ADMIT_TAIL).astype(np.int32)
+                    eng.submit(Request(rid=i, prompt=np.concatenate(
+                        [template, tail]), max_new_tokens=1))
+                eng.run()
+
+            burst(2)                      # jit warm-up at this shape
+            eng.stats = type(eng.stats)()
+            burst(ADMIT_REPS)
+            assert eng.stats.prefix_hits == ADMIT_REPS
+            # min over reps: placement is deterministic work, so the
+            # floor is the measurement and everything above it is
+            # scheduler noise (medians wobble on a loaded host)
+            place_us = float(np.min(eng.stats.kv_place_s) * 1e6)
+            ttft_ms = percentile(eng.stats.ttft_s, 50) * 1e3
+            results.setdefault(str(matched), {})[layout] = {
+                "kv_place_us": round(place_us, 1),
+                "ttft_p50_ms": round(ttft_ms, 2),
+            }
+            print(f"# admission {layout:>10} matched={matched:5d}: "
+                  f"place {place_us:9.1f}us, ttft p50 {ttft_ms:7.2f}ms")
+    lo, hi = str(ADMIT_MATCHED[0]), str(ADMIT_MATCHED[-1])
+    paged_growth = (results[hi]["paged"]["kv_place_us"]
+                    / results[lo]["paged"]["kv_place_us"])
+    contig_growth = (results[hi]["contiguous"]["kv_place_us"]
+                     / results[lo]["contiguous"]["kv_place_us"])
+    speedup_8k = (results[hi]["contiguous"]["kv_place_us"]
+                  / results[hi]["paged"]["kv_place_us"])
+    # asymptotic shape via least-squares MARGINAL cost (us per matched
+    # token) — endpoint ratios are polluted by the ~ms fixed dispatch
+    # overhead both layouts pay, slopes are not
+    xs = np.asarray(ADMIT_MATCHED, np.float64)
+    slope = {
+        layout: float(np.polyfit(
+            xs, [results[str(m)][layout]["kv_place_us"]
+                 for m in ADMIT_MATCHED], 1)[0])
+        for layout in ("contiguous", "paged")
+    }
+    slope_ratio = slope["contiguous"] / max(slope["paged"], 1e-4)
+    # O(1) vs O(matched): paged must stay ~flat across the 8x sweep while
+    # the contiguous marginal cost is at least 5x steeper; thresholds are
+    # deliberately loose so scheduler noise can't flip the verdict
+    ok = paged_growth < 2.0 and slope_ratio > 5.0 and speedup_8k > 2.0
+    record = {
+        "bench": "serve_paged_admission",
+        "block_size": ADMIT_BLOCK,
+        "tail_len": ADMIT_TAIL,
+        "matched": results,
+        "paged_growth_1k_to_8k": round(paged_growth, 2),
+        "contiguous_growth_1k_to_8k": round(contig_growth, 2),
+        "us_per_matched_token": {k: round(v, 4) for k, v in slope.items()},
+        "marginal_cost_ratio": round(slope_ratio, 1),
+        "kv_place_speedup_at_8k": round(speedup_8k, 2),
+        "pass": ok,
+    }
+    line = json.dumps(record, sort_keys=True)
+    print(line)
+    with open(BENCH_JSON, "a") as f:  # append: the trajectory accumulates
+        f.write(line + "\n")
+    print(f"# paged admission: paged growth {paged_growth:.2f}x (flat), "
+          f"marginal cost {slope['contiguous']:.3f} vs "
+          f"{slope['paged']:.3f} us/tok ({slope_ratio:.0f}x steeper), "
+          f"8k placement speedup {speedup_8k:.1f}x "
+          f"({'PASS' if ok else 'FAIL'})")
+    return ok
+
+
 def main(n_requests: int = 24) -> None:
     cfg = get_config("qwen3-8b").reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -194,7 +310,8 @@ def main(n_requests: int = 24) -> None:
           f"({'PASS' if ok else 'FAIL'}: continuous must win on "
           f"mixed-length workloads)")
     ok_prefix = bench_prefix_cache(cfg, params, n_requests)
-    if not (ok and ok_prefix):
+    ok_paged = bench_paged_admission(cfg, params)
+    if not (ok and ok_prefix and ok_paged):
         sys.exit(1)
 
 

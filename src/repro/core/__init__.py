@@ -19,8 +19,8 @@ from .dispatch import DEFAULT, VPE, VPEFunction
 from .profiler import Profiler, SampleSet, Welford
 from .registry import GLOBAL, OpEntry, Registry, Variant, reset_global
 from .shape_class import (
-    bucket_label, occupancy_bucket, pad_to_bucket, prefix_len_bucket,
-    shape_bucket)
+    bucket_label, kv_layout_bucket, occupancy_bucket, pad_to_bucket,
+    prefix_len_bucket, shape_bucket)
 
 __all__ = [
     "VPE",
@@ -41,4 +41,5 @@ __all__ = [
     "occupancy_bucket",
     "pad_to_bucket",
     "prefix_len_bucket",
+    "kv_layout_bucket",
 ]

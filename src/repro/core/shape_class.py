@@ -63,6 +63,10 @@ def bucket_label(bucket: Tuple) -> str:
         if b == 0:
             return "plen0"
         return f"plen[{2 ** (b - 1)},{2 ** b})tok"
+    if bucket and bucket[0] == "kvl":
+        _, pb, level, total = bucket
+        plen = "plen0" if pb == 0 else f"plen[{2 ** (pb - 1)},{2 ** pb})"
+        return f"{plen}xocc{level}/{total}slots"
     b, ranks = bucket
     lo, hi = 2 ** b, 2 ** (b + 1)
     return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}"
@@ -96,6 +100,23 @@ def prefix_len_bucket(matched: int) -> Tuple:
     if matched <= 0:
         return ("plen", 0)
     return ("plen", int(math.floor(math.log2(matched))) + 1)
+
+
+def kv_layout_bucket(matched: int, active: int, total: int, *,
+                     levels: int = 4) -> Tuple:
+    """Dispatch key for the serve engine's ``kv_layout`` axis.
+
+    Whether block-table indirection (paged) beats a contiguous slot
+    region depends on BOTH how much cached prefix the admission can
+    alias (long match -> aliasing saves a long copy) and how busy the
+    pool is (the gather tax of indirection is amortized differently per
+    occupancy), so the decision is keyed by the cross product of the
+    two existing bucketings — the paper's decision-tree-on-input-size
+    with a two-dimensional input.
+    """
+    p = prefix_len_bucket(matched)
+    o = occupancy_bucket(active, total, levels=levels)
+    return ("kvl", p[1], o[1], total)
 
 
 def pad_to_bucket(n: int, *, minimum: int = 16) -> int:

@@ -3,6 +3,9 @@
 matmul          — the paper's MatrixMult row (31.9x on DSP)
 conv2d          — the paper's Convolution row / image-pipeline demo
 flash_attention — the matmul-class hot-spot of the assigned LM archs
+paged_attention — block-indirect decode attention for the paged KV
+                  layout (scalar-prefetch block tables; reads pages in
+                  place instead of linearizing them)
 
 Each kernel ships with a pure-jnp oracle in ref.py and a shape-hygienic
 jit wrapper in ops.py.  Validation: interpret=True allclose sweeps in
@@ -13,6 +16,7 @@ from . import ops, ref
 from .conv2d import conv2d_pallas
 from .flash_attention import flash_attention_pallas
 from .matmul import matmul_pallas
+from .paged_attention import paged_attention_pallas
 
 __all__ = [
     "ops",
@@ -20,4 +24,5 @@ __all__ = [
     "matmul_pallas",
     "conv2d_pallas",
     "flash_attention_pallas",
+    "paged_attention_pallas",
 ]

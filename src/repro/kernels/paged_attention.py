@@ -1,0 +1,160 @@
+"""Paged decode attention — block-indirect KV reads for the serve engine.
+
+The paged KV layout (models/kvcache.py, runtime/serve_loop.py) stores
+every sequence as a *block table* of page ids into one shared pool, so
+that prefix-cache admission can alias cached pages instead of copying
+them.  Its decode read is this kernel's job: attend one query position
+per sequence against that sequence's pages, **in place** — the page id
+indirection happens in the BlockSpec index map, so no (B, T, D)
+linearized copy of the KV ever exists in HBM.  (The jnp data path the
+engine uses on CPU — ``kvcache.paged_gather_layer`` + the stock decode
+attention — materializes exactly that copy; this kernel is what removes
+it on a real TPU.)
+
+Mechanics:
+
+* the block table and per-sequence lengths ride in as **scalar
+  prefetch** operands (``pltpu.PrefetchScalarGridSpec``): they are
+  available before the body runs, which is what lets the K/V BlockSpec
+  index maps compute ``page = block_table[b, j]`` and DMA the right
+  page of the pool for grid step ``(b, h, j)``;
+* grid (B, Hkv, nb) with the page dimension innermost and sequential
+  ("arbitrary"), so the online-softmax running max / denominator /
+  accumulator live in VMEM scratch across pages — the same recurrence
+  as kernels/flash_attention.py, with GQA expressed by loading all
+  ``Hq // Hkv`` query heads of a KV head per step;
+* pages past ``lengths[b]`` are masked; whole pages outside the causal
+  or sliding-window range are skipped via ``pl.when`` (block sparsity —
+  for SWA archs only O(window / page_size) pages are touched).
+
+Numerics: f32 accumulation throughout, validated against
+``kernels.ref.paged_attention_ref`` (which is itself exact vs the
+contiguous decode attention on identically-valued pages).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .compat import CompilerParams
+
+_NEG_INF = float("-inf")
+
+
+def _pa_kernel(
+    bt_ref, len_ref,            # scalar prefetch: (B, nb) pages, (B,) lengths
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, bs: int, nb: int, window: Optional[int], scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    col = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                      # (G, bs)
+        mask = col <= length                           # causal incl. self
+        if window is not None:
+            mask &= col > length - window
+        s = jnp.where(mask[None, :], s, _NEG_INF)
+        m_prev = m_ref[...]                            # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.where(m_new == _NEG_INF, 0.0, jnp.exp(s - m_new))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # block sparsity: skip pages entirely past the causal frontier (and,
+    # for SWA, entirely before the window)
+    live = j * bs <= length
+    if window is not None:
+        live &= (j * bs + bs - 1) > length - window
+    pl.when(live)(body)
+
+    @pl.when(j == nb - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret"))
+def paged_attention_pallas(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, Hq, 1, D); k_pool/v_pool: (N, Hkv, bs, D) one layer of the
+    paged pool; block_tables: (B, nb) int32; lengths: (B,) int32 (the
+    position being decoded).  Returns (B, Hq, 1, D).
+
+    ``interpret=True`` runs the kernel body in python on CPU (this
+    container); a real TPU deployment passes interpret=False — the
+    indirect BlockSpec then turns into per-page DMA.
+    """
+    B, Hq, S, D = q.shape
+    N, Hkv, bs, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    assert S == 1, "paged decode attention is single-position"
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    q4 = q.reshape(B, Hkv, group, D)
+    kernel = functools.partial(
+        _pa_kernel, bs=bs, nb=nb, window=window, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            # the paged read: grid step (b, h, j) DMAs pool page
+            # block_tables[b, j] — indirection via scalar prefetch
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, j, bt, ln: (bt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, j, bt, ln: (bt[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, j, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables, lengths, q4, k_pool, v_pool)
+    return out.reshape(B, Hq, 1, D)

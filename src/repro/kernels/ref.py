@@ -38,6 +38,54 @@ def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     return out[0, 0].astype(x.dtype)
 
 
+def paged_attention_ref(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-position decode attention through block tables (oracle).
+
+    q: (B, Hq, 1, D); k_pool/v_pool: (N, Hkv, bs, D) — ONE layer of the
+    paged KV pool; block_tables: (B, nb) page ids per sequence;
+    lengths: (B,) the position of the token being decoded.  Gathered
+    column ``t`` of sequence ``b`` is page ``block_tables[b, t // bs]``
+    offset ``t % bs`` — absolute position ``t`` — and positions
+    ``> lengths[b]`` (or outside the sliding window) are masked.  This
+    materializes the gather; the Pallas kernel in paged_attention.py
+    computes the same function reading pages in place.
+    """
+    B, Hq, S, D = q.shape
+    N, Hkv, bs, _ = k_pool.shape
+    assert S == 1 and Hq % Hkv == 0
+    nb = block_tables.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    def lin(pool):
+        g = pool[block_tables]                    # (B, nb, Hkv, bs, D)
+        return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, nb * bs, D)
+
+    k, v = lin(k_pool), lin(v_pool)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    col = jnp.arange(nb * bs)[None, :]
+    mask = col <= lengths[:, None]
+    if window is not None:
+        mask &= col > lengths[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def attention_ref(
     q: jax.Array,
     k: jax.Array,

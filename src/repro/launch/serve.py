@@ -35,7 +35,13 @@ def main() -> None:
     ap.add_argument("--prefix-blocks", type=int, default=64,
                     help="KV page pool size for --prefix-cache")
     ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per KV page for --prefix-cache")
+                    help="tokens per KV page for --prefix-cache/--kv-layout")
+    ap.add_argument("--kv-layout", choices=["contiguous", "paged", "auto"],
+                    default="contiguous",
+                    help="slot KV layout: contiguous per-slot regions, "
+                         "paged block tables over the unified page pool "
+                         "(O(1) prefix admission), or auto — a VPE axis "
+                         "measured per matched-length x occupancy bucket")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,7 +57,7 @@ def main() -> None:
         engine = ContinuousBatchingEngine(
             cfg, params, slots=args.batch, max_len=args.max_len, vpe=VPE(),
             prefix_blocks=args.prefix_blocks if args.prefix_cache else 0,
-            block_size=args.block_size)
+            block_size=args.block_size, kv_layout=args.kv_layout)
         for r in reqs:
             engine.submit(r)
         done = engine.run()

@@ -30,10 +30,15 @@ import jax.numpy as jnp
 
 Cache = Dict[str, jax.Array]
 
+# storage dtype of the serving KV caches (narrower than compute: the
+# cast happens once at insert time — and the paged layout reproduces it
+# at gather time, so both layouts read identical values)
+SLOT_CACHE_DTYPE = jnp.bfloat16
+
 
 def init_kv_cache(
     num_layers: int, batch: int, num_kv_heads: int, max_len: int, head_dim: int,
-    dtype=jnp.bfloat16, *, per_slot: bool = False,
+    dtype=SLOT_CACHE_DTYPE, *, per_slot: bool = False,
 ) -> Cache:
     shape = (num_layers, batch, num_kv_heads, max_len, head_dim)
     lshape = (batch,) if per_slot else ()
@@ -132,7 +137,9 @@ def insert_slot_kv_at(
     k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), start)
     v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), start)
     length = cache["length"].at[slot].set(jnp.asarray(true_len, jnp.int32))
-    return {"k": k, "v": v, "length": length}
+    # preserve any layout-extension keys (kv_layout="auto" carries the
+    # paged block table "bt" alongside the contiguous arrays)
+    return {**cache, "k": k, "v": v, "length": length}
 
 
 # -- block-granular KV page pool (shared-prefix cache) ------------------------
@@ -181,6 +188,150 @@ def gather_blocks(pool: Cache, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
         nb, L, Hkv, bs, D = g.shape
         return g.transpose(1, 2, 0, 3, 4).reshape(L, Hkv, nb * bs, D)[:, None]
     return take(pool["k"]), take(pool["v"])
+
+
+# -- paged (block-indirect) KV layout ----------------------------------------
+#
+# The unified page pool behind the paged KV layout: ONE id space shared
+# by the radix tree's cached prefixes and live decode slots' block
+# tables (host bookkeeping in runtime/page_pool.py).  Layout is
+# LAYER-major — (L, N, Hkv, block_size, D) — unlike the PR 2 prefix
+# pool's (N, L, ...): the decode step scans over layers, and a leading
+# L axis lets the scan unstack per-layer pool slices without a
+# whole-pool transpose per token.  The last row (index N-1 of the array,
+# id ``num_pages`` of the allocator) is the TRASH page: free slots'
+# garbage decode writes are redirected there so a scatter can run for
+# the whole slot batch unconditionally.
+
+def init_page_pool(
+    num_pages: int, num_layers: int, num_kv_heads: int, block_size: int,
+    head_dim: int, dtype=jnp.float32,
+) -> Cache:
+    """Unified paged pool: {"k","v"}: (L, num_pages + 1, Hkv, bs, D).
+
+    ``dtype`` must be the model's COMPUTE dtype, exactly like the PR 2
+    prefix pool: a warm suffix prefill must see bit-identical prefix
+    K/V to what a cold full prefill would compute.  Decode reads are
+    cast to the (possibly narrower) slot-cache dtype at gather time
+    (see :func:`paged_gather_layer`), which reproduces the contiguous
+    layout's insert-time cast — both parities (warm prefill AND decode)
+    are structural, not empirical.  The memory price of the wider pool
+    is the same one PR 2 already accepted for cached prefixes.
+    """
+    shape = (num_layers, num_pages + 1, num_kv_heads, block_size, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gather_pages(pool: Cache, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Gather pages ``ids`` (nb,) from the layer-major pool.
+
+    Returns (k, v) of shape (L, 1, Hkv, nb*block_size, D) — identical
+    layout and values to :func:`gather_blocks` on the PR 2 pool, so the
+    suffix prefill jit is shared between layouts (and its numerics are
+    bitwise identical for identical page contents).  ``ids`` may be
+    padded by repeating any valid id; padded columns land past the true
+    prefix length and are masked by the caller.
+    """
+    def take(p):
+        g = p[:, ids]                             # (L, nb, Hkv, bs, D)
+        L, nb, Hkv, bs, D = g.shape
+        return g.transpose(0, 2, 1, 3, 4).reshape(L, Hkv, nb * bs, D)[:, None]
+    return take(pool["k"]), take(pool["v"])
+
+
+def write_pages(
+    pool: Cache, k_src: jax.Array, v_src: jax.Array, ids: jax.Array,
+    starts: jax.Array, base: jax.Array, valid_len: jax.Array,
+) -> Cache:
+    """Masked scatter of prefill K/V into pages — ONE dispatch per admission.
+
+    k_src/v_src: (L, 1, Hkv, S_pad, D) stacked K/V covering prompt
+    positions ``[base, base + S_pad)``; ``ids`` (nb,): target page ids
+    (pad with the trash id — duplicate trash entries are harmless);
+    ``starts`` (nb,): each page's absolute token start (block-aligned);
+    ``valid_len``: number of REAL source positions (tokens past it are
+    bucket padding).  For each page, columns whose absolute position
+    falls outside ``[base, base + valid_len)`` keep their existing pool
+    content — that is what makes the same dispatch serve full blocks,
+    the copy-on-write tail block (written from ``base`` mid-block), and
+    the final partial block.
+    """
+    bs = pool["k"].shape[3]
+    src = starts[:, None] + jnp.arange(bs)[None, :] - base     # (nb, bs)
+    valid = (src >= 0) & (src < valid_len)
+    idx = jnp.clip(src, 0, k_src.shape[3] - 1)
+    sel = valid[None, :, None, :, None]
+
+    def put(pool_arr, src_arr):
+        vals = src_arr[:, 0][:, :, idx]            # (L, Hkv, nb, bs, D)
+        vals = vals.transpose(0, 2, 1, 3, 4).astype(pool_arr.dtype)
+        old = pool_arr[:, ids]                     # (L, nb, Hkv, bs, D)
+        return pool_arr.at[:, ids].set(jnp.where(sel, vals, old))
+
+    return {"k": put(pool["k"], k_src), "v": put(pool["v"], v_src)}
+
+
+def copy_page(pool: Cache, src: jax.Array, dst: jax.Array) -> Cache:
+    """Copy-on-write: duplicate page ``src`` into ``dst`` (all layers)."""
+    return {
+        "k": pool["k"].at[:, dst].set(pool["k"][:, src]),
+        "v": pool["v"].at[:, dst].set(pool["v"][:, src]),
+    }
+
+
+def paged_gather_layer(pool_k_l: jax.Array, pool_v_l: jax.Array,
+                       block_table: jax.Array,
+                       out_dtype=None) -> Tuple[jax.Array, jax.Array]:
+    """Linearize one layer's pages through block tables.
+
+    pool_k_l/pool_v_l: (N, Hkv, bs, D) (one layer of the pool);
+    block_table: (B, nb) page ids per slot.  Returns (B, Hkv, nb*bs, D)
+    views where gathered column ``t`` holds absolute position ``t`` —
+    the layout :func:`decode_attention` expects, so the contiguous
+    decode-attention variants apply unchanged after the gather.  (This
+    is the jnp reference data path; the Pallas kernel in
+    ``kernels/paged_attention.py`` reads pages in place instead.)
+
+    ``out_dtype``: the decode step passes the SLOT-CACHE dtype here.
+    Pages are stored in the compute dtype (exact — warm suffix prefills
+    must see bit-identical prefix K/V to a cold prefill, the PR 2
+    rule), so casting the *read* to the slot-cache dtype reproduces
+    exactly what the contiguous layout stored at insert time — that
+    round-trip equality is what makes the two layouts' decode attention
+    bitwise identical rather than merely close.
+    """
+    def take(p):
+        g = p[block_table]                         # (B, nb, Hkv, bs, D)
+        B, nb, Hkv, bs, D = g.shape
+        g = g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, nb * bs, D)
+        return g if out_dtype is None else g.astype(out_dtype)
+    return take(pool_k_l), take(pool_v_l)
+
+
+def append_token_paged(
+    pool_k_l: jax.Array, pool_v_l: jax.Array, k_new: jax.Array,
+    v_new: jax.Array, block_table: jax.Array, length: jax.Array,
+    live: jax.Array, trash: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Write one decode step's K/V into each slot's tail page (one layer).
+
+    k_new/v_new: (B, Hkv, 1, D); ``length`` (B,) is each slot's current
+    position.  Non-live slots are redirected to the trash page — their
+    block tables may still point at pages that were freed and
+    reallocated to other slots, and a stale write there would corrupt a
+    live request.  The engine guarantees a live slot's tail page is
+    private (copy-on-write at admission), so the scatter never collides
+    across live slots.
+    """
+    B = k_new.shape[0]
+    bs = pool_k_l.shape[2]
+    nb = block_table.shape[1]
+    col = jnp.clip(length // bs, 0, nb - 1)
+    page = jnp.where(live > 0, block_table[jnp.arange(B), col], trash)
+    off = length % bs
+    k_out = pool_k_l.at[page, :, off].set(k_new[:, :, 0].astype(pool_k_l.dtype))
+    v_out = pool_v_l.at[page, :, off].set(v_new[:, :, 0].astype(pool_v_l.dtype))
+    return k_out, v_out
 
 
 def decode_attention(

@@ -153,6 +153,36 @@ def decode_step_slots(cfg: ModelConfig, params: Any, cache: Any,
                                          decode_impl=decode_impl)
 
 
+# -- paged (block-indirect) KV layout ----------------------------------------
+
+def init_page_pool(cfg: ModelConfig, num_pages: int, block_size: int) -> Any:
+    return _slot_module(cfg).init_page_pool(cfg, num_pages, block_size)
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
+                     block_size: int, trash: int) -> Any:
+    return _slot_module(cfg).init_paged_cache(cfg, slots, max_len,
+                                              block_size, trash)
+
+
+def decode_step_paged(cfg: ModelConfig, params: Any, pool: Any, cache: Any,
+                      tokens: jax.Array, live: jax.Array,
+                      decode_impl: str = "grouped"
+                      ) -> Tuple[Any, Any, jax.Array]:
+    return _slot_module(cfg).decode_step_paged(cfg, params, pool, cache,
+                                               tokens, live,
+                                               decode_impl=decode_impl)
+
+
+def decode_step_mixed(cfg: ModelConfig, params: Any, cache: Any, pool: Any,
+                      tokens: jax.Array, use_paged: jax.Array,
+                      live: jax.Array, decode_impl: str = "grouped"
+                      ) -> Tuple[Any, Any, jax.Array]:
+    return _slot_module(cfg).decode_step_mixed(cfg, params, cache, pool,
+                                               tokens, use_paged, live,
+                                               decode_impl=decode_impl)
+
+
 def prefill(cfg: ModelConfig, params: Any, batch: Dict[str, jax.Array], cache: Any
             ) -> Tuple[Any, jax.Array]:
     """Prompt processing.  Families without a fused prefill path replay

@@ -176,6 +176,31 @@ def init_slot_cache(cfg: ModelConfig, slots: int, max_len: int):
         per_slot=True)
 
 
+def init_page_pool(cfg: ModelConfig, num_pages: int, block_size: int):
+    """Unified paged KV pool (+1 trash row) in the COMPUTE dtype (the
+    PR 2 prefix-pool rule: warm suffix prefills must read bit-identical
+    prefix K/V to a cold prefill); decode reads are cast down to the
+    slot-cache dtype at gather time, reproducing the contiguous
+    layout's insert-time cast — see kvcache.paged_gather_layer."""
+    return kvcache.init_page_pool(
+        num_pages, cfg.num_layers, cfg.num_kv_heads, block_size,
+        cfg.head_dim, dtype=jnp.dtype(cfg.dtype))
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
+                     block_size: int, trash: int):
+    """Paged per-slot serving cache: a block table (page ids into the
+    unified pool, trash-initialized) plus per-slot lengths.  Requires
+    ``max_len % block_size == 0`` so the linearized gather has exactly
+    ``max_len`` columns — the same T as the contiguous cache, which
+    keeps the two layouts' decode attention bitwise identical."""
+    assert max_len % block_size == 0, (max_len, block_size)
+    return {
+        "bt": jnp.full((slots, max_len // block_size), trash, jnp.int32),
+        "length": jnp.zeros((slots,), jnp.int32),
+    }
+
+
 def _layer_kv_fwd(cfg: ModelConfig, s, impl: Optional[str], lp: Params,
                   x: jax.Array, positions: jax.Array, attn_call=None
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -389,3 +414,116 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array
     logits = (x @ head).astype(jnp.float32)
     new_cache = {"k": k_new, "v": v_new, "length": length + 1}
     return new_cache, logits
+
+
+def _post_attn(cfg: ModelConfig, lp: Params, x: jax.Array, o: jax.Array
+               ) -> jax.Array:
+    """Output projection + FFN/MoE half of a decode layer (shared by the
+    contiguous, paged and mixed decode steps)."""
+    x = x + layers._merge_heads(o) @ lp["attn_wo"]
+    h = layers.rmsnorm(x, lp["ln2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        return x + moe.moe_block(_sub(lp, "moe_"), moe_spec(cfg), h,
+                                 groups=cfg.moe_groups)
+    return x + layers.swiglu(_sub(lp, "ffn_"), h)
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, pool: Dict,
+                      cache: Dict, tokens: jax.Array, live: jax.Array,
+                      decode_impl: Optional[str] = None
+                      ) -> Tuple[Dict, Dict, jax.Array]:
+    """One decode step over the PAGED KV layout.
+
+    pool: {"k","v"} (L, N, Hkv, bs, D) unified page pool (last row =
+    trash); cache: {"bt": (B, nb) page ids, "length": (B,)}; live: (B,)
+    int mask (0 = free slot — its write is redirected to the trash page
+    because its stale block table may point at reallocated pages).
+
+    Per layer: append the new token's K/V into each live slot's tail
+    page in place, then attend through the block table
+    (:func:`~repro.models.kvcache.paged_gather_layer` linearizes pages
+    so gathered column ``t`` is absolute position ``t`` — with
+    ``nb * bs == max_len`` the masked softmax sees exactly the same
+    values at the same columns as the contiguous layout, making the two
+    decode paths token-identical).  Returns (pool, cache, logits).
+    """
+    B, _ = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    length = cache["length"]
+    bt = cache["bt"]
+    positions = length[:, None]
+    trash = pool["k"].shape[1] - 1
+    s = attn_spec(cfg)
+    attn_fn = kvcache.DECODE_ATTN_VARIANTS[decode_impl or "grouped"]
+
+    def body(x, scanned):
+        lp, pk, pv = scanned            # pk/pv: (N, Hkv, bs, D)
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+        pk, pv = kvcache.append_token_paged(pk, pv, k, v, bt, length,
+                                            live, trash)
+        kg, vg = kvcache.paged_gather_layer(
+            pk, pv, bt, out_dtype=kvcache.SLOT_CACHE_DTYPE)
+        o = attn_fn(q, kg, vg, length, window=cfg.window)
+        return _post_attn(cfg, lp, x, o), (pk, pv)
+
+    x, (k_new, v_new) = layers.scan_layers(
+        body, x, (params["layers"], pool["k"], pool["v"]),
+        unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    return ({"k": k_new, "v": v_new},
+            {"bt": bt, "length": length + 1}, logits)
+
+
+def decode_step_mixed(cfg: ModelConfig, params: Params, cache: Dict,
+                      pool: Dict, tokens: jax.Array, use_paged: jax.Array,
+                      live: jax.Array, decode_impl: Optional[str] = None
+                      ) -> Tuple[Dict, Dict, jax.Array]:
+    """Decode step for ``kv_layout=auto``: slots may be in EITHER layout.
+
+    cache: the contiguous slot cache plus a "bt" block table; use_paged:
+    (B,) int mask of which slots decode through the page pool.  QKV and
+    FFN run once; both attention reads are computed and selected per
+    slot (the contiguous read for a paged slot sees its stale slot rows
+    and vice versa — garbage that the select discards).  Writes go to
+    both structures: the contiguous write stays within the slot's own
+    rows (harmless for paged slots), the paged append is redirected to
+    the trash page for every slot that is not live-and-paged.  This
+    costs a second attention product per step — the price of measuring
+    both layouts online with one compiled step; the pure engines pay no
+    such tax.
+    """
+    B, _ = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    length = cache["length"]
+    bt = cache["bt"]
+    positions = length[:, None]
+    trash = pool["k"].shape[1] - 1
+    paged_live = live * use_paged
+    s = attn_spec(cfg)
+    attn_fn = kvcache.DECODE_ATTN_VARIANTS[decode_impl or "grouped"]
+
+    def body(x, scanned):
+        lp, kc, vc, pk, pv = scanned
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+        kc, vc = kvcache.update_layer_cache(kc, vc, k, v, length)
+        pk, pv = kvcache.append_token_paged(pk, pv, k, v, bt, length,
+                                            paged_live, trash)
+        kg, vg = kvcache.paged_gather_layer(pk, pv, bt, out_dtype=kc.dtype)
+        o_c = attn_fn(q, kc, vc, length, window=cfg.window)
+        o_p = attn_fn(q, kg, vg, length, window=cfg.window)
+        o = jnp.where(use_paged[:, None, None, None] > 0, o_p, o_c)
+        return _post_attn(cfg, lp, x, o), (kc, vc, pk, pv)
+
+    x, (k_new, v_new, pk_new, pv_new) = layers.scan_layers(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  pool["k"], pool["v"]),
+        unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    new_cache = {"k": k_new, "v": v_new, "bt": bt, "length": length + 1}
+    return new_cache, {"k": pk_new, "v": pv_new}, logits

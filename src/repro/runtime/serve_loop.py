@@ -13,42 +13,59 @@ kept for compatibility.)
 
 :class:`ContinuousBatchingEngine` is token-level continuous batching: a
 fixed pool of decode slots, each sequence tracks its own length and EOS
-state in a per-slot KV cache, a finished sequence frees its slot
-*mid-decode*, and queued requests are admitted by prefilling into the
-freed slot while the other slots keep decoding.  The decode step is the
-serving hot path and is wired through the VPE static-dispatch path:
-decode-attention implementations are an ``IMPL_AXES``-style axis keyed
-by slot-occupancy buckets, the controller's blind-offload/revert loop
-trials them online, and a selection change (``controller.version``)
-re-jits the step — the paper's function-pointer swap at re-trace
-boundaries.
+state, a finished sequence frees its slot *mid-decode*, and queued
+requests are admitted by prefilling into the freed slot while the other
+slots keep decoding.  The decode step is the serving hot path and is
+wired through the VPE static-dispatch path: decode-attention
+implementations are an ``IMPL_AXES``-style axis keyed by slot-occupancy
+buckets, the controller's blind-offload/revert loop trials them online,
+and a selection change (``controller.version``) re-jits the step — the
+paper's function-pointer swap at re-trace boundaries.
+
+Since PR 3 the KV *memory layout* itself is a dispatch axis
+(``kv_layout``): each slot holds its sequence either in the contiguous
+per-slot cache region (PR 1/2) or as a **block table** of page ids into
+the unified device page pool — the paged layout, where prefix-cache
+admission aliases cached pages zero-copy (copy-on-write on a partially
+matched tail block) and decode attention reads pages through the table.
+``kv_layout="auto"`` lets the VPE controller pick per admission, keyed
+by matched-prefix-length × occupancy buckets and fed from measured
+admission + decode wall time — the paper's measured keep-or-revert
+applied to a memory-layout decision.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import VPE, occupancy_bucket, pad_to_bucket, prefix_len_bucket
+from repro.core import (VPE, kv_layout_bucket, occupancy_bucket,
+                        pad_to_bucket, prefix_len_bucket)
 from repro.models import kvcache
 from repro.models import model as model_lib
+from repro.runtime.page_pool import PagePool
 from repro.runtime.prefix_cache import PrefixCache
 
 # serve-engine implementation axes (IMPL_AXES analogue):
 # * serve_decode_impl — decode-attention layout, keyed by occupancy bucket;
-# * prefix_reuse — copy cached prefix KV pages in vs recompute the whole
+# * prefix_reuse — reuse cached prefix KV pages vs recompute the whole
 #   prompt, keyed by matched-prefix-length bucket (the paper's measured
-#   keep-or-revert applied to memory reuse instead of compute offload).
+#   keep-or-revert applied to memory reuse instead of compute offload);
+# * kv_layout — contiguous slot region vs paged block table, keyed by
+#   matched-length × occupancy (only registered for kv_layout="auto").
 SERVE_AXES: Dict[str, List[str]] = {
     "serve_decode_impl": list(kvcache.DECODE_ATTN_VARIANTS),
     "prefix_reuse": ["reuse", "recompute"],
+    "kv_layout": ["contiguous", "paged"],
 }
+
+KV_LAYOUTS = ("contiguous", "paged", "auto")
 
 
 @dataclasses.dataclass
@@ -65,6 +82,16 @@ class ServeStats:
     prefix_lookups: int = 0
     prefix_hits: int = 0             # admissions that matched a cached prefix
     prefix_tokens_saved: int = 0     # prompt tokens served from cached pages
+    # KV-placement wall time per admission: the matched-length-dependent
+    # part of admission (contiguous: gather + copy cached pages into the
+    # slot region; paged: block-table aliasing + copy-on-write).  The
+    # O(matched)-vs-O(1) contrast the paged layout exists for lives in
+    # this series — the serve bench plots it against matched length.
+    kv_place_s: List[float] = dataclasses.field(default_factory=list)
+    paged_admits: int = 0            # admissions served in the paged layout
+    cow_copies: int = 0              # partially-matched tail blocks COW'd
+    sched_skips: int = 0             # queue entries jumped by prefix-aware
+                                     # admission scheduling
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -101,6 +128,9 @@ class ServeStats:
         if self.prefix_lookups:
             s += (f", prefix-cache {self.prefix_hits}/{self.prefix_lookups} "
                   f"hits ({self.prefix_tokens_saved} tok saved)")
+        if self.paged_admits:
+            s += (f", paged {self.paged_admits} admits "
+                  f"({self.cow_copies} cow)")
         return s
 
 
@@ -157,6 +187,9 @@ class Request:
     ttft_s: float = 0.0
     done_t: float = 0.0
     cache_handle: Optional[Any] = None
+    # prefix-aware scheduling: times a later-submitted request was
+    # admitted ahead of this one (bounded by the engine's max_skip)
+    skips: int = 0
 
 
 class WaveScheduler:
@@ -203,6 +236,18 @@ BatchScheduler = WaveScheduler
 class _Slot:
     req: Optional[Request] = None
     tok: int = 0                 # last generated token (next decode input)
+    # paged-layout state (host mirrors of the device block table)
+    layout: str = "contiguous"   # KV layout this residency decodes through
+    pos: int = 0                 # host mirror of cache["length"][slot]
+    pages: List[int] = dataclasses.field(default_factory=list)
+    # kv_layout-axis sample bookkeeping (auto mode): the admission wall,
+    # the request's amortized share of decode-step wall, and whether a
+    # jit compile landed inside the measured admission (tainted samples
+    # must not feed the controller — PR 2's rule)
+    admit_wall: float = 0.0
+    decode_share: float = 0.0
+    admit_bucket: Optional[Tuple] = None
+    tainted: bool = False
 
     @property
     def free(self) -> bool:
@@ -214,11 +259,10 @@ class ContinuousBatchingEngine:
 
     Engine iteration (:meth:`step`):
 
-    1. **admit** — while a slot is free and the queue is non-empty, pop a
-       request, pad its prompt to a power-of-two bucket, prefill it
-       (batch of one) and insert the resulting K/V into the freed slot
-       (``insert_slot_kv`` resets that slot's cache length, so the new
-       occupant can never see the previous one's stale entries);
+    1. **admit** — while a slot is free and the queue is non-empty, pick
+       a request (prefix-aware: see below), pad its prompt to a
+       power-of-two bucket, prefill it (batch of one) and install the
+       resulting K/V into the freed slot in the admission's KV layout;
     2. **decode** — one jitted per-slot decode step advances *all* live
        slots by one token (free slots decode garbage that is discarded);
     3. **retire** — sequences hitting EOS or ``max_new_tokens`` are
@@ -232,21 +276,47 @@ class ContinuousBatchingEngine:
 
     With ``prefix_blocks > 0`` a radix-tree shared-prefix KV cache
     (:class:`~repro.runtime.prefix_cache.PrefixCache`) sits in front of
-    admission: the longest cached block-prefix of the prompt is matched,
-    its pages are pinned for the request's residency and copied into the
-    freed slot, and only the suffix is prefilled.  Whether that copy-in
-    actually beats recomputing a short prefix is the ``prefix_reuse``
-    VPE axis, measured per matched-length bucket from admission wall
-    time.  Eviction is LRU over unpinned leaves; every admission inserts
-    the prompt's new full blocks so later prompts can reuse them.
+    admission: the longest cached block-prefix of the prompt is matched
+    and pinned for the request's residency, and only the suffix is
+    prefilled.  Whether reuse actually beats recomputing a short prefix
+    is the ``prefix_reuse`` VPE axis, measured per matched-length
+    bucket.  Admission is prefix-aware: the queue's front window is
+    probed against the tree and the best-matching request is admitted
+    first (co-scheduling requests that share a hot prefix), bounded by
+    ``max_skip`` — a request can be jumped at most that many times
+    before it is forcibly next, so nothing starves.
+
+    **KV layouts** (``kv_layout``):
+
+    * ``"contiguous"`` — the PR 1/2 baseline: each slot owns a
+      contiguous region of the per-slot cache; warm admission *copies*
+      cached pages into it (O(matched length)).
+    * ``"paged"`` — every slot owns a block table of page ids into the
+      unified device pool shared with the prefix tree
+      (:class:`~repro.runtime.page_pool.PagePool` refcounts both);
+      warm admission *aliases* the cached pages (O(1) in matched
+      length, copy-on-write on a partially matched tail block), a cold
+      prompt's full blocks are *adopted* into the tree zero-copy, and
+      decode attends through the block table.
+    * ``"auto"`` — both structures are maintained and the layout of
+      each admission is a VPE decision keyed by matched-length ×
+      occupancy buckets, fed from measured admission + amortized decode
+      wall per request (recorded at retire; samples that paid a jit
+      compile are dropped).  The decode step computes both attention
+      reads and selects per slot — the measurement tax of running the
+      experiment online.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  max_len: int = 256, vpe: Optional[VPE] = None,
                  occupancy_levels: int = 4, min_prompt_pad: int = 16,
-                 prefix_blocks: int = 0, block_size: int = 16) -> None:
+                 prefix_blocks: int = 0, block_size: int = 16,
+                 kv_layout: str = "contiguous", partial_match: bool = True,
+                 max_skip: int = 4, sched_window: int = 16) -> None:
         if not model_lib.supports_slot_serving(cfg):
             raise ValueError(f"family {cfg.family!r} has no slot-serving path")
+        if kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}")
         self.cfg = cfg
         self.params = params
         self.num_slots = slots
@@ -254,18 +324,14 @@ class ContinuousBatchingEngine:
         self.vpe = vpe
         self.occupancy_levels = occupancy_levels
         self.min_prompt_pad = min_prompt_pad
+        self.kv_layout = kv_layout
+        self.partial_match = partial_match
+        self.max_skip = max_skip
+        self.sched_window = sched_window
         self.stats = ServeStats()
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self.slots = [_Slot() for _ in range(slots)]
-        self.cache = model_lib.init_slot_cache(cfg, slots, max_len)
-        self._prefill = jax.jit(
-            lambda p, t, n: model_lib.prefill_slot_kv(cfg, p, t, n))
-        # the old cache is dead after every insert — donate it so XLA
-        # updates the slot pages in place instead of copying the pool
-        self._insert = jax.jit(
-            lambda c, k, v, s, n: model_lib.insert_slot_kv(c, k, v, s, n),
-            donate_argnums=0)
         self._decode_fns: Dict[str, Callable] = {}
         self._axis = "serve_decode_impl"
         self._default_variant = SERVE_AXES[self._axis][0]
@@ -275,21 +341,77 @@ class ContinuousBatchingEngine:
             for i, name in enumerate(SERVE_AXES[self._axis]):
                 vpe.registry.register_variant(
                     self._axis, name, fn=(lambda name=name: name), default=(i == 0))
-        # -- shared-prefix KV cache (radix tree + device page pool) --------
+        # -- KV storage (layout-dependent) ---------------------------------
         self.block_size = block_size
+        paged_capable = kv_layout in ("paged", "auto")
+        if paged_capable and max_len % block_size:
+            raise ValueError(
+                f"paged layouts need max_len ({max_len}) divisible by "
+                f"block_size ({block_size}) — equal column counts are what "
+                f"keep the two layouts' decode attention bit-identical")
+        self.nb_max = max_len // block_size if paged_capable else 0
+        self.pages: Optional[PagePool] = None
+        self.page_pool = None
+        if paged_capable:
+            # sized so the engine can never deadlock on pages: worst-case
+            # live block tables (x2 in auto mode, where contiguous
+            # admissions also pin tree blocks that no table owns) plus one
+            # possible pinned partial block per slot, plus the requested
+            # cached-prefix headroom
+            n_pages = (slots * self.nb_max * (2 if kv_layout == "auto" else 1)
+                       + slots + max(prefix_blocks, 0))
+            self.pages = PagePool(n_pages)
+            self.page_pool = model_lib.init_page_pool(cfg, n_pages, block_size)
+            self._gather_pages = jax.jit(kvcache.gather_pages)
+            self._write_pages = jax.jit(kvcache.write_pages, donate_argnums=0)
+            self._copy_page = jax.jit(kvcache.copy_page, donate_argnums=0)
+            self._admit_paged = jax.jit(self._admit_paged_fn, donate_argnums=0)
+            self._set_bt = jax.jit(self._set_bt_fn, donate_argnums=0)
+        if kv_layout == "paged":
+            self.cache = model_lib.init_paged_cache(
+                cfg, slots, max_len, block_size, self.pages.trash_id)
+        elif kv_layout == "auto":
+            self.cache = {
+                **model_lib.init_slot_cache(cfg, slots, max_len),
+                "bt": model_lib.init_paged_cache(
+                    cfg, slots, max_len, block_size, self.pages.trash_id)["bt"],
+            }
+        else:
+            self.cache = model_lib.init_slot_cache(cfg, slots, max_len)
+        self._prefill = jax.jit(
+            lambda p, t, n: model_lib.prefill_slot_kv(cfg, p, t, n))
+        # the old cache is dead after every insert — donate it so XLA
+        # updates the slot pages in place instead of copying the pool
+        self._insert = jax.jit(
+            lambda c, k, v, s, n: model_lib.insert_slot_kv(c, k, v, s, n),
+            donate_argnums=0)
+        if vpe is not None and kv_layout == "auto" \
+                and not vpe.registry.has_op("kv_layout"):
+            vpe.registry.register_op("kv_layout")
+            for i, name in enumerate(SERVE_AXES["kv_layout"]):
+                vpe.registry.register_variant(
+                    "kv_layout", name, fn=(lambda name=name: name),
+                    default=(i == 0))
+        # -- shared-prefix KV cache (radix tree) ---------------------------
         self.prefix_cache: Optional[PrefixCache] = None
         if prefix_blocks > 0:
-            self.prefix_cache = PrefixCache(prefix_blocks, block_size)
-            # pages live in the COMPUTE dtype so a warm suffix prefill sees
-            # bit-identical prefix K/V to a cold full prefill (parity)
-            self.block_pool = kvcache.init_block_pool(
-                prefix_blocks, cfg.num_layers, cfg.num_kv_heads, block_size,
-                cfg.head_dim, dtype=jnp.dtype(cfg.dtype))
-            self._gather = jax.jit(kvcache.gather_blocks)
-            self._write_block = jax.jit(
-                lambda pool, k, v, bid, st: kvcache.write_block(
-                    pool, k, v, bid, st, block_size),
-                donate_argnums=0)
+            if paged_capable:
+                # ONE id space: tree pages and live block tables draw from
+                # (and refcount against) the same pool
+                self.prefix_cache = PrefixCache(
+                    self.pages.num_pages, block_size, pool=self.pages)
+            else:
+                self.prefix_cache = PrefixCache(prefix_blocks, block_size)
+                # pages live in the COMPUTE dtype so a warm suffix prefill
+                # sees bit-identical prefix K/V to a cold full prefill
+                self.block_pool = kvcache.init_block_pool(
+                    prefix_blocks, cfg.num_layers, cfg.num_kv_heads,
+                    block_size, cfg.head_dim, dtype=jnp.dtype(cfg.dtype))
+                self._gather = jax.jit(kvcache.gather_blocks)
+                self._write_block = jax.jit(
+                    lambda pool, k, v, bid, st: kvcache.write_block(
+                        pool, k, v, bid, st, block_size),
+                    donate_argnums=0)
             self._insert_at = jax.jit(
                 lambda c, k, v, s, st, n: model_lib.insert_slot_kv_at(
                     c, k, v, s, st, n),
@@ -303,6 +425,20 @@ class ContinuousBatchingEngine:
                     vpe.registry.register_variant(
                         "prefix_reuse", name, fn=(lambda name=name: name),
                         default=(i == 0))
+
+    # -- small jitted paged-state updates ----------------------------------
+    @staticmethod
+    def _admit_paged_fn(cache, row, slot, true_len):
+        out = dict(cache)
+        out["bt"] = cache["bt"].at[slot].set(row)
+        out["length"] = cache["length"].at[slot].set(true_len)
+        return out
+
+    @staticmethod
+    def _set_bt_fn(cache, slot, col, pid):
+        out = dict(cache)
+        out["bt"] = cache["bt"].at[slot, col].set(pid)
+        return out
 
     # -- request intake ----------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -318,6 +454,74 @@ class ContinuousBatchingEngine:
     def num_active(self) -> int:
         return sum(1 for s in self.slots if not s.free)
 
+    # -- page accounting ----------------------------------------------------
+    def _alloc_page(self) -> int:
+        """Take a page from the shared pool, evicting unpinned cached
+        prefixes under pressure; exhaustion beyond that is a sizing bug
+        (the constructor provisions for worst-case live block tables)."""
+        pid = self.pages.alloc()
+        while pid is None:
+            if self.prefix_cache is None or not self.prefix_cache.evict(1):
+                raise RuntimeError(
+                    "page pool exhausted with nothing evictable — "
+                    "live block tables exceed the provisioned pool")
+            pid = self.pages.alloc()
+        return pid
+
+    def check_kv(self) -> None:
+        """Cross-structure page audit: pool refcounts must be exactly
+        accounted for by tree ownership + live block tables (and the
+        tree's own structural invariants must hold).  Raises
+        AssertionError on any leak or dangling reference."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.check()
+        if self.pages is None:
+            return
+        owners: Dict[int, int] = {}
+        if self.prefix_cache is not None:
+            for pid in self.prefix_cache.owned_pages():
+                owners[pid] = owners.get(pid, 0) + 1
+        for s in self.slots:
+            for pid in s.pages:
+                owners[pid] = owners.get(pid, 0) + 1
+        self.pages.check(owners)
+
+    # -- prefix-aware admission scheduling ----------------------------------
+    def _pop_next(self) -> Request:
+        """Pick the next request to admit.
+
+        FIFO unless the prefix cache can do better: the front
+        ``sched_window`` entries are probed against the tree (cheap
+        host-side walk, no pinning) and the longest match wins, so
+        requests sharing a hot cached prefix are co-scheduled while it
+        is resident (ROADMAP: raises hit rate under mixed tenant
+        traffic).  Starvation bound: every time a request is jumped its
+        ``skips`` counter ticks; any request that has been skipped
+        ``max_skip`` times is admitted before anything may jump the
+        queue again, so the wait of request i is bounded by
+        ``(max_skip + 1) * (i + 1)`` admissions.
+        """
+        if self.prefix_cache is None or len(self.queue) == 1:
+            return self.queue.pop(0)
+        # starvation bound.  Skip counts are monotone non-increasing
+        # along the queue (jumping position j increments EVERY request
+        # ahead of j, and new arrivals join the tail at 0), so the head
+        # is always the first — and only — request that can have
+        # exhausted its budget.
+        if self.queue[0].skips >= self.max_skip:
+            return self.queue.pop(0)       # forced: may not be jumped again
+        window = self.queue[:self.sched_window]
+        best, best_len = 0, -1
+        for j, r in enumerate(window):
+            m = self.prefix_cache.probe(r.prompt,
+                                        max_match=len(r.prompt) - 1)
+            if m > best_len:
+                best, best_len = j, m
+        for r in self.queue[:best]:
+            r.skips += 1
+        self.stats.sched_skips += best
+        return self.queue.pop(best)
+
     # -- engine internals --------------------------------------------------
     def _admit(self) -> None:
         while self.queue:
@@ -327,11 +531,11 @@ class ContinuousBatchingEngine:
             if i is None:
                 return
             slot = self.slots[i]
-            req = self.queue.pop(0)
+            req = self._pop_next()
             now = time.perf_counter()
             req.admit_step = self.stats.decode_steps
             self.stats.queue_wait_s.append(now - req.submit_t)
-            first, k_all, v_all, base = self._admit_prefill(i, req)
+            first, k_all, v_all, base, layout = self._admit_prefill(i, req)
             now = time.perf_counter()
             req.ttft_s = now - req.submit_t
             self.stats.ttft_s.append(req.ttft_s)
@@ -340,17 +544,31 @@ class ContinuousBatchingEngine:
             self.stats.prefill_tokens += 1
             slot.req = req
             slot.tok = first
+            slot.layout = layout
+            slot.pos = len(req.prompt)
+            slot.decode_share = 0.0
             # population is off the TTFT critical path: the first token is
-            # already out; new full blocks are copied into the page pool now
-            self._cache_extend(req, k_all, v_all, base)
+            # already out; new full blocks enter the tree now (adopted
+            # zero-copy from a paged slot's own pages, copied otherwise)
+            self._cache_extend(req, k_all, v_all, base, slot)
             self._retire_if_done(i)
+
+    def _select_layout(self, matched: int) -> Tuple[str, Optional[Tuple]]:
+        """Resolve this admission's KV layout (and its VPE bucket)."""
+        if self.kv_layout != "auto":
+            return self.kv_layout, None
+        bucket = kv_layout_bucket(matched, self.num_active, self.num_slots,
+                                  levels=self.occupancy_levels)
+        if self.vpe is None:
+            return "contiguous", bucket
+        return self.vpe.controller.select("kv_layout", bucket), bucket
 
     def _admit_prefill(self, i: int, req: Request):
         """Prefill ``req`` into slot ``i`` — whole prompt, or suffix only
         against cached prefix pages when the radix tree has a hit AND the
-        ``prefix_reuse`` controller says copy-in beats recompute for this
-        matched-length bucket.  Returns (first_token, k, v, base) where
-        k/v are the computed stacked K/V covering prompt positions
+        ``prefix_reuse`` controller says reuse beats recompute for this
+        matched-length bucket.  Returns (first_token, k, v, base, layout)
+        where k/v are the computed stacked K/V covering prompt positions
         ``[base, S)`` (the block-write source for :meth:`_cache_extend`).
         """
         prompt = np.asarray(req.prompt, np.int32)
@@ -359,27 +577,57 @@ class ContinuousBatchingEngine:
         jits_before = self._prefill_jit_cache_size()
         if self.prefix_cache is not None:
             # never match the full prompt: the suffix prefill must still
-            # produce the first generated token's logits
-            req.cache_handle = self.prefix_cache.acquire(prompt, max_match=S - 1)
+            # produce the first generated token's logits.  Partial tail
+            # matching is paged-only — the contiguous layout copies whole
+            # blocks and cannot alias half of one copy-on-write.
+            allow_partial = (self.partial_match
+                             and self.kv_layout in ("paged", "auto"))
+            req.cache_handle = self.prefix_cache.acquire(
+                prompt, max_match=S - 1, allow_partial=allow_partial)
             matched = req.cache_handle.matched_len
             self.stats.prefix_lookups += 1
-            if matched:
-                self.stats.prefix_hits += 1
-                if self.vpe is not None:
-                    bucket = prefix_len_bucket(matched)
-                    variant = self.vpe.controller.select("prefix_reuse", bucket)
+        # the layout decision sees the RAW match (what aliasing could
+        # use); hit accounting and the prefix_reuse axis see only what
+        # the chosen layout can actually reuse — an auto admission that
+        # resolves a partial-only match to the contiguous layout reuses
+        # nothing and must neither count as a hit nor feed a cold
+        # full-prefill wall time into the "reuse" samples
+        layout, lbucket = self._select_layout(matched)
+        use_matched = (matched if layout == "paged"
+                       else self.block_size * len(req.cache_handle.nodes)
+                       if req.cache_handle is not None else 0)
+        if use_matched:
+            self.stats.prefix_hits += 1
+            if self.vpe is not None:
+                bucket = prefix_len_bucket(use_matched)
+                variant = self.vpe.controller.select("prefix_reuse", bucket)
         t0 = time.perf_counter()
-        if matched and variant == "reuse":
-            out = self._prefill_from_prefix(i, prompt, req.cache_handle)
-            self.stats.prefix_tokens_saved += matched
+        if use_matched and variant == "reuse":
+            if layout == "paged":
+                out = self._prefill_from_prefix_paged(i, prompt,
+                                                      req.cache_handle)
+            else:
+                out = self._prefill_from_prefix(i, prompt, req.cache_handle)
+            self.stats.prefix_tokens_saved += use_matched
         else:
-            out = self._prefill_full(i, prompt)
-        # fence the insert too: otherwise its device time leaks into
-        # the NEXT decode step's VPE sample and skews the controller
+            if layout == "paged":
+                out = self._prefill_full_paged(i, prompt)
+            else:
+                out = self._prefill_full(i, prompt)
+        # fence EVERYTHING the admission dispatched — the slot cache and,
+        # for paged layouts, the page pool (suffix scatters / COW copies
+        # run on it asynchronously): otherwise that device time both
+        # undercounts this admission's sample and leaks into the NEXT
+        # decode step's VPE sample, skewing two controllers at once
         jax.block_until_ready(self.cache)
+        if self.pages is not None:
+            jax.block_until_ready(self.page_pool)
         dt = time.perf_counter() - t0
         self.stats.prefill_s += dt
-        if bucket is not None and self._prefill_jit_cache_size() == jits_before:
+        if layout == "paged":
+            self.stats.paged_admits += 1
+        tainted = self._prefill_jit_cache_size() != jits_before
+        if bucket is not None and not tainted:
             # feed the measured TTFT contribution back: the controller
             # blind-trials "recompute" and keeps whichever is faster for
             # this matched-length bucket (the paper's offload-or-revert).
@@ -389,20 +637,33 @@ class ContinuousBatchingEngine:
             # multi-second compile would permanently flip the bucket.
             self.vpe.profiler.record("prefix_reuse", variant, bucket, dt)
             self.vpe.controller.on_sample("prefix_reuse", bucket, variant)
-        return out
+        # the kv_layout sample completes at retire (admission + the
+        # request's amortized decode share)
+        slot = self.slots[i]
+        slot.admit_wall = dt
+        slot.admit_bucket = lbucket
+        slot.tainted = tainted
+        return (*out, layout)
 
     def _prefill_jit_cache_size(self) -> int:
         """Total compiled-specialization count of the admission-path jits
         (a growth across a timed section means that sample paid a trace+
-        compile and must not feed the ``prefix_reuse`` controller)."""
+        compile and must not feed the ``prefix_reuse``/``kv_layout``
+        controllers)."""
         fns = [self._prefill, self._insert]
+        if self.pages is not None:
+            fns += [self._gather_pages, self._write_pages, self._copy_page,
+                    self._admit_paged, self._set_bt]
         if self.prefix_cache is not None:
-            fns += [self._gather, self._insert_at, self._prefill_suffix]
+            fns += [self._insert_at, self._prefill_suffix]
+            if self.pages is None:
+                fns += [self._gather, self._write_block]
         try:
             return sum(f._cache_size() for f in fns)
         except AttributeError:  # pragma: no cover - older/newer jax
             return -1           # constant: comparison never skips a sample
 
+    # -- contiguous-layout admission paths ----------------------------------
     def _prefill_full(self, i: int, prompt: np.ndarray):
         """Cold path: run the whole prompt and insert at slot position 0."""
         S = len(prompt)
@@ -410,29 +671,44 @@ class ContinuousBatchingEngine:
         toks = np.zeros((1, pad), np.int32)
         toks[0, :S] = prompt
         k, v, logits = self._prefill(self.params, jnp.asarray(toks), jnp.int32(S))
+        # fence the prefill BEFORE the placement timer: the insert fence
+        # below transitively waits on its inputs, and an async prefill
+        # inside the span would record the O(S^2) compute as "placement"
+        jax.block_until_ready(k)
+        t0 = time.perf_counter()
         self.cache = self._insert(self.cache, k, v, jnp.int32(i), jnp.int32(S))
+        jax.block_until_ready(self.cache)
+        self.stats.kv_place_s.append(time.perf_counter() - t0)
         first = int(np.asarray(jnp.argmax(logits[0])))
         return first, k, v, 0
 
     def _prefill_from_prefix(self, i: int, prompt: np.ndarray, handle):
-        """Warm path: gather the matched pages, prefill only the suffix.
+        """Contiguous warm path: gather the matched pages, COPY them into
+        the slot's region, prefill only the suffix.
 
         Page ids are padded to a power-of-two count (bounded jit shapes);
         padded columns sit past ``prefix_len`` and are masked inside the
         suffix prefill.  Slot writes go prefix-then-suffix so any padded
         prefix garbage in ``[prefix_len, P_pad)`` is overwritten or
-        masked by ``length``.
+        masked by ``length``.  The timed KV-placement span (gather +
+        prefix copy-in) is the O(matched-length) cost the paged layout
+        removes.
         """
         S = len(prompt)
-        P = handle.matched_len
+        P = self.block_size * len(handle.nodes)   # full blocks only
         bs = self.block_size
         nb = P // bs
         nb_pad = min(pad_to_bucket(nb, minimum=1), self.max_len // bs)
-        # pad by repeating a pinned id (gather_blocks contract: padded ids
+        # pad by repeating a pinned id (gather contract: padded ids
         # must be valid pages; matched > 0 guarantees at least one)
         ids = np.asarray(
             handle.block_ids + [handle.block_ids[0]] * (nb_pad - nb), np.int32)
-        pk, pv = self._gather(self.block_pool, jnp.asarray(ids))
+        t0 = time.perf_counter()
+        pk, pv = self._gather_prefix(ids)
+        cache = self._insert_at(self.cache, pk, pv, jnp.int32(i), jnp.int32(0),
+                                jnp.int32(S))
+        jax.block_until_ready(cache)
+        self.stats.kv_place_s.append(time.perf_counter() - t0)
         sl = S - P
         pad_s = min(pad_to_bucket(sl, minimum=self.min_prompt_pad),
                     self.max_len - P)
@@ -440,20 +716,186 @@ class ContinuousBatchingEngine:
         toks[0, :sl] = prompt[P:]
         k, v, logits = self._prefill_suffix(
             self.params, jnp.asarray(toks), pk, pv, jnp.int32(P), jnp.int32(sl))
-        cache = self._insert_at(self.cache, pk, pv, jnp.int32(i), jnp.int32(0),
-                                jnp.int32(S))
         self.cache = self._insert_at(cache, k, v, jnp.int32(i), jnp.int32(P),
                                      jnp.int32(S))
         first = int(np.asarray(jnp.argmax(logits[0])))
         return first, k, v, P
 
-    def _cache_extend(self, req: Request, k_all, v_all, base: int) -> None:
-        """Insert the prompt's not-yet-cached full blocks into the tree
-        and copy their K/V pages (computed by this admission's prefill,
-        covering prompt positions ``[base, S)``) into the device pool."""
+    def _gather_prefix(self, ids: np.ndarray):
+        """Gather cached prefix pages from whichever pool this engine's
+        layouts share (values are identical either way — both pools are
+        written from the same prefill outputs)."""
+        if self.pages is not None:
+            return self._gather_pages(self.page_pool, jnp.asarray(ids))
+        return self._gather(self.block_pool, jnp.asarray(ids))
+
+    # -- paged-layout admission paths ---------------------------------------
+    def _page_row(self, i: int, pages: List[int], true_len: int) -> None:
+        """Install a slot's block table row + length on device (tiny
+        host->device transfer: nb_max ids, the O(1)-in-matched-length
+        'copy' of the paged layout)."""
+        row = np.full((self.nb_max,), self.pages.trash_id, np.int32)
+        row[:len(pages)] = pages
+        self.cache = self._admit_paged(self.cache, jnp.asarray(row),
+                                       jnp.int32(i), jnp.int32(true_len))
+        self.slots[i].pages = list(pages)
+
+    def _suffix_page_ids(self, base: int, S: int, cow_page: Optional[int]
+                         ) -> Tuple[List[int], List[int]]:
+        """Allocate pages covering prompt positions ``[base, S)``.
+
+        Returns (write_ids, write_starts) for :func:`kvcache.write_pages`
+        — ``cow_page`` (the copy-on-write clone of a partially matched
+        block) is the first write target when ``base`` is mid-block.
+        """
+        bs = self.block_size
+        ids, starts = [], []
+        b = base // bs
+        while b * bs < S:
+            if cow_page is not None and b == base // bs and base % bs:
+                pid = cow_page
+            else:
+                pid = self._alloc_page()
+            ids.append(pid)
+            starts.append(b * bs)
+            b += 1
+        return ids, starts
+
+    def _write_suffix_pages(self, k_all, v_all, ids: List[int],
+                            starts: List[int], base: int, S: int) -> None:
+        """One masked scatter for every page the prefill produced (ids
+        padded to a power-of-two count with the trash page — bounded jit
+        specializations, garbage writes land on the trash row)."""
+        n_pad = pad_to_bucket(len(ids), minimum=1)
+        trash = self.pages.trash_id
+        ids_pad = np.asarray(ids + [trash] * (n_pad - len(ids)), np.int32)
+        # padded starts sit a full block before ``base`` so their source
+        # window is entirely invalid (write_pages keeps old content)
+        starts_pad = np.asarray(
+            starts + [base - self.block_size] * (n_pad - len(starts)), np.int32)
+        self.page_pool = self._write_pages(
+            self.page_pool, k_all, v_all, jnp.asarray(ids_pad),
+            jnp.asarray(starts_pad), jnp.int32(base), jnp.int32(S - base))
+
+    def _prefill_full_paged(self, i: int, prompt: np.ndarray):
+        """Paged cold path: whole-prompt prefill into freshly allocated
+        pages; the block table is the only slot state."""
+        S = len(prompt)
+        self._release_slot_pages(i)
+        pad = min(pad_to_bucket(S, minimum=self.min_prompt_pad), self.max_len)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :S] = prompt
+        k, v, logits = self._prefill(self.params, jnp.asarray(toks), jnp.int32(S))
+        ids, starts = self._suffix_page_ids(0, S, None)
+        # same cold-path placement span as the contiguous layout: prefill
+        # fenced out, the O(S) page scatter + table install fenced in
+        jax.block_until_ready(k)
+        t0 = time.perf_counter()
+        self._write_suffix_pages(k, v, ids, starts, 0, S)
+        self._page_row(i, ids, S)
+        jax.block_until_ready(self.cache)
+        jax.block_until_ready(self.page_pool)
+        self.stats.kv_place_s.append(time.perf_counter() - t0)
+        first = int(np.asarray(jnp.argmax(logits[0])))
+        return first, k, v, 0
+
+    def _prefill_from_prefix_paged(self, i: int, prompt: np.ndarray, handle):
+        """Paged warm path: ALIAS the matched pages into the block table.
+
+        No page is copied for the matched prefix — the table entries
+        simply reference the tree's pages (one pool ref each), which is
+        what makes admission O(1) in matched length.  A partially
+        matched tail block is cloned copy-on-write (one page) because
+        the suffix prefill writes into it mid-block; fresh pages cover
+        the rest of the suffix.  The suffix still *attends* to the
+        cached prefix (gathered transiently for the shared suffix-prefill
+        jit — reading pages in place at prefill time is the chunked-
+        prefill follow-up in the ROADMAP).
+        """
+        S = len(prompt)
+        P = handle.matched_len
+        bs = self.block_size
+        self._release_slot_pages(i)
+        t0 = time.perf_counter()
+        alias = list(handle.block_ids)            # full blocks: zero-copy
+        for pid in alias:
+            self.pages.ref(pid)
+        cow = None
+        if handle.partial_len:
+            # the suffix's first write lands mid-block in the partially
+            # matched page — clone it so the cached original (and anyone
+            # else aliasing it) cannot see this slot's writes
+            cow = self._alloc_page()
+            self.page_pool = self._copy_page(
+                self.page_pool, jnp.int32(handle.partial_block_id),
+                jnp.int32(cow))
+            self.stats.cow_copies += 1
+        suffix_ids, starts = self._suffix_page_ids(P, S, cow)
+        self._page_row(i, alias + suffix_ids, S)
+        jax.block_until_ready(self.cache)
+        jax.block_until_ready(self.page_pool)   # the COW copy, if any
+        self.stats.kv_place_s.append(time.perf_counter() - t0)
+        # suffix prefill attends to the matched prefix (padded gather,
+        # same jit + numerics as the contiguous warm path)
+        nb_read = P // bs + (1 if P % bs else 0)
+        read_ids = alias + ([handle.partial_block_id] if P % bs else [])
+        nb_pad = min(pad_to_bucket(nb_read, minimum=1), self.nb_max)
+        read_pad = np.asarray(
+            read_ids + [read_ids[0]] * (nb_pad - nb_read), np.int32)
+        pk, pv = self._gather_pages(self.page_pool, jnp.asarray(read_pad))
+        sl = S - P
+        pad_s = min(pad_to_bucket(sl, minimum=self.min_prompt_pad),
+                    self.max_len - P)
+        toks = np.zeros((1, pad_s), np.int32)
+        toks[0, :sl] = prompt[P:]
+        k, v, logits = self._prefill_suffix(
+            self.params, jnp.asarray(toks), pk, pv, jnp.int32(P), jnp.int32(sl))
+        self._write_suffix_pages(k, v, suffix_ids, starts, P, S)
+        first = int(np.asarray(jnp.argmax(logits[0])))
+        return first, k, v, P
+
+    def _release_slot_pages(self, i: int) -> None:
+        """Drop the slot's references from a previous residency (pages the
+        tree adopted survive through the tree's own reference)."""
+        for pid in self.slots[i].pages:
+            self.pages.unref(pid)
+        self.slots[i].pages = []
+
+    def _cache_extend(self, req: Request, k_all, v_all, base: int,
+                      slot: _Slot) -> None:
+        """Insert the prompt's not-yet-cached full blocks into the tree.
+
+        Paged slots hand their OWN pages to the tree (zero-copy
+        adoption: one extra pool reference per block, no device
+        traffic).  Contiguous slots copy the freshly computed K/V into
+        tree-allocated pages, exactly as in PR 2 — paid only when a
+        prefix is seen for the FIRST time (the paper's warm-up phase).
+        """
         if self.prefix_cache is None:
             return
+        if slot.layout == "paged":
+            bs = self.block_size
+            page_of_block = {j: pid for j, pid in enumerate(slot.pages)}
+            # the copy-on-write clone of a partial block may be adopted
+            # too IF the prompt filled it completely (its content is then
+            # exactly the block's tokens' K/V); write_pages already left
+            # positions >= S untouched, so a half-filled tail block is
+            # excluded by extend's full-blocks-only walk
+            self.prefix_cache.extend_adopt(req.cache_handle, req.prompt,
+                                           page_of_block)
+            return
         fresh = self.prefix_cache.extend(req.cache_handle, req.prompt)
+        if not fresh:
+            return
+        if self.pages is not None:
+            # auto mode, contiguous admission: tree pages live in the
+            # unified pool — fill them with one masked scatter
+            ids = [bid for bid, _ in fresh]
+            starts = [st for _, st in fresh]
+            self._write_suffix_pages(k_all, v_all, ids, starts, base,
+                                     int(len(req.prompt)))
+            jax.block_until_ready(self.page_pool)
+            return
         # one dispatch per fresh block: acceptable because it is paid only
         # when a prefix is seen for the FIRST time (the paper's warm-up
         # phase); a batched scatter would trade it for a jit
@@ -462,10 +904,9 @@ class ContinuousBatchingEngine:
             self.block_pool = self._write_block(
                 self.block_pool, k_all, v_all, jnp.int32(bid),
                 jnp.int32(start - base))
-        if fresh:
-            # fence the page writes: otherwise their device time leaks
-            # into the next decode step's timed VPE sample
-            jax.block_until_ready(self.block_pool)
+        # fence the page writes: otherwise their device time leaks
+        # into the next decode step's timed VPE sample
+        jax.block_until_ready(self.block_pool)
 
     def _retire_if_done(self, i: int) -> None:
         slot = self.slots[i]
@@ -477,13 +918,47 @@ class ContinuousBatchingEngine:
             req.done = True
             req.done_step = self.stats.decode_steps
             req.done_t = time.perf_counter()
+            if slot.layout == "paged":
+                # drop the block table's pool references NOW: anything the
+                # tree adopted (or this slot aliased) stays alive through
+                # the tree's own reference; private pages free immediately
+                self._release_slot_pages(i)
             if req.cache_handle is not None:
-                # unpin: the slot holds its own KV copy, so the pages this
-                # request matched/inserted become evictable again
+                # unpin: the pages this request matched/inserted become
+                # evictable again (the paged slot no longer references
+                # them either — see above)
                 self.prefix_cache.release(req.cache_handle)
                 req.cache_handle = None
+            if slot.admit_bucket is not None and self.vpe is not None \
+                    and not slot.tainted:
+                # the kv_layout sample: admission wall + this request's
+                # amortized share of the decode steps it was resident for
+                self.vpe.profiler.record(
+                    "kv_layout", slot.layout, slot.admit_bucket,
+                    slot.admit_wall + slot.decode_share)
+                self.vpe.controller.on_sample("kv_layout", slot.admit_bucket,
+                                              slot.layout)
+            slot.admit_bucket = None
             self.completed.append(req)
             slot.req = None   # freed mid-decode; refilled next admission
+
+    # -- decode -------------------------------------------------------------
+    def _grow_block_tables(self) -> None:
+        """Before a decode step: any live paged slot whose next token
+        starts a fresh block gets a page allocated and spliced into its
+        device block table.  (The tail page is otherwise guaranteed
+        private by admission-time copy-on-write, so decode appends never
+        need a COW check.)"""
+        for i, slot in enumerate(self.slots):
+            if slot.free or slot.layout != "paged":
+                continue
+            if slot.pos % self.block_size == 0:
+                col = slot.pos // self.block_size
+                assert col == len(slot.pages), (col, len(slot.pages))
+                pid = self._alloc_page()
+                slot.pages.append(pid)
+                self.cache = self._set_bt(self.cache, jnp.int32(i),
+                                          jnp.int32(col), jnp.int32(pid))
 
     def _decode_fn(self, bucket) -> Callable:
         if self.vpe is not None:
@@ -500,26 +975,59 @@ class ContinuousBatchingEngine:
                 # into the step (flips between already-compiled variants
                 # are pointer swaps served from the jit cache, not rejits)
                 self.stats.rejits += 1
-            def _step(p, c, t, v=vname):
-                c, logits = model_lib.decode_step_slots(
-                    self.cfg, p, c, t, decode_impl=v)
-                # greedy argmax on device: only (slots,) ints cross to host
-                return c, jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            fn = jax.jit(_step)
+            cfg = self.cfg
+            if self.kv_layout == "paged":
+                def _step(p, pool, c, t, live, v=vname):
+                    pool, c, logits = model_lib.decode_step_paged(
+                        cfg, p, pool, c, t, live, decode_impl=v)
+                    return pool, c, jnp.argmax(
+                        logits[:, -1, :], axis=-1).astype(jnp.int32)
+                fn = jax.jit(_step, donate_argnums=(1, 2))
+            elif self.kv_layout == "auto":
+                def _step(p, c, pool, t, up, live, v=vname):
+                    c, pool, logits = model_lib.decode_step_mixed(
+                        cfg, p, c, pool, t, up, live, decode_impl=v)
+                    return c, pool, jnp.argmax(
+                        logits[:, -1, :], axis=-1).astype(jnp.int32)
+                fn = jax.jit(_step, donate_argnums=(1, 2))
+            else:
+                def _step(p, c, t, v=vname):
+                    c, logits = model_lib.decode_step_slots(
+                        cfg, p, c, t, decode_impl=v)
+                    # greedy argmax on device: only (slots,) ints cross host
+                    return c, jnp.argmax(
+                        logits[:, -1, :], axis=-1).astype(jnp.int32)
+                fn = jax.jit(_step)
             self._decode_fns[vname] = fn
         return fn
 
     def step(self) -> bool:
         """One engine iteration; returns False when fully idle."""
         self._admit()
-        if self.num_active == 0:
+        n_active = self.num_active
+        if n_active == 0:
             return False
-        bucket = occupancy_bucket(self.num_active, self.num_slots,
+        if self.pages is not None:
+            self._grow_block_tables()
+        bucket = occupancy_bucket(n_active, self.num_slots,
                                   levels=self.occupancy_levels)
         fn = self._decode_fn(bucket)
         tokens = np.array([[s.tok] for s in self.slots], np.int32)
+        live = np.array([0 if s.free else 1 for s in self.slots], np.int32)
         t0 = time.perf_counter()
-        cache, next_tok = fn(self.params, self.cache, jnp.asarray(tokens))
+        if self.kv_layout == "paged":
+            self.page_pool, cache, next_tok = fn(
+                self.params, self.page_pool, self.cache, jnp.asarray(tokens),
+                jnp.asarray(live))
+        elif self.kv_layout == "auto":
+            use_paged = np.array(
+                [1 if s.layout == "paged" else 0 for s in self.slots],
+                np.int32)
+            cache, self.page_pool, next_tok = fn(
+                self.params, self.cache, self.page_pool, jnp.asarray(tokens),
+                jnp.asarray(use_paged), jnp.asarray(live))
+        else:
+            cache, next_tok = fn(self.params, self.cache, jnp.asarray(tokens))
         toks = np.asarray(next_tok)  # fences the step
         dt = time.perf_counter() - t0
         self.cache = cache
@@ -528,11 +1036,14 @@ class ContinuousBatchingEngine:
         if self.vpe is not None:
             self.vpe.profiler.record(self._axis, self._last_variant, bucket, dt)
             self.vpe.controller.on_sample(self._axis, bucket, self._last_variant)
+        share = dt / n_active
         for i, slot in enumerate(self.slots):
             if slot.req is None:
                 continue          # free slot decoded garbage; discard
             t = int(toks[i])
             slot.tok = t
+            slot.pos += 1
+            slot.decode_share += share
             slot.req.out.append(t)
             self.stats.tokens_out += 1
             self._retire_if_done(i)

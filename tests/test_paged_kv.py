@@ -1,0 +1,311 @@
+"""Paged KV layout: parity, copy-on-write isolation, page accounting.
+
+The contract: the KV memory layout is a *dispatch axis*, not a
+semantic choice — a request served through block tables (paged) must
+produce token-for-token the greedy output of the contiguous layout and
+of a dedicated cold ``ServeLoop.generate``, under warm prefix hits,
+mid-stream eviction pressure, copy-on-write tail sharing, and the
+``kv_layout=auto`` controller flipping layouts mid-traffic.  And no KV
+page may leak: pool refcounts must be exactly accounted for by tree
+ownership + live block tables at every drain.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import VPE, kv_layout_bucket
+from repro.models import model
+from repro.runtime.page_pool import PagePool
+from repro.runtime.serve_loop import ContinuousBatchingEngine, Request, ServeLoop
+
+MAX_LEN = 128
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["qwen3-8b"].reduced()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def cold_greedy(cfg, params, prompt, max_new):
+    serve = ServeLoop(cfg, params, max_len=MAX_LEN, batch=1)
+    return [int(t) for t in serve.generate({"tokens": prompt[None, :]}, max_new)[0]]
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("prefix_blocks", 32)
+    kw.setdefault("block_size", 16)
+    kw.setdefault("kv_layout", "paged")
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+class TestPagedParity:
+    def test_warm_alias_matches_cold(self, setup):
+        """Zero-copy aliased admissions produce the exact cold output,
+        and retire leaves zero unaccounted pages."""
+        cfg, params = setup
+        rng = np.random.default_rng(0)
+        shared = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+        prompts = [np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, n).astype(np.int32)])
+            for n in (5, 9, 3)]
+        refs = [cold_greedy(cfg, params, p, 6) for p in prompts]
+        eng = make_engine(cfg, params)
+        eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=6))
+        eng.run()  # cold pass: full blocks ADOPTED into the tree zero-copy
+        assert eng.prefix_cache.stats.blocks_adopted >= 3
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=10 + i, prompt=p, max_new_tokens=6))
+        done = sorted((r for r in eng.run() if r.rid >= 10), key=lambda r: r.rid)
+        assert len(done) == 3
+        for i, r in enumerate(done):
+            assert r.out == refs[i], f"paged warm request {i} diverged"
+        assert eng.stats.prefix_hits >= 3
+        assert eng.stats.paged_admits == 4
+        eng.check_kv()
+        assert eng.prefix_cache.total_refcount() == 0
+
+    def test_paged_matches_contiguous_token_exact(self, setup):
+        """The serve parity suite's core claim: both layouts, same
+        traffic, identical token streams (cold AND warm admissions)."""
+        cfg, params = setup
+        rng = np.random.default_rng(1)
+        shared = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        reqs = []
+        for i in range(6):
+            tail = rng.integers(0, cfg.vocab_size, 3 + i).astype(np.int32)
+            reqs.append((np.concatenate([shared, tail]), 4 + i % 3))
+        outs = {}
+        for layout in ("contiguous", "paged"):
+            eng = make_engine(cfg, params, kv_layout=layout,
+                              partial_match=False)
+            for i, (p, n) in enumerate(reqs):
+                eng.submit(Request(rid=i, prompt=p, max_new_tokens=n))
+            done = sorted(eng.run(), key=lambda r: r.rid)
+            outs[layout] = [r.out for r in done]
+            eng.check_kv()
+        assert outs["contiguous"] == outs["paged"]
+
+    def test_parity_under_eviction_pressure(self, setup):
+        """A page-starved pool forces continuous tree eviction while
+        requests decode mid-stream — outputs must stay exact and the
+        audit clean.  (Eviction can drop a node whose page a live block
+        table still aliases: the pool reference keeps the device page
+        alive — the unified-refcount guarantee under pressure.)"""
+        cfg, params = setup
+        rng = np.random.default_rng(2)
+        a = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+        b = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+        ref = cold_greedy(cfg, params, a, 16)
+        eng = make_engine(cfg, params, prefix_blocks=4)  # starved headroom
+        for rid, p in ((0, a), (1, b)):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=2))
+        eng.run()
+        eng.submit(Request(rid=2, prompt=a, max_new_tokens=16))
+        for _ in range(4):  # admit (warm, aliased) + a few decode steps
+            assert eng.step()
+        live = next(s.req for s in eng.slots if s.req is not None)
+        aliased = set(live.cache_handle.block_ids)
+        evicted = eng.prefix_cache.evict(10 ** 6)  # drop everything unpinned
+        assert evicted > 0
+        assert not (aliased & set(eng.pages.free)), \
+            "aliased pages of the live request were freed"
+        eng.check_kv()
+        done = [r for r in eng.run() if r.rid == 2]
+        assert done[0].out == ref, "mid-stream eviction changed live output"
+        eng.check_kv()
+        assert eng.prefix_cache.total_refcount() == 0
+
+
+class TestCopyOnWrite:
+    def test_cow_tail_isolation_between_prefix_sharers(self, setup):
+        """Two requests share a prefix that ends inside a cached block:
+        the second aliases the full blocks and clones the partial tail
+        block copy-on-write, so its suffix/decode writes cannot leak
+        into the cached block the first request's output depends on."""
+        cfg, params = setup
+        rng = np.random.default_rng(3)
+        template = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        trunc = template[:53].copy()               # ends mid-block 3
+        ref_full = cold_greedy(cfg, params, template, 8)
+        ref_trunc = cold_greedy(cfg, params, trunc, 8)
+        eng = make_engine(cfg, params)
+        eng.submit(Request(rid=0, prompt=template, max_new_tokens=2))
+        eng.run()                                  # blocks 0..3 cached
+        # both prefix-sharers resident TOGETHER: the truncated one COWs
+        # block 3 and decodes into the clone while the full one aliases
+        # the original block 3
+        eng.submit(Request(rid=1, prompt=template, max_new_tokens=8))
+        eng.submit(Request(rid=2, prompt=trunc, max_new_tokens=8))
+        done = sorted((r for r in eng.run() if r.rid >= 1), key=lambda r: r.rid)
+        assert eng.stats.cow_copies >= 1
+        assert eng.prefix_cache.stats.partial_hits >= 1
+        assert done[0].out == ref_full, "full-template sharer diverged"
+        assert done[1].out == ref_trunc, "COW'd truncated sharer diverged"
+        # the cached original is untouched: a THIRD serving still exact
+        eng.submit(Request(rid=3, prompt=template, max_new_tokens=8))
+        (r3,) = (r for r in eng.run() if r.rid == 3)
+        assert r3.out == ref_full, "COW leaked into the shared cached block"
+        eng.check_kv()
+
+    def test_identical_reserve_uses_partial_tail(self, setup):
+        """Re-serving an identical prompt (the production hot case) is
+        capped at S-1 matched — the partial tail match turns the suffix
+        into a single token instead of a whole block."""
+        cfg, params = setup
+        rng = np.random.default_rng(4)
+        prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        ref = cold_greedy(cfg, params, prompt, 5)
+        eng = make_engine(cfg, params)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+        eng.run()
+        eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=5))
+        (r,) = (x for x in eng.run() if x.rid == 1)
+        assert r.out == ref
+        assert eng.stats.cow_copies == 1
+        # 48 full-block tokens + 15 partial tokens aliased, 1 prefilled
+        assert eng.stats.prefix_tokens_saved >= 63
+        eng.check_kv()
+
+
+class TestAutoLayout:
+    def test_auto_dispatch_flips_after_warmup(self, setup):
+        """kv_layout=auto: the controller blind-trials the candidate
+        layout per (matched-length x occupancy) bucket and concludes
+        with a measured switch-or-revert — the paper's warm-up-then-win
+        loop at the memory-layout level."""
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        shared = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        vpe = VPE(controller_kwargs=dict(min_samples=2, trial_samples=2))
+        eng = make_engine(cfg, params, kv_layout="auto", slots=1, vpe=vpe)
+        for i in range(10):
+            tail = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+            eng.submit(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                               max_new_tokens=2))
+        eng.run()
+        # warm admissions at occupancy 0-of-1 land in one bucket (the
+        # first request's four 16-token blocks are all adopted, so every
+        # later prompt matches 64 full-block tokens)
+        bucket = kv_layout_bucket(64, 0, 1)
+        d = vpe.controller.decision("kv_layout", bucket)
+        assert set(d.tried) == {"contiguous", "paged"}
+        events = [e for e, _, _ in d.history]
+        assert "trial" in events
+        assert ("switch" in events) or ("revert" in events)
+        assert eng.stats.paged_admits >= 1   # the trial really ran paged
+        eng.check_kv()
+
+    def test_auto_parity_with_forced_flip(self, setup):
+        """Outputs stay exact across a forced layout flip mid-traffic
+        (mixed-layout decode steps select per slot)."""
+        cfg, params = setup
+        rng = np.random.default_rng(6)
+        shared = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        prompts = [np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, 4 + i).astype(np.int32)])
+            for i in range(4)]
+        refs = [cold_greedy(cfg, params, p, 8) for p in prompts]
+        vpe = VPE()
+        eng = make_engine(cfg, params, kv_layout="auto", slots=2, vpe=vpe)
+        eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=8))
+        eng.run()
+        # force paged for every bucket the next admissions can land in,
+        # then submit all four: slots hold a mix of layouts mid-decode
+        for m in range(0, 40):
+            for occ in range(0, 3):
+                vpe.controller.force("kv_layout", kv_layout_bucket(m, occ, 2),
+                                     "paged")
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=10 + i, prompt=p, max_new_tokens=8))
+        done = sorted((r for r in eng.run() if r.rid >= 10), key=lambda r: r.rid)
+        for i, r in enumerate(done):
+            assert r.out == refs[i], f"auto-flip request {i} diverged"
+        assert eng.stats.paged_admits >= 1
+        eng.check_kv()
+
+
+class TestPageAccounting:
+    def test_pool_unit_invariants(self):
+        pool = PagePool(4)
+        a, b = pool.alloc(), pool.alloc()
+        pool.ref(a)
+        pool.check({a: 2, b: 1})
+        pool.unref(a)
+        pool.unref(a)
+        assert pool.refcount(a) == 0 and a in pool.free
+        with pytest.raises(AssertionError):
+            pool.unref(a)                      # double free
+        with pytest.raises(AssertionError):
+            pool.check({b: 2})                 # dangling owner claim
+        pool.unref(b)
+        pool.check({})
+        assert sorted(pool.free) == list(range(4))
+
+    def test_pooled_alloc_evicts_past_aliased_victims(self):
+        """Tree allocation under pool pressure must keep evicting until a
+        page actually FREES: evicting a node whose page a live block
+        table still aliases releases no capacity, and giving up there
+        would silently stop caching while freeable leaves remain."""
+        from repro.runtime.prefix_cache import PrefixCache
+        pool = PagePool(3)
+        pc = PrefixCache(3, 2, pool=pool)
+        ha = pc.acquire([1, 1])
+        pc.extend(ha, [1, 1])
+        a_page = ha.block_ids[0]
+        pool.ref(a_page)              # a live block table aliases A's page
+        pc.release(ha)                # A unpinned -> LRU victim
+        hb = pc.acquire([2, 2])
+        pc.extend(hb, [2, 2])
+        pc.release(hb)
+        assert pool.alloc() is not None   # drain the last free page
+        hc = pc.acquire([3, 3])
+        fresh = pc.extend(hc, [3, 3])
+        # evicting A freed nothing (aliased); the allocator must move on
+        # to B and succeed
+        assert len(fresh) == 1, "allocation gave up behind an aliased victim"
+        assert pool.refcount(a_page) == 1     # A's page survives via alias
+        pc.release(hc)
+        pc.check()
+
+    def test_trash_page_outside_pool(self, setup):
+        cfg, params = setup
+        eng = make_engine(cfg, params)
+        assert eng.pages.trash_id == eng.pages.num_pages
+        # the device pool really has the extra trash row
+        assert eng.page_pool["k"].shape[1] == eng.pages.num_pages + 1
+
+    def test_drain_leaves_only_tree_pages(self, setup):
+        """After a full drain every pool reference is tree ownership;
+        a full eviction then returns the pool to pristine."""
+        cfg, params = setup
+        rng = np.random.default_rng(7)
+        shared = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        eng = make_engine(cfg, params, prefix_blocks=8)
+        for i in range(6):
+            tail = rng.integers(0, cfg.vocab_size, 3 + i).astype(np.int32)
+            eng.submit(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                               max_new_tokens=1 + i % 3))
+        done = eng.run()
+        assert len(done) == 6
+        assert all(s.free and not s.pages for s in eng.slots)
+        eng.check_kv()
+        assert eng.prefix_cache.total_refcount() == 0
+        eng.prefix_cache.evict(10 ** 6)
+        assert eng.prefix_cache.live_blocks == 0
+        assert eng.pages.num_live == 0
+        eng.check_kv()
+
+    def test_paged_requires_aligned_max_len(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError):
+            ContinuousBatchingEngine(cfg, params, slots=1, max_len=100,
+                                     block_size=16, kv_layout="paged")
+        with pytest.raises(ValueError):
+            ContinuousBatchingEngine(cfg, params, slots=1, max_len=64,
+                                     kv_layout="blocked")

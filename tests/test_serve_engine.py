@@ -31,15 +31,24 @@ def single_request_greedy(cfg, params, prompt, max_new, max_len=64):
     return [int(t) for t in serve.generate({"tokens": prompt[None, :]}, max_new)[0]]
 
 
+# the serve-engine contract is layout-independent: every parity proof in
+# this module must hold whether a slot's KV lives in the contiguous
+# per-slot region or behind a paged block table (tier-1 runs both — the
+# CI matrix over --kv-layout is this fixture)
+LAYOUTS = ("contiguous", "paged")
+
+
 class TestGreedyParity:
-    def test_uniform_batch_matches_generate(self, setup):
+    @pytest.mark.parametrize("kv_layout", LAYOUTS)
+    def test_uniform_batch_matches_generate(self, setup, kv_layout):
         """Engine output == lockstep ServeLoop.generate, token for token."""
         cfg, params = setup
         rng = np.random.default_rng(0)
         prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
         serve = ServeLoop(cfg, params, max_len=48, batch=3)
         want = serve.generate({"tokens": prompts}, 6)
-        eng = ContinuousBatchingEngine(cfg, params, slots=3, max_len=48)
+        eng = ContinuousBatchingEngine(cfg, params, slots=3, max_len=48,
+                                       kv_layout=kv_layout)
         for i in range(3):
             eng.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=6))
         done = sorted(eng.run(), key=lambda r: r.rid)
@@ -61,7 +70,8 @@ class TestGreedyParity:
 
 
 class TestMidDecodeAdmission:
-    def test_late_request_starts_before_longest_finishes(self, setup):
+    @pytest.mark.parametrize("kv_layout", LAYOUTS)
+    def test_late_request_starts_before_longest_finishes(self, setup, kv_layout):
         """2 slots, 3 requests of unequal max_new_tokens: the third must
         be admitted into the slot freed by the short request while the
         long request is still decoding — and nobody's output changes."""
@@ -72,7 +82,8 @@ class TestMidDecodeAdmission:
         maxnew = [20, 4, 4]
         refs = [single_request_greedy(cfg, params, p, m)
                 for p, m in zip(prompts, maxnew)]
-        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=64)
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=64,
+                                       kv_layout=kv_layout)
         for i in range(3):
             eng.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=maxnew[i]))
         done = sorted(eng.run(), key=lambda r: r.rid)
@@ -171,6 +182,86 @@ class TestVPETunedDecode:
         # a trial of the non-incumbent implies at least one re-jit
         assert eng.stats.rejits >= 1
         assert eng.stats.decode_steps > 0
+
+
+class TestPrefixAwareScheduling:
+    """Admission-order policy: co-schedule cached-prefix sharers, with a
+    hard starvation bound (a request is jumped at most ``max_skip``
+    times).  Pure host-side — the tests drive ``_pop_next`` directly so
+    no model runs."""
+
+    def _engine(self, setup, **kw):
+        cfg, params = setup
+        kw.setdefault("slots", 1)
+        kw.setdefault("max_len", 64)
+        kw.setdefault("prefix_blocks", 16)
+        kw.setdefault("max_skip", 3)
+        return ContinuousBatchingEngine(cfg, params, **kw)
+
+    def _seed_template(self, eng, template):
+        """Cache a template's full blocks host-side (page contents are
+        irrelevant to scheduling probes)."""
+        h = eng.prefix_cache.acquire(template)
+        eng.prefix_cache.extend(h, template)
+        eng.prefix_cache.release(h)
+
+    def test_cached_prefix_jumps_queue(self, setup):
+        eng = self._engine(setup)
+        rng = np.random.default_rng(0)
+        template = rng.integers(0, eng.cfg.vocab_size, 32).astype(np.int32)
+        self._seed_template(eng, template)
+        cold = Request(rid=0, prompt=rng.integers(
+            0, eng.cfg.vocab_size, 20).astype(np.int32), max_new_tokens=1)
+        warm = Request(rid=1, prompt=np.concatenate(
+            [template, np.array([7], np.int32)]), max_new_tokens=1)
+        eng.queue = [cold, warm]
+        assert eng._pop_next().rid == 1          # warm sharer first
+        assert cold.skips == 1
+        assert eng.stats.sched_skips == 1
+        assert eng._pop_next().rid == 0
+
+    def test_starvation_bound(self, setup):
+        """An unmatched head request is admitted after at most max_skip
+        jumps, no matter how many warm sharers keep arriving."""
+        eng = self._engine(setup, max_skip=3)
+        rng = np.random.default_rng(1)
+        template = rng.integers(0, eng.cfg.vocab_size, 32).astype(np.int32)
+        self._seed_template(eng, template)
+        cold = Request(rid=0, prompt=rng.integers(
+            0, eng.cfg.vocab_size, 20).astype(np.int32), max_new_tokens=1)
+        eng.queue = [cold]
+        admitted = []
+        for i in range(1, 10):
+            # a fresh warm sharer arrives before every admission
+            eng.queue.append(Request(rid=i, prompt=np.concatenate(
+                [template, np.array([i], np.int32)]), max_new_tokens=1))
+            admitted.append(eng._pop_next().rid)
+            if 0 in admitted:
+                break
+        assert 0 in admitted, "head request starved"
+        # exactly max_skip warm requests jumped it, then it was forced
+        assert admitted.index(0) == eng.max_skip
+        assert cold.skips == eng.max_skip
+
+    def test_fifo_without_prefix_cache(self, setup):
+        cfg, params = setup
+        eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=64)
+        reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=1) for i in range(3)]
+        eng.queue = list(reqs)
+        assert [eng._pop_next().rid for _ in range(3)] == [0, 1, 2]
+        assert eng.stats.sched_skips == 0
+
+    def test_fifo_among_equal_matches(self, setup):
+        """Ties keep submission order — equal sharers are not reordered."""
+        eng = self._engine(setup)
+        rng = np.random.default_rng(2)
+        template = rng.integers(0, eng.cfg.vocab_size, 32).astype(np.int32)
+        self._seed_template(eng, template)
+        eng.queue = [Request(rid=i, prompt=np.concatenate(
+            [template, np.array([i], np.int32)]), max_new_tokens=1)
+            for i in range(4)]
+        assert [eng._pop_next().rid for _ in range(4)] == [0, 1, 2, 3]
 
 
 class TestBuckets:

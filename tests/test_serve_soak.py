@@ -3,12 +3,17 @@
 ~200 requests with heavily overlapping prefixes (a few "system prompt"
 templates of different lengths plus random tails) are pushed through a
 small slot pool with a deliberately starved page pool, so admission,
-warm hits, the reuse/recompute VPE axis, pinning, eviction and slot
-recycling all interleave.  After full drain:
+warm hits, the reuse/recompute VPE axis, prefix-aware queue
+reordering, pinning, eviction and slot recycling all interleave — and
+the whole thing runs once per KV layout (contiguous slot regions vs
+paged block tables over the unified pool).  After full drain:
 
 * every request completed, no slot is still occupied;
 * no KV page is leaked: tree blocks + free list == pool, all pins
-  released, and a full eviction returns every page;
+  released, and a full eviction returns every page — in paged mode the
+  cross-structure audit (:meth:`ContinuousBatchingEngine.check_kv`)
+  additionally proves every pool refcount is exactly tree ownership +
+  live block tables (zero leaked pages at drain);
 * engine stats are monotone/consistent;
 * per-request: queue_wait >= 0 and ttft <= total latency.
 
@@ -29,23 +34,31 @@ from repro.runtime.serve_loop import ContinuousBatchingEngine, Request
 N_REQUESTS = 200
 
 
-@pytest.mark.slow
-def test_soak_no_leaks_and_sane_stats():
+@pytest.fixture(scope="module")
+def setup():
     cfg = ARCHS["qwen3-8b"].reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kv_layout", ["contiguous", "paged", "auto"])
+def test_soak_no_leaks_and_sane_stats(setup, kv_layout):
+    cfg, params = setup
     rng = np.random.default_rng(0)
     templates = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
                  for n in (16, 32, 48, 64)]
     vpe = VPE(controller_kwargs=dict(min_samples=2, trial_samples=2))
     eng = ContinuousBatchingEngine(
         cfg, params, slots=4, max_len=128, vpe=vpe,
-        prefix_blocks=24, block_size=16)  # starved pool -> real evictions
+        prefix_blocks=24, block_size=16,  # starved headroom -> real evictions
+        kv_layout=kv_layout)
 
     reqs = []
     for i in range(N_REQUESTS):
         tpl = templates[int(rng.integers(0, len(templates)))]
         # tails long enough to complete fresh blocks of their own (block
-        # size 16), so the starved 24-page pool must evict continuously
+        # size 16), so the starved pool must evict continuously
         tail = rng.integers(0, cfg.vocab_size,
                             int(rng.integers(1, 40))).astype(np.int32)
         max_new = int(rng.integers(1, 12))
@@ -53,7 +66,8 @@ def test_soak_no_leaks_and_sane_stats():
         reqs.append(Request(rid=i, prompt=np.concatenate([tpl, tail]),
                             max_new_tokens=max_new, eos_id=eos))
 
-    # stats must be monotone while serving: sample between bursts
+    # stats must be monotone while serving: sample between bursts, and
+    # the page audit must hold at every drain point, not just the end
     last_tokens = last_steps = 0
     burst = 25
     for lo in range(0, N_REQUESTS, burst):
@@ -63,6 +77,7 @@ def test_soak_no_leaks_and_sane_stats():
         assert eng.stats.tokens_out >= last_tokens
         assert eng.stats.decode_steps >= last_steps
         last_tokens, last_steps = eng.stats.tokens_out, eng.stats.decode_steps
+        eng.check_kv()
 
     done = eng.completed
     assert len(done) == N_REQUESTS
@@ -70,17 +85,24 @@ def test_soak_no_leaks_and_sane_stats():
 
     # -- no leaked slots ------------------------------------------------
     assert all(s.free for s in eng.slots)
+    assert all(not s.pages for s in eng.slots)
     assert eng.num_active == 0 and not eng.queue
 
     # -- no leaked KV pages ---------------------------------------------
     pc = eng.prefix_cache
-    pc.check()                              # allocated + free == pool
+    eng.check_kv()                          # tree + pool refcount audit
     assert pc.total_refcount() == 0         # every pin released at retire
     assert all(r.cache_handle is None for r in done)
     evicted = pc.evict(10 ** 6)             # with zero pins, full drain
     assert pc.live_blocks == 0
-    assert evicted <= pc.num_blocks
-    assert sorted(pc.free) == list(range(pc.num_blocks))
+    if eng.pages is not None:
+        # paged layouts: after tree drain the unified pool is pristine
+        assert eng.pages.num_live == 0
+        assert sorted(eng.pages.free) == list(range(eng.pages.num_pages))
+        eng.check_kv()
+    else:
+        assert evicted <= pc.num_blocks
+        assert sorted(pc.free) == list(range(pc.num_blocks))
 
     # -- stats consistency ----------------------------------------------
     st = eng.stats
@@ -91,6 +113,9 @@ def test_soak_no_leaks_and_sane_stats():
     assert st.tokens_out == sum(len(r.out) for r in done)
     assert st.decode_steps > 0 and st.decode_s > 0 and st.prefill_s > 0
     assert len(st.ttft_s) == len(st.queue_wait_s) == N_REQUESTS
+    assert len(st.kv_place_s) == N_REQUESTS
+    if kv_layout == "paged":
+        assert st.paged_admits == N_REQUESTS
 
     # -- per-request latency invariants ----------------------------------
     for r in done:
@@ -103,7 +128,10 @@ def test_soak_no_leaks_and_sane_stats():
         assert q >= 0.0
         assert t >= q  # ttft includes the queue wait
 
-    # the starved pool really exercised eviction, and the policy axis saw
-    # traffic (prefix_reuse decisions exist for at least one bucket)
+    # the starved pool really exercised eviction, and the policy axes saw
+    # traffic (prefix_reuse decisions exist for at least one bucket; in
+    # auto mode the kv_layout axis must have been exercised too)
     assert pc.stats.evictions > 0
     assert any(op == "prefix_reuse" for (op, _b) in vpe.controller._decisions)
+    if kv_layout == "auto":
+        assert any(op == "kv_layout" for (op, _b) in vpe.controller._decisions)
