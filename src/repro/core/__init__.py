@@ -20,7 +20,7 @@ from .profiler import Profiler, SampleSet, Welford
 from .registry import GLOBAL, OpEntry, Registry, Variant, reset_global
 from .shape_class import (
     bucket_label, kv_layout_bucket, occupancy_bucket, pad_to_bucket,
-    prefix_len_bucket, shape_bucket)
+    prefill_chunk_bucket, prefix_len_bucket, shape_bucket)
 
 __all__ = [
     "VPE",
@@ -42,4 +42,5 @@ __all__ = [
     "pad_to_bucket",
     "prefix_len_bucket",
     "kv_layout_bucket",
+    "prefill_chunk_bucket",
 ]

@@ -67,6 +67,10 @@ def bucket_label(bucket: Tuple) -> str:
         _, pb, level, total = bucket
         plen = "plen0" if pb == 0 else f"plen[{2 ** (pb - 1)},{2 ** pb})"
         return f"{plen}xocc{level}/{total}slots"
+    if bucket and bucket[0] == "pfc":
+        _, pb, level, total = bucket
+        plen = "plen0" if pb == 0 else f"plen[{2 ** (pb - 1)},{2 ** pb})"
+        return f"chunk:{plen}xocc{level}/{total}slots"
     b, ranks = bucket
     lo, hi = 2 ** b, 2 ** (b + 1)
     return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}"
@@ -117,6 +121,23 @@ def kv_layout_bucket(matched: int, active: int, total: int, *,
     p = prefix_len_bucket(matched)
     o = occupancy_bucket(active, total, levels=levels)
     return ("kvl", p[1], o[1], total)
+
+
+def prefill_chunk_bucket(prompt_len: int, active: int, total: int, *,
+                         levels: int = 4) -> Tuple:
+    """Dispatch key for the serve engine's ``prefill_chunk`` axis.
+
+    The best prefill chunk size trades per-chunk dispatch overhead (many
+    small chunks pay the fixed jit-call cost repeatedly) against decode
+    interference (one whole-prompt chunk stalls every decoding slot for
+    its full duration) — and both sides scale with how long the prompt
+    is and how busy the pool already is.  So the decision is keyed by
+    prompt-length bucket × occupancy level, the same two-dimensional
+    decision-tree-on-input-size shape as :func:`kv_layout_bucket`.
+    """
+    p = prefix_len_bucket(prompt_len)
+    o = occupancy_bucket(active, total, levels=levels)
+    return ("pfc", p[1], o[1], total)
 
 
 def pad_to_bucket(n: int, *, minimum: int = 16) -> int:

@@ -1,4 +1,11 @@
-"""Paged decode attention — block-indirect KV reads for the serve engine.
+"""Paged attention — block-indirect KV reads for the serve engine.
+
+Two kernels share the scalar-prefetch block-table indirection:
+:func:`paged_attention_pallas` (single-query decode, PR 3) and
+:func:`paged_prefill_attention_pallas` (multi-query chunked prefill —
+a whole Q-chunk scored per page, per-row causal frontiers).  Decode is
+the C == 1 special case of the prefill kernel's math; they are kept
+separate because their scratch shapes and sparsity patterns differ.
 
 The paged KV layout (models/kvcache.py, runtime/serve_loop.py) stores
 every sequence as a *block table* of page ids into one shared pool, so
@@ -97,6 +104,146 @@ def _pa_kernel(
         l = l_ref[...]
         l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows -> 0 output
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _pa_prefill_kernel(
+    bt_ref, base_ref,           # scalar prefetch: (B, nb) pages, (B,) bases
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, bs: int, nb: int, C: int, chunk_len: int,
+    window: Optional[int], scale: float,
+):
+    """Multi-query (chunked-prefill) body: identical online-softmax
+    recurrence to :func:`_pa_kernel`, but every grid step scores a whole
+    chunk of ``C`` queries — rows of the (G*C, bs) score tile are query
+    (g, i) at absolute position ``base + i``, so the causal frontier is
+    per ROW rather than per sequence.  The chunk's own K/V are read from
+    the pages like everything else (the engine writes-then-attends),
+    which is exactly what makes prefill a multi-query special case of
+    the decode indirection instead of a separate code path."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    base = base_ref[b]
+    col = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    GC = m_ref.shape[0]
+    # row r of the flattened (group, C) query tile is chunk position r % C
+    row_pos = base + jax.lax.broadcasted_iota(jnp.int32, (GC, 1), 0)[:, 0] % C
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G*C, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                      # (G*C, bs)
+        mask = (col[None, :] <= row_pos[:, None]) \
+            & (col[None, :] < base + chunk_len)
+        if window is not None:
+            mask &= col[None, :] > row_pos[:, None] - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]                            # (G*C, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.where(m_new == _NEG_INF, 0.0, jnp.exp(s - m_new))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # block sparsity: skip pages entirely past the LAST query's causal
+    # frontier, and (SWA) entirely before the FIRST query's window
+    live = j * bs <= base + chunk_len - 1
+    if window is not None:
+        live &= (j * bs + bs - 1) > base - window
+    pl.when(live)(body)
+
+    @pl.when(j == nb - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk_len", "window", "scale", "interpret"))
+def paged_prefill_attention_pallas(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    base: jax.Array,
+    *,
+    chunk_len: Optional[int] = None,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Chunked-prefill attention reading KV pages in place.
+
+    q: (B, Hq, C, D) — a prompt chunk of C queries per sequence, query
+    ``i`` at absolute position ``base[b] + i``; k_pool/v_pool:
+    (N, Hkv, bs, D) one layer of the paged pool, with the chunk's own
+    K/V already written into its pages; block_tables: (B, nb) int32;
+    base: (B,) int32.  ``chunk_len`` (static) caps valid columns at
+    ``base + chunk_len`` — pass the real token count when C is padded.
+    Returns (B, Hq, C, D).
+
+    Same scalar-prefetch indirection as :func:`paged_attention_pallas`
+    (grid step (b, h, j) DMAs pool page ``block_tables[b, j]``), with
+    all ``Hq // Hkv * C`` query rows of a KV head scored per page — the
+    multi-query generalization the chunked-prefill engine path needs,
+    so a 32k prompt's prefill touches each page once per chunk instead
+    of materializing a linearized prefix copy in HBM.
+    """
+    B, Hq, C, D = q.shape
+    N, Hkv, bs, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if chunk_len is None:
+        chunk_len = C
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    q4 = q.reshape(B, Hkv, group * C, D)
+    kernel = functools.partial(
+        _pa_prefill_kernel, bs=bs, nb=nb, C=C, chunk_len=chunk_len,
+        window=window, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, group * C, D),
+                         lambda b, h, j, bt, bs_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, j, bt, bs_: (bt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, j, bt, bs_: (bt[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group * C, D),
+                               lambda b, h, j, bt, bs_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group * C, 1), jnp.float32),
+            pltpu.VMEM((group * C, 1), jnp.float32),
+            pltpu.VMEM((group * C, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group * C, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables, base, q4, k_pool, v_pool)
+    return out.reshape(B, Hq, C, D)
 
 
 @functools.partial(

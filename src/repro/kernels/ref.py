@@ -86,6 +86,63 @@ def paged_attention_ref(
     return out.astype(q.dtype)
 
 
+def paged_prefill_attention_ref(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    base: jax.Array,
+    *,
+    chunk_len: Optional[int] = None,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Multi-query (chunked-prefill) attention through block tables (oracle).
+
+    q: (B, Hq, C, D) — one prompt *chunk* of C queries per sequence;
+    k_pool/v_pool: (N, Hkv, bs, D) — ONE layer of the paged KV pool;
+    block_tables: (B, nb) page ids; base: (B,) the absolute position of
+    each sequence's first chunk query.  The chunk's own K/V must already
+    be resident in the pages (the engine writes-then-attends), so query
+    ``i`` of sequence ``b`` sits at absolute position ``base[b] + i``
+    and attends causally to gathered columns ``t <= base[b] + i`` (and
+    within the sliding window, when set).  ``chunk_len`` caps the valid
+    columns at ``base + chunk_len`` — queries past it are padding whose
+    output the caller discards.  With C == 1 and base == lengths this
+    degenerates to :func:`paged_attention_ref`.  This materializes the
+    gather; the Pallas kernel in paged_attention.py computes the same
+    function reading pages in place.
+    """
+    B, Hq, C, D = q.shape
+    N, Hkv, bs, _ = k_pool.shape
+    assert Hq % Hkv == 0
+    nb = block_tables.shape[1]
+    group = Hq // Hkv
+    if chunk_len is None:
+        chunk_len = C
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    def lin(pool):
+        g = pool[block_tables]                    # (B, nb, Hkv, bs, D)
+        return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, nb * bs, D)
+
+    k, v = lin(k_pool), lin(v_pool)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    col = jnp.arange(nb * bs)[None, None, :]               # (1, 1, T)
+    row = base[:, None, None] + jnp.arange(C)[None, :, None]  # (B, C, 1)
+    mask = (col <= row) & (col < (base[:, None, None] + chunk_len))
+    if window is not None:
+        mask &= col > row - window
+    s = jnp.where(mask[:, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def attention_ref(
     q: jax.Array,
     k: jax.Array,

@@ -42,7 +42,18 @@ def main() -> None:
                          "paged block tables over the unified page pool "
                          "(O(1) prefix admission), or auto — a VPE axis "
                          "measured per matched-length x occupancy bucket")
+    ap.add_argument("--prefill-chunk", default="whole",
+                    help="paged prefill chunk size in tokens, 'whole' "
+                         "(one chunk per prompt), or 'auto' — a VPE axis "
+                         "measured per prompt-length x occupancy bucket; "
+                         "chunks interleave with decode steps so long "
+                         "prompts cannot stall resident requests")
+    ap.add_argument("--chunks-per-step", type=int, default=1,
+                    help="prefill chunks run per engine step (the decode "
+                         "stall budget)")
     args = ap.parse_args()
+    chunk = (args.prefill_chunk if args.prefill_chunk in ("whole", "auto")
+             else int(args.prefill_chunk))
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -57,7 +68,8 @@ def main() -> None:
         engine = ContinuousBatchingEngine(
             cfg, params, slots=args.batch, max_len=args.max_len, vpe=VPE(),
             prefix_blocks=args.prefix_blocks if args.prefix_cache else 0,
-            block_size=args.block_size, kv_layout=args.kv_layout)
+            block_size=args.block_size, kv_layout=args.kv_layout,
+            prefill_chunk=chunk, chunks_per_step=args.chunks_per_step)
         for r in reqs:
             engine.submit(r)
         done = engine.run()

@@ -279,6 +279,44 @@ def copy_page(pool: Cache, src: jax.Array, dst: jax.Array) -> Cache:
     }
 
 
+def write_chunk_paged_layer(
+    pool_k_l: jax.Array, pool_v_l: jax.Array, k_new: jax.Array,
+    v_new: jax.Array, bt_row: jax.Array, base: jax.Array,
+    chunk_len: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter one prefill chunk's K/V into ONE slot's pages (one layer).
+
+    k_new/v_new: (1, Hkv, C_pad, D) covering absolute positions
+    ``[base, base + C_pad)`` (valid up to ``chunk_len``); bt_row: (nb,)
+    the slot's full block-table row (trash-padded past its allocated
+    pages).  For every (table column j, in-page offset o) the source
+    index is ``j*bs + o - base``; positions outside
+    ``[base, base + chunk_len)`` keep the existing pool content.  That
+    single mask is what makes the same scatter serve every chunk shape:
+    aliased prefix pages (all positions ``< base``) are never written, a
+    copy-on-write tail page is written only from ``base`` on, a chunk
+    ending mid-block leaves the rest of that page for the next chunk,
+    and trash-padded columns write their own old content back (their
+    positions land past ``chunk_len``).  This is the multi-token
+    generalization of :func:`append_token_paged` — chunked prefill
+    writes THEN attends through the table, exactly like decode.
+    """
+    bs = pool_k_l.shape[2]
+    nb = bt_row.shape[0]
+    src = (jnp.arange(nb) * bs)[:, None] + jnp.arange(bs)[None, :] - base
+    valid = (src >= 0) & (src < chunk_len)                 # (nb, bs)
+    idx = jnp.clip(src, 0, k_new.shape[2] - 1)
+    sel = valid[:, None, :, None]
+
+    def put(pool_arr, src_arr):
+        vals = src_arr[0][:, idx]                          # (Hkv, nb, bs, D)
+        vals = vals.transpose(1, 0, 2, 3).astype(pool_arr.dtype)
+        old = pool_arr[bt_row]                             # (nb, Hkv, bs, D)
+        return pool_arr.at[bt_row].set(jnp.where(sel, vals, old))
+
+    return put(pool_k_l, k_new), put(pool_v_l, v_new)
+
+
 def paged_gather_layer(pool_k_l: jax.Array, pool_v_l: jax.Array,
                        block_table: jax.Array,
                        out_dtype=None) -> Tuple[jax.Array, jax.Array]:

@@ -174,6 +174,16 @@ def decode_step_paged(cfg: ModelConfig, params: Any, pool: Any, cache: Any,
                                                decode_impl=decode_impl)
 
 
+def prefill_chunk_paged(cfg: ModelConfig, params: Any, pool: Any,
+                        bt_row: jax.Array, tokens: jax.Array,
+                        base: jax.Array, chunk_len: jax.Array
+                        ) -> Tuple[Any, jax.Array]:
+    """One prompt chunk prefilled directly over the paged KV layout
+    (reads prior pages through the block table, writes its own)."""
+    return _slot_module(cfg).prefill_chunk_paged(
+        cfg, params, pool, bt_row, tokens, base, chunk_len)
+
+
 def decode_step_mixed(cfg: ModelConfig, params: Any, cache: Any, pool: Any,
                       tokens: jax.Array, use_paged: jax.Array,
                       live: jax.Array, decode_impl: str = "grouped"

@@ -369,6 +369,90 @@ def prefill_suffix_kv(cfg: ModelConfig, params: Params, tokens: jax.Array,
     return k_all, v_all, logits
 
 
+def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Dict,
+                        bt_row: jax.Array, tokens: jax.Array,
+                        base: jax.Array, chunk_len: jax.Array
+                        ) -> Tuple[Dict, jax.Array]:
+    """Prefill ONE chunk of a prompt directly over the paged KV layout.
+
+    The multi-query generalization of :func:`decode_step_paged`: per
+    layer the chunk's queries attend against the block-table row read
+    through the page pool — gathered column ``t`` holds absolute
+    position ``t``, so the causal mask reads the aliased prefix pages
+    and every earlier chunk's pages where they live — plus the chunk's
+    own fresh K/V, which are then scattered into the slot's pages
+    (:func:`~repro.models.kvcache.write_chunk_paged_layer`) for the
+    next chunk (and decode) to read.  Nothing O(prompt) is materialized
+    outside the jit: this is what replaces the PR 3 warm path's
+    transient gather of the matched prefix (and, on a TPU,
+    :func:`~repro.kernels.paged_attention.paged_prefill_attention_pallas`
+    reads the pages in place via scalar prefetch instead of this jnp
+    path's in-jit linearization).
+
+    pool: {"k","v"} (L, N, Hkv, bs, D) unified page pool; bt_row: (nb,)
+    the slot's block-table row (pages covering the whole prompt must
+    already be allocated; trash-padded past them); tokens: (1, C_pad)
+    right-padded chunk; base: absolute position of the chunk's first
+    token (prior positions ``[0, base)`` must already be resident in the
+    pages); chunk_len: real tokens in the chunk.
+
+    Returns (pool, logits): the updated pool (the chunk's K/V now live
+    in its pages — there is no separate K/V output to insert) and the
+    (1, V) logits at chunk position ``chunk_len - 1`` — for the final
+    chunk that is the prompt's last position, i.e. the first generated
+    token's logits.  Pages store the COMPUTE dtype, so a chunk reads
+    back earlier chunks' K/V bit-identical to what a monolithic prefill
+    would have kept live in registers — chunked ≡ whole-prompt prefill
+    is structural up to the masked-softmax padding layout, which the
+    parity tests pin token-exact for the served configs.
+    """
+    B, C = tokens.shape
+    nb = bt_row.shape[0]
+    bs = pool["k"].shape[3]
+    T = nb * bs
+    x = jnp.take(params["embed"], tokens, axis=0)
+    base = jnp.asarray(base, jnp.int32)
+    positions = base + jnp.arange(C)
+    s = attn_spec(cfg)
+
+    # same mask construction as :func:`prefill_suffix_kv`, with the
+    # gathered block-table row standing in for the gathered prefix:
+    # columns [0, T) are the linearized pages (absolute position = column,
+    # valid below ``base``), columns [T, T+C) the chunk's own keys
+    cols = jnp.arange(T + C)
+    col_abs = jnp.where(cols < T, cols, base + cols - T)
+    col_valid = (cols >= T) | (cols < base)
+    row_abs = base + jnp.arange(C)
+    mask = col_valid[None, :] & (col_abs[None, :] <= row_abs[:, None])
+    if s.window is not None:
+        mask &= col_abs[None, :] > row_abs[:, None] - s.window
+    mask = mask[None]                     # (1, C, T + C)
+
+    def body(x, scanned):
+        lp, pk, pv = scanned              # (N, Hkv, bs, D)
+
+        def attn_call(q, k, v):
+            kg, vg = kvcache.paged_gather_layer(pk, pv, bt_row[None])
+            k_full = jnp.concatenate([kg.astype(k.dtype), k], axis=2)
+            v_full = jnp.concatenate([vg.astype(v.dtype), v], axis=2)
+            return _prefix_attention(q, k_full, v_full, mask)
+
+        x, k, v = _layer_kv_fwd(cfg, s, None, lp, x, positions,
+                                attn_call=attn_call)
+        pk, pv = kvcache.write_chunk_paged_layer(pk, pv, k, v, bt_row,
+                                                 base, chunk_len)
+        return x, (pk, pv)
+
+    x, (k_new, v_new) = layers.scan_layers(
+        body, x, (params["layers"], pool["k"], pool["v"]),
+        unroll=cfg.unroll_layers)
+    x_last = jax.lax.dynamic_slice_in_dim(x, chunk_len - 1, 1, axis=1)
+    x_last = layers.rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x_last @ head).astype(jnp.float32)[:, 0, :]
+    return {"k": k_new, "v": v_new}, logits
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array,
                 decode_impl: Optional[str] = None) -> Tuple[Dict, jax.Array]:
     """One decode step.  tokens: (B, 1) -> (new_cache, logits (B, 1, V)).

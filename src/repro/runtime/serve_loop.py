@@ -32,6 +32,19 @@ matched tail block) and decode attention reads pages through the table.
 by matched-prefix-length × occupancy buckets and fed from measured
 admission + decode wall time — the paper's measured keep-or-revert
 applied to a memory-layout decision.
+
+Since PR 4 prefill is no longer an atomic call on the paged layout:
+admission only *places* a request (alias + copy-on-write + page
+allocation + block-table install — O(1) in both matched and prompt
+length) and the prompt is then prefilled in fixed-size **chunks**
+(:func:`~repro.models.transformer.prefill_chunk_paged`) that read all
+prior positions through the block table in place.  Each engine step
+runs at most ``chunks_per_step`` chunks before the decode step, so the
+decode tail latency of resident requests — and the TTFT of short
+prompts behind a long one — is bounded by the chunk budget instead of
+by the longest queued prompt.  The chunk size itself is a measured
+dispatch axis (``prefill_chunk``), keyed by prompt-length × occupancy
+buckets and fed from the summed per-chunk wall at prefill completion.
 """
 
 from __future__ import annotations
@@ -46,7 +59,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import (VPE, kv_layout_bucket, occupancy_bucket,
-                        pad_to_bucket, prefix_len_bucket)
+                        pad_to_bucket, prefill_chunk_bucket,
+                        prefix_len_bucket)
 from repro.models import kvcache
 from repro.models import model as model_lib
 from repro.runtime.page_pool import PagePool
@@ -58,11 +72,16 @@ from repro.runtime.prefix_cache import PrefixCache
 #   prompt, keyed by matched-prefix-length bucket (the paper's measured
 #   keep-or-revert applied to memory reuse instead of compute offload);
 # * kv_layout — contiguous slot region vs paged block table, keyed by
-#   matched-length × occupancy (only registered for kv_layout="auto").
+#   matched-length × occupancy (only registered for kv_layout="auto");
+# * prefill_chunk — prefill chunk size in tokens ("whole" = one chunk),
+#   keyed by prompt-length × occupancy (only registered for
+#   prefill_chunk="auto"; the registered variant names come from the
+#   engine's ``chunk_choices`` — the list below is the canonical set).
 SERVE_AXES: Dict[str, List[str]] = {
     "serve_decode_impl": list(kvcache.DECODE_ATTN_VARIANTS),
     "prefix_reuse": ["reuse", "recompute"],
     "kv_layout": ["contiguous", "paged"],
+    "prefill_chunk": ["whole", "128", "512", "2048"],
 }
 
 KV_LAYOUTS = ("contiguous", "paged", "auto")
@@ -92,6 +111,15 @@ class ServeStats:
     cow_copies: int = 0              # partially-matched tail blocks COW'd
     sched_skips: int = 0             # queue entries jumped by prefix-aware
                                      # admission scheduling
+    prefill_chunks: int = 0          # chunked-prefill dispatches
+    tainted_steps: int = 0           # decode steps that paid a jit compile
+                                     # (excluded from per-slot attribution)
+    # decode service interruption per engine step: the wall spent in the
+    # admission + prefill-chunk phase ahead of a decode step, recorded
+    # only when decoding slots were actually waiting.  Monolithic
+    # prefill puts whole-prompt walls here; chunking bounds the series
+    # by the chunk budget — the mixed-workload bench's p95 target.
+    decode_stall_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -131,6 +159,8 @@ class ServeStats:
         if self.paged_admits:
             s += (f", paged {self.paged_admits} admits "
                   f"({self.cow_copies} cow)")
+        if self.prefill_chunks:
+            s += f", {self.prefill_chunks} prefill chunks"
         return s
 
 
@@ -184,6 +214,7 @@ class Request:
     done_step: int = -1
     # per-request latency record (soak invariants: 0 <= queue <= ttft
     # <= done_t - submit_t) and the prefix-cache pin held while resident
+    queue_wait_s: float = 0.0
     ttft_s: float = 0.0
     done_t: float = 0.0
     cache_handle: Optional[Any] = None
@@ -240,14 +271,31 @@ class _Slot:
     layout: str = "contiguous"   # KV layout this residency decodes through
     pos: int = 0                 # host mirror of cache["length"][slot]
     pages: List[int] = dataclasses.field(default_factory=list)
-    # kv_layout-axis sample bookkeeping (auto mode): the admission wall,
-    # the request's amortized share of decode-step wall, and whether a
-    # jit compile landed inside the measured admission (tainted samples
-    # must not feed the controller — PR 2's rule)
+    # chunked-prefill state: a paged admission is *placed* instantly and
+    # then prefilled chunk-by-chunk between decode steps
+    prefilling: bool = False
+    fill_pos: int = 0            # prompt positions already prefilled
+    chunk: int = 0               # chunk size this admission runs (0 = whole)
+    chunk_walls: List[float] = dataclasses.field(default_factory=list)
+    chunk_bucket: Optional[Tuple] = None   # prefill_chunk-axis bucket
+    chunk_variant: Optional[str] = None
+    place_wall: float = 0.0      # the O(1) placement span of this admission
+    reuse_bucket: Optional[Tuple] = None   # prefix_reuse sample (fed at
+    reuse_variant: str = "reuse"           # prefill completion)
+    # kv_layout-axis sample bookkeeping (auto mode): the admission wall
+    # (placement + chunk compute), and whether a jit compile landed
+    # inside any measured span (tainted samples must not feed the
+    # controller — PR 2's rule)
     admit_wall: float = 0.0
-    decode_share: float = 0.0
     admit_bucket: Optional[Tuple] = None
     tainted: bool = False
+    # per-step decode-wall attribution: each engine step's fenced wall is
+    # credited to the slots resident for it, EXCLUDING steps that paid a
+    # decode-jit compile — this replaces the PR 3 amortized-share-over-
+    # the-whole-residency heuristic, whose samples a rejit anywhere in
+    # the window could poison (ROADMAP "auto-layout sample quality")
+    steps_resident: int = 0
+    clean_step_shares: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def free(self) -> bool:
@@ -260,14 +308,39 @@ class ContinuousBatchingEngine:
     Engine iteration (:meth:`step`):
 
     1. **admit** — while a slot is free and the queue is non-empty, pick
-       a request (prefix-aware: see below), pad its prompt to a
-       power-of-two bucket, prefill it (batch of one) and install the
-       resulting K/V into the freed slot in the admission's KV layout;
-    2. **decode** — one jitted per-slot decode step advances *all* live
-       slots by one token (free slots decode garbage that is discarded);
-    3. **retire** — sequences hitting EOS or ``max_new_tokens`` are
+       a request (prefix-aware: see below).  A *contiguous* admission
+       prefills the whole prompt atomically and installs its K/V into
+       the slot; a *paged* admission is only **placed** — matched pages
+       aliased, a partial tail copy-on-write'd, suffix pages allocated,
+       block-table row installed (all O(1) in matched and prompt
+       length) — and the slot enters the *prefilling* state;
+    2. **prefill chunks** — at most ``chunks_per_step`` chunks run,
+       round-robin over prefilling slots; each chunk reads every prior
+       position in place through the slot's block table
+       (:func:`~repro.models.transformer.prefill_chunk_paged`) and
+       scatters its own K/V into the slot's pages.  The final chunk
+       yields the first generated token (TTFT) and flips the slot to
+       decoding;
+    3. **decode** — one jitted per-slot decode step advances all
+       *decoding* slots by one token (free and prefilling slots decode
+       garbage that is discarded);
+    4. **retire** — sequences hitting EOS or ``max_new_tokens`` are
        completed and free their slot immediately, so the *next* step's
        admission phase can refill it mid-decode of the others.
+
+    Because chunks interleave with decode steps, a 32k prompt can no
+    longer stall the decode slots for its whole prefill: decode service
+    interruption per step is bounded by the chunk budget
+    (``stats.decode_stall_s`` records it).  ``prefill_chunk`` sets the
+    chunk size in tokens, ``"whole"`` (the default) runs one chunk per
+    prompt, and ``"auto"`` makes the size a VPE axis keyed by
+    prompt-length × occupancy buckets, fed from the summed per-chunk
+    wall at prefill completion (compile-tainted samples dropped).
+    Chunking applies to paged-resolved admissions only: a contiguous
+    slot's cache stores the narrower slot dtype, so a chunk reading its
+    own earlier K/V back would change numerics — the contiguous layout
+    keeps the atomic copy-in path as the monolithic baseline (and
+    parity anchor).
 
     When a ``vpe`` is supplied, each decode step is timed and fed to the
     controller under the current occupancy bucket; variant selection
@@ -312,11 +385,21 @@ class ContinuousBatchingEngine:
                  occupancy_levels: int = 4, min_prompt_pad: int = 16,
                  prefix_blocks: int = 0, block_size: int = 16,
                  kv_layout: str = "contiguous", partial_match: bool = True,
-                 max_skip: int = 4, sched_window: int = 16) -> None:
+                 max_skip: int = 4, sched_window: int = 16,
+                 prefill_chunk: Any = "whole", chunks_per_step: int = 1,
+                 chunk_choices: Tuple[int, ...] = (128, 512, 2048)) -> None:
         if not model_lib.supports_slot_serving(cfg):
             raise ValueError(f"family {cfg.family!r} has no slot-serving path")
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}")
+        if isinstance(prefill_chunk, str):
+            if prefill_chunk not in ("whole", "auto"):
+                raise ValueError(
+                    "prefill_chunk must be a token count, 'whole' or 'auto'")
+        elif int(prefill_chunk) < 0:
+            raise ValueError("prefill_chunk must be >= 0 (0 = whole)")
+        if chunks_per_step < 1:
+            raise ValueError("chunks_per_step must be >= 1")
         self.cfg = cfg
         self.params = params
         self.num_slots = slots
@@ -328,6 +411,11 @@ class ContinuousBatchingEngine:
         self.partial_match = partial_match
         self.max_skip = max_skip
         self.sched_window = sched_window
+        self.prefill_chunk = prefill_chunk
+        self.chunks_per_step = chunks_per_step
+        self.chunk_choices = tuple(int(c) for c in chunk_choices)
+        self._chunk_rr = 0           # round-robin cursor over prefilling slots
+        self._decode_fn_created = False
         self.stats = ServeStats()
         self.queue: List[Request] = []
         self.completed: List[Request] = []
@@ -367,6 +455,14 @@ class ContinuousBatchingEngine:
             self._copy_page = jax.jit(kvcache.copy_page, donate_argnums=0)
             self._admit_paged = jax.jit(self._admit_paged_fn, donate_argnums=0)
             self._set_bt = jax.jit(self._set_bt_fn, donate_argnums=0)
+            self._set_len = jax.jit(self._set_len_fn, donate_argnums=0)
+            # the chunked-prefill jit: donate the pool so every chunk's
+            # page scatter updates it in place; one specialization per
+            # padded chunk shape (power-of-two buckets)
+            self._prefill_chunk = jax.jit(
+                lambda p, pool, bt, t, b, n: model_lib.prefill_chunk_paged(
+                    cfg, p, pool, bt, t, b, n),
+                donate_argnums=1)
         if kv_layout == "paged":
             self.cache = model_lib.init_paged_cache(
                 cfg, slots, max_len, block_size, self.pages.trash_id)
@@ -391,6 +487,17 @@ class ContinuousBatchingEngine:
             for i, name in enumerate(SERVE_AXES["kv_layout"]):
                 vpe.registry.register_variant(
                     "kv_layout", name, fn=(lambda name=name: name),
+                    default=(i == 0))
+        if vpe is not None and paged_capable and prefill_chunk == "auto" \
+                and not vpe.registry.has_op("prefill_chunk"):
+            # variant names come from this engine's chunk_choices; the
+            # incumbent is "whole" (one chunk — the PR 3 behavior) and
+            # the controller blind-trials the fixed sizes per bucket
+            vpe.registry.register_op("prefill_chunk")
+            names = ["whole"] + [str(c) for c in self.chunk_choices]
+            for i, name in enumerate(names):
+                vpe.registry.register_variant(
+                    "prefill_chunk", name, fn=(lambda name=name: name),
                     default=(i == 0))
         # -- shared-prefix KV cache (radix tree) ---------------------------
         self.prefix_cache: Optional[PrefixCache] = None
@@ -440,6 +547,12 @@ class ContinuousBatchingEngine:
         out["bt"] = cache["bt"].at[slot, col].set(pid)
         return out
 
+    @staticmethod
+    def _set_len_fn(cache, slot, n):
+        out = dict(cache)
+        out["length"] = cache["length"].at[slot].set(n)
+        return out
+
     # -- request intake ----------------------------------------------------
     def submit(self, req: Request) -> None:
         need = len(req.prompt) + req.max_new_tokens
@@ -452,7 +565,14 @@ class ContinuousBatchingEngine:
 
     @property
     def num_active(self) -> int:
+        """Occupied slots — decoding AND mid-prefill (run() drains both)."""
         return sum(1 for s in self.slots if not s.free)
+
+    @property
+    def num_decoding(self) -> int:
+        """Slots past their prefill: the decode step's real batch."""
+        return sum(1 for s in self.slots
+                   if s.req is not None and not s.prefilling)
 
     # -- page accounting ----------------------------------------------------
     def _alloc_page(self) -> int:
@@ -534,22 +654,84 @@ class ContinuousBatchingEngine:
             req = self._pop_next()
             now = time.perf_counter()
             req.admit_step = self.stats.decode_steps
-            self.stats.queue_wait_s.append(now - req.submit_t)
-            first, k_all, v_all, base, layout = self._admit_prefill(i, req)
-            now = time.perf_counter()
-            req.ttft_s = now - req.submit_t
-            self.stats.ttft_s.append(req.ttft_s)
-            req.out.append(first)
-            self.stats.tokens_out += 1
-            self.stats.prefill_tokens += 1
+            req.queue_wait_s = now - req.submit_t
+            self.stats.queue_wait_s.append(req.queue_wait_s)
+            prompt = np.asarray(req.prompt, np.int32)
+            S = len(prompt)
+            occ = self.num_active           # occupancy excluding this slot
+            matched = 0
+            if self.prefix_cache is not None:
+                # never match the full prompt: the prefill must still
+                # produce the first generated token's logits.  Partial
+                # tail matching is paged-only — the contiguous layout
+                # copies whole blocks and cannot alias half of one
+                # copy-on-write.
+                allow_partial = (self.partial_match
+                                 and self.kv_layout in ("paged", "auto"))
+                req.cache_handle = self.prefix_cache.acquire(
+                    prompt, max_match=S - 1, allow_partial=allow_partial)
+                matched = req.cache_handle.matched_len
+                self.stats.prefix_lookups += 1
+            # the layout decision sees the RAW match (what aliasing could
+            # use); hit accounting and the prefix_reuse axis see only what
+            # the chosen layout can actually reuse — an auto admission
+            # that resolves a partial-only match to the contiguous layout
+            # reuses nothing and must neither count as a hit nor feed a
+            # cold full-prefill wall time into the "reuse" samples
+            layout, lbucket = self._select_layout(matched)
+            use_matched = (matched if layout == "paged"
+                           else self.block_size * len(req.cache_handle.nodes)
+                           if req.cache_handle is not None else 0)
+            variant, rbucket = "reuse", None
+            if use_matched:
+                self.stats.prefix_hits += 1
+                if self.vpe is not None:
+                    rbucket = prefix_len_bucket(use_matched)
+                    variant = self.vpe.controller.select("prefix_reuse",
+                                                         rbucket)
             slot.req = req
-            slot.tok = first
             slot.layout = layout
-            slot.pos = len(req.prompt)
-            slot.decode_share = 0.0
+            slot.admit_bucket = lbucket
+            slot.tainted = False
+            if layout == "paged":
+                # placement only — the prompt's compute runs as chunks
+                # interleaved with decode steps (:meth:`_run_prefill_chunks`)
+                self._place_paged(i, req,
+                                  use_matched if variant == "reuse" else 0,
+                                  rbucket, variant, occ)
+                continue
+            # -- contiguous: atomic admission (the monolithic baseline) --
+            jits_before = self._prefill_jit_cache_size()
+            t0 = time.perf_counter()
+            if use_matched and variant == "reuse":
+                first, k_all, v_all, base = self._prefill_from_prefix(
+                    i, prompt, req.cache_handle)
+                self.stats.prefix_tokens_saved += use_matched
+            else:
+                first, k_all, v_all, base = self._prefill_full(i, prompt)
+            # fence EVERYTHING the admission dispatched — otherwise that
+            # device time both undercounts this admission's sample and
+            # leaks into the NEXT decode step's VPE sample
+            jax.block_until_ready(self.cache)
+            if self.pages is not None:
+                jax.block_until_ready(self.page_pool)
+            dt = time.perf_counter() - t0
+            self.stats.prefill_s += dt
+            tainted = self._prefill_jit_cache_size() != jits_before
+            if rbucket is not None and not tainted:
+                # feed the measured TTFT contribution back: the controller
+                # blind-trials "recompute" and keeps whichever is faster
+                # for this matched-length bucket.  Samples that paid a
+                # fresh jit compile are dropped: a plen bucket spans many
+                # pad shapes, and one recorded multi-second compile would
+                # permanently flip the bucket.
+                self.vpe.profiler.record("prefix_reuse", variant, rbucket, dt)
+                self.vpe.controller.on_sample("prefix_reuse", rbucket, variant)
+            slot.admit_wall = dt
+            slot.tainted = tainted
+            self._enter_decode(i, first)
             # population is off the TTFT critical path: the first token is
-            # already out; new full blocks enter the tree now (adopted
-            # zero-copy from a paged slot's own pages, copied otherwise)
+            # already out; new full blocks enter the tree now
             self._cache_extend(req, k_all, v_all, base, slot)
             self._retire_if_done(i)
 
@@ -563,87 +745,176 @@ class ContinuousBatchingEngine:
             return "contiguous", bucket
         return self.vpe.controller.select("kv_layout", bucket), bucket
 
-    def _admit_prefill(self, i: int, req: Request):
-        """Prefill ``req`` into slot ``i`` — whole prompt, or suffix only
-        against cached prefix pages when the radix tree has a hit AND the
-        ``prefix_reuse`` controller says reuse beats recompute for this
-        matched-length bucket.  Returns (first_token, k, v, base, layout)
-        where k/v are the computed stacked K/V covering prompt positions
-        ``[base, S)`` (the block-write source for :meth:`_cache_extend`).
-        """
+    def _enter_decode(self, i: int, first: int) -> None:
+        """Transition a slot to the decoding state: emit the first
+        generated token (TTFT) and reset the per-step attribution."""
+        slot = self.slots[i]
+        req = slot.req
+        req.ttft_s = time.perf_counter() - req.submit_t
+        self.stats.ttft_s.append(req.ttft_s)
+        req.out.append(first)
+        self.stats.tokens_out += 1
+        self.stats.prefill_tokens += 1
+        slot.prefilling = False
+        slot.tok = first
+        slot.pos = len(req.prompt)
+        slot.steps_resident = 0
+        slot.clean_step_shares = []
+
+    def _select_chunk(self, S: int, occ: int):
+        """Resolve this admission's chunk size (tokens; 0 = whole) and,
+        in auto mode, its ``prefill_chunk`` bucket + variant name."""
+        if self.prefill_chunk == "auto" and self.vpe is not None:
+            bucket = prefill_chunk_bucket(S, occ, self.num_slots,
+                                          levels=self.occupancy_levels)
+            name = self.vpe.controller.select("prefill_chunk", bucket)
+            return (0 if name == "whole" else int(name)), bucket, name
+        if self.prefill_chunk in (0, "whole", "auto"):
+            return 0, None, None
+        return int(self.prefill_chunk), None, None
+
+    def _place_paged(self, i: int, req: Request, reuse_matched: int,
+                     rbucket, variant: str, occ: int) -> None:
+        """Paged admission = placement only, O(1) in matched AND prompt
+        length: alias the matched pages (zero-copy, one pool reference
+        each), clone a partially matched tail block copy-on-write,
+        allocate pages covering the rest of the prompt, install the
+        device block-table row.  No prompt compute happens here — the
+        slot enters the prefilling state and :meth:`_run_prefill_chunks`
+        feeds it through :func:`~repro.models.transformer.
+        prefill_chunk_paged` between decode steps.  The timed span
+        (``kv_place_s``) is the placement cost the paged layout exists
+        to keep flat."""
+        slot = self.slots[i]
         prompt = np.asarray(req.prompt, np.int32)
         S = len(prompt)
-        matched, variant, bucket = 0, "reuse", None
+        handle = req.cache_handle
+        self._release_slot_pages(i)
         jits_before = self._prefill_jit_cache_size()
-        if self.prefix_cache is not None:
-            # never match the full prompt: the suffix prefill must still
-            # produce the first generated token's logits.  Partial tail
-            # matching is paged-only — the contiguous layout copies whole
-            # blocks and cannot alias half of one copy-on-write.
-            allow_partial = (self.partial_match
-                             and self.kv_layout in ("paged", "auto"))
-            req.cache_handle = self.prefix_cache.acquire(
-                prompt, max_match=S - 1, allow_partial=allow_partial)
-            matched = req.cache_handle.matched_len
-            self.stats.prefix_lookups += 1
-        # the layout decision sees the RAW match (what aliasing could
-        # use); hit accounting and the prefix_reuse axis see only what
-        # the chosen layout can actually reuse — an auto admission that
-        # resolves a partial-only match to the contiguous layout reuses
-        # nothing and must neither count as a hit nor feed a cold
-        # full-prefill wall time into the "reuse" samples
-        layout, lbucket = self._select_layout(matched)
-        use_matched = (matched if layout == "paged"
-                       else self.block_size * len(req.cache_handle.nodes)
-                       if req.cache_handle is not None else 0)
-        if use_matched:
-            self.stats.prefix_hits += 1
-            if self.vpe is not None:
-                bucket = prefix_len_bucket(use_matched)
-                variant = self.vpe.controller.select("prefix_reuse", bucket)
         t0 = time.perf_counter()
-        if use_matched and variant == "reuse":
-            if layout == "paged":
-                out = self._prefill_from_prefix_paged(i, prompt,
-                                                      req.cache_handle)
-            else:
-                out = self._prefill_from_prefix(i, prompt, req.cache_handle)
-            self.stats.prefix_tokens_saved += use_matched
+        if reuse_matched:
+            P = handle.matched_len
+            alias = list(handle.block_ids)        # full blocks: zero-copy
+            for pid in alias:
+                self.pages.ref(pid)
+            cow = None
+            if handle.partial_len:
+                # the first chunk's write lands mid-block in the partially
+                # matched page — clone it so the cached original (and
+                # anyone else aliasing it) cannot see this slot's writes
+                cow = self._alloc_page()
+                self.page_pool = self._copy_page(
+                    self.page_pool, jnp.int32(handle.partial_block_id),
+                    jnp.int32(cow))
+                self.stats.cow_copies += 1
+            suffix_ids, _starts = self._suffix_page_ids(P, S, cow)
+            pages = alias + suffix_ids
+            self.stats.prefix_tokens_saved += P
         else:
-            if layout == "paged":
-                out = self._prefill_full_paged(i, prompt)
-            else:
-                out = self._prefill_full(i, prompt)
-        # fence EVERYTHING the admission dispatched — the slot cache and,
-        # for paged layouts, the page pool (suffix scatters / COW copies
-        # run on it asynchronously): otherwise that device time both
-        # undercounts this admission's sample and leaks into the NEXT
-        # decode step's VPE sample, skewing two controllers at once
+            P = 0
+            pages, _starts = self._suffix_page_ids(0, S, None)
+        # device row now (length stays 0 until the prefill completes —
+        # the slot is excluded from decode via the live mask meanwhile)
+        self._page_row(i, pages, 0)
         jax.block_until_ready(self.cache)
-        if self.pages is not None:
-            jax.block_until_ready(self.page_pool)
+        jax.block_until_ready(self.page_pool)     # the COW copy, if any
         dt = time.perf_counter() - t0
+        self.stats.kv_place_s.append(dt)
         self.stats.prefill_s += dt
-        if layout == "paged":
-            self.stats.paged_admits += 1
-        tainted = self._prefill_jit_cache_size() != jits_before
-        if bucket is not None and not tainted:
-            # feed the measured TTFT contribution back: the controller
-            # blind-trials "recompute" and keeps whichever is faster for
-            # this matched-length bucket (the paper's offload-or-revert).
-            # Samples that paid a fresh jit compile are dropped: a plen
-            # bucket spans many pad shapes, and the profiler's per-variant
-            # warm-up split can't see shape-level compiles — one recorded
-            # multi-second compile would permanently flip the bucket.
-            self.vpe.profiler.record("prefix_reuse", variant, bucket, dt)
-            self.vpe.controller.on_sample("prefix_reuse", bucket, variant)
-        # the kv_layout sample completes at retire (admission + the
-        # request's amortized decode share)
+        self.stats.paged_admits += 1
+        slot.prefilling = True
+        slot.fill_pos = P
+        slot.place_wall = dt
+        slot.tainted = self._prefill_jit_cache_size() != jits_before
+        slot.reuse_bucket = rbucket
+        slot.reuse_variant = variant
+        slot.chunk_walls = []
+        slot.chunk, slot.chunk_bucket, slot.chunk_variant = \
+            self._select_chunk(S, occ)
+
+    def _run_prefill_chunks(self) -> bool:
+        """Run at most ``chunks_per_step`` prefill chunks, round-robin
+        over the slots currently in the prefilling state — the budget
+        knob that bounds decode service interruption per engine step."""
+        ran = False
+        for _ in range(self.chunks_per_step):
+            order = [(self._chunk_rr + k) % self.num_slots
+                     for k in range(self.num_slots)]
+            i = next((j for j in order if self.slots[j].prefilling), None)
+            if i is None:
+                break
+            self._chunk_rr = (i + 1) % self.num_slots
+            self._run_one_chunk(i)
+            ran = True
+        return ran
+
+    def _run_one_chunk(self, i: int) -> None:
+        """One chunk of slot ``i``'s prompt: read every prior position in
+        place through the block table, scatter the chunk's own K/V into
+        its pages.  The final chunk yields the first generated token."""
         slot = self.slots[i]
-        slot.admit_wall = dt
-        slot.admit_bucket = lbucket
-        slot.tainted = tainted
-        return (*out, layout)
+        req = slot.req
+        prompt = np.asarray(req.prompt, np.int32)
+        S = len(prompt)
+        base = slot.fill_pos
+        clen = (S - base) if not slot.chunk else min(slot.chunk, S - base)
+        pad = min(pad_to_bucket(clen, minimum=self.min_prompt_pad),
+                  self.max_len)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :clen] = prompt[base:base + clen]
+        row = self._bt_row(slot.pages)
+        jits_before = self._prefill_jit_cache_size()
+        t0 = time.perf_counter()
+        self.page_pool, logits = self._prefill_chunk(
+            self.params, self.page_pool, jnp.asarray(row), jnp.asarray(toks),
+            jnp.int32(base), jnp.int32(clen))
+        # fence: an async chunk would leak its device time into the next
+        # decode step's VPE sample (and undercount this admission's)
+        jax.block_until_ready((self.page_pool, logits))
+        dt = time.perf_counter() - t0
+        slot.chunk_walls.append(dt)
+        if self._prefill_jit_cache_size() != jits_before:
+            slot.tainted = True
+        self.stats.prefill_s += dt
+        self.stats.prefill_chunks += 1
+        slot.fill_pos = base + clen
+        if slot.fill_pos >= S:
+            self._finish_prefill(i, logits)
+
+    def _finish_prefill(self, i: int, logits) -> None:
+        """Last chunk done: first token out, device length installed,
+        measured samples fed to the ``prefix_reuse`` and
+        ``prefill_chunk`` controllers (the admission's TTFT contribution
+        is placement + summed chunk walls; compile-tainted admissions
+        are dropped), and the prompt's fresh full blocks adopted into
+        the prefix tree zero-copy."""
+        slot = self.slots[i]
+        req = slot.req
+        S = len(req.prompt)
+        first = int(np.asarray(jnp.argmax(logits[0])))
+        self.cache = self._set_len(self.cache, jnp.int32(i), jnp.int32(S))
+        slot.admit_wall = slot.place_wall + sum(slot.chunk_walls)
+        if self.vpe is not None and not slot.tainted:
+            if slot.reuse_bucket is not None:
+                self.vpe.profiler.record("prefix_reuse", slot.reuse_variant,
+                                         slot.reuse_bucket, slot.admit_wall)
+                self.vpe.controller.on_sample("prefix_reuse",
+                                              slot.reuse_bucket,
+                                              slot.reuse_variant)
+            if slot.chunk_bucket is not None:
+                # the chunk-size decision only moves the chunk compute,
+                # not the (size-independent) placement — feed exactly that
+                self.vpe.profiler.record("prefill_chunk", slot.chunk_variant,
+                                         slot.chunk_bucket,
+                                         sum(slot.chunk_walls))
+                self.vpe.controller.on_sample("prefill_chunk",
+                                              slot.chunk_bucket,
+                                              slot.chunk_variant)
+        slot.reuse_bucket = None
+        slot.chunk_bucket = None
+        self._enter_decode(i, first)
+        self._cache_extend(req, None, None, 0, slot)
+        self._retire_if_done(i)
 
     def _prefill_jit_cache_size(self) -> int:
         """Total compiled-specialization count of the admission-path jits
@@ -653,7 +924,8 @@ class ContinuousBatchingEngine:
         fns = [self._prefill, self._insert]
         if self.pages is not None:
             fns += [self._gather_pages, self._write_pages, self._copy_page,
-                    self._admit_paged, self._set_bt]
+                    self._admit_paged, self._set_bt, self._set_len,
+                    self._prefill_chunk]
         if self.prefix_cache is not None:
             fns += [self._insert_at, self._prefill_suffix]
             if self.pages is None:
@@ -730,13 +1002,20 @@ class ContinuousBatchingEngine:
         return self._gather(self.block_pool, jnp.asarray(ids))
 
     # -- paged-layout admission paths ---------------------------------------
+    def _bt_row(self, pages: List[int]) -> np.ndarray:
+        """A slot's full (nb_max,) block-table row, trash-padded past its
+        allocated pages — the one padding convention shared by the device
+        row install and the chunk jit's host-side argument."""
+        row = np.full((self.nb_max,), self.pages.trash_id, np.int32)
+        row[:len(pages)] = pages
+        return row
+
     def _page_row(self, i: int, pages: List[int], true_len: int) -> None:
         """Install a slot's block table row + length on device (tiny
         host->device transfer: nb_max ids, the O(1)-in-matched-length
         'copy' of the paged layout)."""
-        row = np.full((self.nb_max,), self.pages.trash_id, np.int32)
-        row[:len(pages)] = pages
-        self.cache = self._admit_paged(self.cache, jnp.asarray(row),
+        self.cache = self._admit_paged(self.cache,
+                                       jnp.asarray(self._bt_row(pages)),
                                        jnp.int32(i), jnp.int32(true_len))
         self.slots[i].pages = list(pages)
 
@@ -777,82 +1056,13 @@ class ContinuousBatchingEngine:
             self.page_pool, k_all, v_all, jnp.asarray(ids_pad),
             jnp.asarray(starts_pad), jnp.int32(base), jnp.int32(S - base))
 
-    def _prefill_full_paged(self, i: int, prompt: np.ndarray):
-        """Paged cold path: whole-prompt prefill into freshly allocated
-        pages; the block table is the only slot state."""
-        S = len(prompt)
-        self._release_slot_pages(i)
-        pad = min(pad_to_bucket(S, minimum=self.min_prompt_pad), self.max_len)
-        toks = np.zeros((1, pad), np.int32)
-        toks[0, :S] = prompt
-        k, v, logits = self._prefill(self.params, jnp.asarray(toks), jnp.int32(S))
-        ids, starts = self._suffix_page_ids(0, S, None)
-        # same cold-path placement span as the contiguous layout: prefill
-        # fenced out, the O(S) page scatter + table install fenced in
-        jax.block_until_ready(k)
-        t0 = time.perf_counter()
-        self._write_suffix_pages(k, v, ids, starts, 0, S)
-        self._page_row(i, ids, S)
-        jax.block_until_ready(self.cache)
-        jax.block_until_ready(self.page_pool)
-        self.stats.kv_place_s.append(time.perf_counter() - t0)
-        first = int(np.asarray(jnp.argmax(logits[0])))
-        return first, k, v, 0
-
-    def _prefill_from_prefix_paged(self, i: int, prompt: np.ndarray, handle):
-        """Paged warm path: ALIAS the matched pages into the block table.
-
-        No page is copied for the matched prefix — the table entries
-        simply reference the tree's pages (one pool ref each), which is
-        what makes admission O(1) in matched length.  A partially
-        matched tail block is cloned copy-on-write (one page) because
-        the suffix prefill writes into it mid-block; fresh pages cover
-        the rest of the suffix.  The suffix still *attends* to the
-        cached prefix (gathered transiently for the shared suffix-prefill
-        jit — reading pages in place at prefill time is the chunked-
-        prefill follow-up in the ROADMAP).
-        """
-        S = len(prompt)
-        P = handle.matched_len
-        bs = self.block_size
-        self._release_slot_pages(i)
-        t0 = time.perf_counter()
-        alias = list(handle.block_ids)            # full blocks: zero-copy
-        for pid in alias:
-            self.pages.ref(pid)
-        cow = None
-        if handle.partial_len:
-            # the suffix's first write lands mid-block in the partially
-            # matched page — clone it so the cached original (and anyone
-            # else aliasing it) cannot see this slot's writes
-            cow = self._alloc_page()
-            self.page_pool = self._copy_page(
-                self.page_pool, jnp.int32(handle.partial_block_id),
-                jnp.int32(cow))
-            self.stats.cow_copies += 1
-        suffix_ids, starts = self._suffix_page_ids(P, S, cow)
-        self._page_row(i, alias + suffix_ids, S)
-        jax.block_until_ready(self.cache)
-        jax.block_until_ready(self.page_pool)   # the COW copy, if any
-        self.stats.kv_place_s.append(time.perf_counter() - t0)
-        # suffix prefill attends to the matched prefix (padded gather,
-        # same jit + numerics as the contiguous warm path)
-        nb_read = P // bs + (1 if P % bs else 0)
-        read_ids = alias + ([handle.partial_block_id] if P % bs else [])
-        nb_pad = min(pad_to_bucket(nb_read, minimum=1), self.nb_max)
-        read_pad = np.asarray(
-            read_ids + [read_ids[0]] * (nb_pad - nb_read), np.int32)
-        pk, pv = self._gather_pages(self.page_pool, jnp.asarray(read_pad))
-        sl = S - P
-        pad_s = min(pad_to_bucket(sl, minimum=self.min_prompt_pad),
-                    self.max_len - P)
-        toks = np.zeros((1, pad_s), np.int32)
-        toks[0, :sl] = prompt[P:]
-        k, v, logits = self._prefill_suffix(
-            self.params, jnp.asarray(toks), pk, pv, jnp.int32(P), jnp.int32(sl))
-        self._write_suffix_pages(k, v, suffix_ids, starts, P, S)
-        first = int(np.asarray(jnp.argmax(logits[0])))
-        return first, k, v, P
+    # NOTE: the PR 3 atomic paged prefill paths (_prefill_full_paged /
+    # _prefill_from_prefix_paged — the latter materialized an O(matched)
+    # transient gather of the prefix for the suffix's attention) are
+    # gone: every paged admission now goes through _place_paged +
+    # _run_prefill_chunks, which read prior pages in place.  The
+    # contiguous copy-in paths above stay as the monolithic baseline
+    # and parity anchor.
 
     def _release_slot_pages(self, i: int) -> None:
         """Drop the slot's references from a previous residency (pages the
@@ -932,12 +1142,25 @@ class ContinuousBatchingEngine:
             if slot.admit_bucket is not None and self.vpe is not None \
                     and not slot.tainted:
                 # the kv_layout sample: admission wall + this request's
-                # amortized share of the decode steps it was resident for
-                self.vpe.profiler.record(
-                    "kv_layout", slot.layout, slot.admit_bucket,
-                    slot.admit_wall + slot.decode_share)
-                self.vpe.controller.on_sample("kv_layout", slot.admit_bucket,
-                                              slot.layout)
+                # decode component, rebuilt from per-step CLEAN timings
+                # (steps whose fenced wall included a decode-jit compile
+                # are excluded and their cost extrapolated from the clean
+                # mean) — a residency whose every step paid a compile has
+                # no clean signal and is dropped entirely
+                comp, ok = 0.0, True
+                if slot.steps_resident:
+                    if slot.clean_step_shares:
+                        comp = (sum(slot.clean_step_shares)
+                                / len(slot.clean_step_shares)
+                                * slot.steps_resident)
+                    else:
+                        ok = False
+                if ok:
+                    self.vpe.profiler.record(
+                        "kv_layout", slot.layout, slot.admit_bucket,
+                        slot.admit_wall + comp)
+                    self.vpe.controller.on_sample(
+                        "kv_layout", slot.admit_bucket, slot.layout)
             slot.admit_bucket = None
             self.completed.append(req)
             slot.req = None   # freed mid-decode; refilled next admission
@@ -950,7 +1173,7 @@ class ContinuousBatchingEngine:
         private by admission-time copy-on-write, so decode appends never
         need a COW check.)"""
         for i, slot in enumerate(self.slots):
-            if slot.free or slot.layout != "paged":
+            if slot.free or slot.prefilling or slot.layout != "paged":
                 continue
             if slot.pos % self.block_size == 0:
                 col = slot.pos // self.block_size
@@ -969,6 +1192,7 @@ class ContinuousBatchingEngine:
             vname = self._default_variant
         self._last_variant = vname
         fn = self._decode_fns.get(vname)
+        self._decode_fn_created = fn is None
         if fn is None:
             if self._decode_fns:
                 # an actual re-trace: a not-yet-compiled variant is baked
@@ -1002,18 +1226,41 @@ class ContinuousBatchingEngine:
         return fn
 
     def step(self) -> bool:
-        """One engine iteration; returns False when fully idle."""
+        """One engine iteration; returns False when fully idle.
+
+        The interleaved pipeline: admission (placement-only for paged
+        slots) and at most ``chunks_per_step`` prefill chunks run first,
+        then ONE decode step advances the decoding slots — so the wall
+        between two decode steps is bounded by the chunk budget, not by
+        the longest queued prompt (``stats.decode_stall_s`` records that
+        bound being exercised)."""
+        had_decoders = self.num_decoding > 0
+        admits_before = len(self.stats.queue_wait_s)
+        t_p = time.perf_counter()
         self._admit()
-        n_active = self.num_active
+        ran_chunk = self._run_prefill_chunks()
+        prefill_work = (ran_chunk
+                        or len(self.stats.queue_wait_s) != admits_before)
+        n_active = self.num_decoding
         if n_active == 0:
-            return False
+            # prefill-only step (every occupied slot mid-chunk), or idle
+            return prefill_work
+        if had_decoders and prefill_work:
+            # decode service interruption imposed by this step's
+            # admission + chunk phase on already-resident requests
+            self.stats.decode_stall_s.append(time.perf_counter() - t_p)
         if self.pages is not None:
             self._grow_block_tables()
         bucket = occupancy_bucket(n_active, self.num_slots,
                                   levels=self.occupancy_levels)
         fn = self._decode_fn(bucket)
+        try:
+            decode_jits = fn._cache_size()
+        except AttributeError:  # pragma: no cover - older/newer jax
+            decode_jits = -1
         tokens = np.array([[s.tok] for s in self.slots], np.int32)
-        live = np.array([0 if s.free else 1 for s in self.slots], np.int32)
+        live = np.array([0 if (s.free or s.prefilling) else 1
+                         for s in self.slots], np.int32)
         t0 = time.perf_counter()
         if self.kv_layout == "paged":
             self.page_pool, cache, next_tok = fn(
@@ -1033,17 +1280,29 @@ class ContinuousBatchingEngine:
         self.cache = cache
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
+        # a step whose wall includes a decode-jit trace+compile must not
+        # feed the per-slot attribution (decode shapes are static here,
+        # so compiles happen exactly when a variant is first baked in —
+        # the jit-cache growth check also catches any recompile)
+        if decode_jits == -1:
+            step_tainted = self._decode_fn_created
+        else:
+            step_tainted = fn._cache_size() != decode_jits
+        if step_tainted:
+            self.stats.tainted_steps += 1
         if self.vpe is not None:
             self.vpe.profiler.record(self._axis, self._last_variant, bucket, dt)
             self.vpe.controller.on_sample(self._axis, bucket, self._last_variant)
         share = dt / n_active
         for i, slot in enumerate(self.slots):
-            if slot.req is None:
-                continue          # free slot decoded garbage; discard
+            if slot.req is None or slot.prefilling:
+                continue   # free/prefilling slot decoded garbage; discard
             t = int(toks[i])
             slot.tok = t
             slot.pos += 1
-            slot.decode_share += share
+            slot.steps_resident += 1
+            if not step_tainted:
+                slot.clean_step_shares.append(share)
             slot.req.out.append(t)
             self.stats.tokens_out += 1
             self._retire_if_done(i)

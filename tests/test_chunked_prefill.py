@@ -1,0 +1,295 @@
+"""Chunked prefill over block tables: parity, fairness, chunk-size VPE.
+
+The contract: splitting a prompt's prefill into fixed-size chunks that
+read prior positions in place through the slot's block table is a pure
+*scheduling* decision — every request's greedy output must equal the
+whole-prompt (monolithic) prefill token for token, across KV layouts,
+warm/copy-on-write admissions and chunk sizes that cross block
+boundaries.  What chunking buys is bounded decode interference: a long
+prompt admitted mid-decode may stall resident slots by at most the
+chunk budget per engine step, never by its whole prefill.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import VPE, prefill_chunk_bucket
+from repro.models import model
+from repro.runtime.serve_loop import ContinuousBatchingEngine, Request, ServeLoop
+
+MAX_LEN = 128
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["qwen3-8b"].reduced()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def cold_greedy(cfg, params, prompt, max_new):
+    serve = ServeLoop(cfg, params, max_len=MAX_LEN, batch=1)
+    return [int(t) for t in serve.generate({"tokens": prompt[None, :]}, max_new)[0]]
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("prefix_blocks", 32)
+    kw.setdefault("block_size", 16)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("prefill_chunk", 16)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+class TestChunkedParity:
+    def test_chunked_matches_cold_and_whole(self, setup):
+        """Cold prompts prefilled in 16-token chunks == dedicated cold
+        generate == the same engine with whole-prompt chunks."""
+        cfg, params = setup
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (48, 50, 33, 100)]   # incl. non-chunk-aligned
+        refs = [cold_greedy(cfg, params, p, 6) for p in prompts]
+        outs = {}
+        for chunk in (16, "whole"):
+            eng = make_engine(cfg, params, prefill_chunk=chunk,
+                              prefix_blocks=0)   # cold: no tree matches
+            for i, p in enumerate(prompts):
+                eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+            done = sorted(eng.run(), key=lambda r: r.rid)
+            outs[chunk] = [r.out for r in done]
+            if chunk == 16:
+                # 48/16 + ceil(50/16) + ceil(33/16) + ceil(100/16) chunks
+                assert eng.stats.prefill_chunks == 3 + 4 + 3 + 7
+            eng.check_kv()
+        assert outs[16] == refs
+        assert outs["whole"] == refs
+
+    @pytest.mark.parametrize("kv_layout", ["contiguous", "paged", "auto"])
+    def test_chunked_matches_monolithic_across_layouts(self, setup, kv_layout):
+        """The acceptance criterion: chunked admission is token-exact
+        with monolithic prefill in every KV layout.  (Contiguous
+        admissions stay atomic by design — the chunk setting must be a
+        no-op there, not an error.)"""
+        cfg, params = setup
+        rng = np.random.default_rng(1)
+        shared = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        reqs = []
+        for i in range(5):
+            tail = rng.integers(0, cfg.vocab_size, 3 + 5 * i).astype(np.int32)
+            reqs.append((np.concatenate([shared, tail]), 4 + i % 3))
+        refs = [cold_greedy(cfg, params, p, n) for p, n in reqs]
+        eng = make_engine(cfg, params, kv_layout=kv_layout, prefill_chunk=16,
+                          partial_match=(kv_layout != "contiguous"))
+        for i, (p, n) in enumerate(reqs):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=n))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        assert [r.out for r in done] == refs
+        eng.check_kv()
+
+    def test_warm_and_cow_admissions_chunked(self, setup):
+        """Warm aliased admissions and the copy-on-write tail case run
+        through chunked in-place reads (the PR 3 transient-gather path
+        is gone) and stay exact — including a third serve proving the
+        COW never leaked into the shared cached block."""
+        cfg, params = setup
+        rng = np.random.default_rng(2)
+        template = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+        trunc = template[:53].copy()               # ends mid-block 3
+        ref_full = cold_greedy(cfg, params, template, 8)
+        ref_trunc = cold_greedy(cfg, params, trunc, 8)
+        eng = make_engine(cfg, params, prefill_chunk=16)
+        # the old atomic warm path must really be gone
+        assert not hasattr(eng, "_prefill_from_prefix_paged")
+        assert not hasattr(eng, "_prefill_full_paged")
+        eng.submit(Request(rid=0, prompt=template, max_new_tokens=2))
+        eng.run()                                  # blocks 0..3 adopted
+        assert eng.prefix_cache.stats.blocks_adopted >= 4
+        eng.submit(Request(rid=1, prompt=template, max_new_tokens=8))
+        eng.submit(Request(rid=2, prompt=trunc, max_new_tokens=8))
+        done = sorted((r for r in eng.run() if r.rid >= 1), key=lambda r: r.rid)
+        assert eng.stats.cow_copies >= 1
+        assert done[0].out == ref_full, "warm aliased sharer diverged"
+        assert done[1].out == ref_trunc, "COW'd truncated sharer diverged"
+        eng.submit(Request(rid=3, prompt=template, max_new_tokens=8))
+        (r3,) = (r for r in eng.run() if r.rid == 3)
+        assert r3.out == ref_full, "COW leaked into the shared cached block"
+        assert eng.stats.prefix_hits >= 3
+        eng.check_kv()
+        assert eng.prefix_cache.total_refcount() == 0
+
+    def test_chunk_crossing_block_boundaries(self, setup):
+        """A chunk size coprime to the block size (12 vs 16) makes every
+        chunk boundary land mid-block — the masked page scatter must
+        keep earlier chunks' tokens intact."""
+        cfg, params = setup
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(0, cfg.vocab_size, 61).astype(np.int32)
+        ref = cold_greedy(cfg, params, prompt, 6)
+        eng = make_engine(cfg, params, prefill_chunk=12, prefix_blocks=0)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+        (r,) = eng.run()
+        assert r.out == ref
+        assert eng.stats.prefill_chunks == 6   # ceil(61 / 12)
+        eng.check_kv()
+
+
+class TestInterleaveFairness:
+    def test_long_prompt_cannot_stall_decode(self, setup):
+        """A long prompt admitted mid-decode: the already-resident
+        request keeps decoding exactly one token per engine step while
+        the long prefill proceeds chunk-by-chunk — decode service is
+        never interrupted for more than the chunk budget."""
+        cfg, params = setup
+        rng = np.random.default_rng(4)
+        short = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        long_p = rng.integers(0, cfg.vocab_size, 96).astype(np.int32)
+        ref_short = cold_greedy(cfg, params, short, 30)
+        ref_long = cold_greedy(cfg, params, long_p, 4)
+        eng = make_engine(cfg, params, prefill_chunk=16, prefix_blocks=0)
+        eng.submit(Request(rid=0, prompt=short, max_new_tokens=30))
+        for _ in range(3):                     # resident and decoding
+            assert eng.step()
+        eng.submit(Request(rid=1, prompt=long_p, max_new_tokens=4))
+        long_req = eng.queue[0]
+        steps_while_filling = 0
+        while not long_req.out:                # until the long TTFT
+            n_before = len(eng.slots[0].req.out)
+            assert eng.step()
+            # the decoding slot advanced THIS step despite the chunk
+            assert len(eng.slots[0].req.out) == n_before + 1
+            steps_while_filling += 1
+        # 96 tokens / 16-token chunks = 6 interleaved steps
+        assert steps_while_filling == 6
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        assert done[0].out == ref_short
+        assert done[1].out == ref_long
+        assert len(eng.stats.decode_stall_s) >= 6
+        eng.check_kv()
+
+    def test_chunk_budget_knob(self, setup):
+        """chunks_per_step=3 compresses the same prefill into ceil(6/3)
+        engine steps — the budget knob trades decode latency for TTFT."""
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        short = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        long_p = rng.integers(0, cfg.vocab_size, 96).astype(np.int32)
+        eng = make_engine(cfg, params, prefill_chunk=16, chunks_per_step=3,
+                          prefix_blocks=0)
+        eng.submit(Request(rid=0, prompt=short, max_new_tokens=20))
+        for _ in range(3):
+            assert eng.step()
+        eng.submit(Request(rid=1, prompt=long_p, max_new_tokens=2))
+        long_req = eng.queue[0]
+        steps = 0
+        while not long_req.out:
+            assert eng.step()
+            steps += 1
+        assert steps == 2
+        eng.run()
+        eng.check_kv()
+
+    def test_concurrent_prefills_round_robin(self, setup):
+        """Two slots prefilling at once share the chunk budget fairly
+        and both finish exact."""
+        cfg, params = setup
+        rng = np.random.default_rng(6)
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (64, 48)]
+        refs = [cold_greedy(cfg, params, p, 4) for p in prompts]
+        eng = make_engine(cfg, params, prefill_chunk=16, prefix_blocks=0)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        assert [r.out for r in done] == refs
+        eng.check_kv()
+
+
+class TestChunkVPE:
+    def test_prefill_chunk_axis_flips_after_warmup(self, setup):
+        """prefill_chunk="auto": the controller blind-trials chunk sizes
+        per prompt-length × occupancy bucket and concludes with a
+        measured switch-or-revert — at exact output parity."""
+        cfg, params = setup
+        rng = np.random.default_rng(7)
+        vpe = VPE(controller_kwargs=dict(min_samples=2, trial_samples=2))
+        eng = make_engine(cfg, params, slots=1, prefill_chunk="auto",
+                          chunk_choices=(16, 48), prefix_blocks=0, vpe=vpe)
+        prompts = [rng.integers(0, cfg.vocab_size, 96).astype(np.int32)
+                   for _ in range(10)]
+        refs = [cold_greedy(cfg, params, p, 2) for p in prompts]
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        assert [r.out for r in done] == refs
+        bucket = prefill_chunk_bucket(96, 0, 1)
+        d = vpe.controller.decision("prefill_chunk", bucket)
+        assert len(set(d.tried)) >= 2
+        events = [e for e, _, _ in d.history]
+        assert "trial" in events
+        assert ("switch" in events) or ("revert" in events)
+        eng.check_kv()
+
+    def test_chunk_validation(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError):
+            make_engine(cfg, params, prefill_chunk="sometimes")
+        with pytest.raises(ValueError):
+            make_engine(cfg, params, prefill_chunk=-1)
+        with pytest.raises(ValueError):
+            make_engine(cfg, params, chunks_per_step=0)
+
+
+class TestPerStepTiming:
+    """The kv_layout sample-quality fix (ROADMAP): decode wall is
+    attributed per step, steps that paid a decode-jit compile are
+    excluded, and the amortized-share-over-the-residency heuristic is
+    gone."""
+
+    def test_rejit_steps_are_excluded_from_samples(self, setup):
+        """Force a decode-variant flip mid-traffic: the engine must mark
+        the compiling step tainted, and every kv_layout sample it
+        records must exclude that step's compile wall."""
+        cfg, params = setup
+        rng = np.random.default_rng(8)
+        vpe = VPE(controller_kwargs=dict(min_samples=2, trial_samples=2))
+        eng = make_engine(cfg, params, slots=2, kv_layout="auto", vpe=vpe,
+                          prefill_chunk="whole")
+        shared = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+        for i in range(8):
+            tail = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+            eng.submit(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                               max_new_tokens=6))
+        eng.run()
+        # the serve_decode_impl trial really rejitted at least once...
+        assert eng.stats.rejits >= 1
+        assert eng.stats.tainted_steps >= 1
+        # ...and the recorded kv_layout samples are bounded by admission
+        # wall + clean per-step decode time: none of them can contain a
+        # multi-hundred-ms trace+compile span (the Welford means would
+        # jump by ~100x if one did — few samples per bucket)
+        means = []
+        for (op, _variant, _bucket), ss in vpe.profiler._stats.items():
+            if op != "kv_layout":
+                continue
+            for w in (ss.warmup, ss.steady):
+                if w.n:
+                    means.append(w.mean)
+        assert means, "no clean kv_layout samples survived"
+        assert max(means) < 0.25, (
+            f"a compile wall leaked into a kv_layout sample: {max(means)}")
+
+    def test_clean_share_attribution(self, setup):
+        """White-box: a slot resident for N steps of which one is
+        tainted gets mean(clean) * N, not the raw sum."""
+        cfg, params = setup
+        eng = make_engine(cfg, params, slots=1, prefix_blocks=0)
+        slot = eng.slots[0]
+        slot.steps_resident = 4
+        slot.clean_step_shares = [0.010, 0.012, 0.011]   # 1 tainted step
+        comp = (sum(slot.clean_step_shares) / len(slot.clean_step_shares)
+                * slot.steps_resident)
+        assert abs(comp - 0.044) < 1e-9
