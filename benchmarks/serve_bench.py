@@ -1,10 +1,26 @@
 # Wave vs continuous batching + prefix-cache TTFT + paged admission +
-# chunked-prefill interference. CSV+JSON.
+# chunked-prefill interference + fused decode horizons. CSV+JSON.
 """Serving benchmark: wave vs continuous batching, prefix-cache TTFT,
-paged-vs-contiguous admission cost, and chunked-prefill decode
-interference.
+paged-vs-contiguous admission cost, chunked-prefill decode
+interference, and fused decode horizons.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+
+Part 5 — fused decode horizons (what amortizing per-token dispatch
+buys, and what it costs under load): a decode-bound workload (short
+prompts, long generations) swept over decode_horizon 1/4/16/auto, and
+an admission-pressure workload (part 1's bimodal mix, queue always
+deep) over the same sweep.  A long horizon fuses H decode steps into
+one on-device loop — one host fence per H tokens — so steady-state
+aggregate tok/s must improve >= 1.5x at the best fixed horizon on the
+decode-bound workload; under pressure the fused call delays admissions
+and burns frozen steps on short-budget slots, so the best fixed choice
+shrinks.  ``auto`` (the VPE axis, per-token wall per queue-depth ×
+occupancy bucket) must land within 10% of the best fixed choice on
+BOTH workloads, and its per-bucket selections are recorded as the
+back-off evidence.  Exact greedy parity across every horizon is part
+of the pass criterion.  Appended to BENCH_serve.json like every other
+record.
 
 Part 4 — mixed workload under long-prompt load (what chunked prefill
 exists for): one 2k-token prompt arrives amid short-prompt decode
@@ -69,7 +85,7 @@ from repro.configs import get_config
 from repro.core import VPE
 from repro.models import model
 from repro.runtime.serve_loop import (
-    ContinuousBatchingEngine, Request, ServeLoop, WaveScheduler)
+    SERVE_AXES, ContinuousBatchingEngine, Request, ServeLoop, WaveScheduler)
 
 SLOTS = 4
 MAX_LEN = 96
@@ -398,6 +414,150 @@ def bench_chunked_prefill(cfg, params) -> bool:
     return ok
 
 
+# fused decode-horizon bench: decode-bound sweep + admission pressure
+HZN_CHOICES = ("1", "4", "16", "auto")
+HZN_PROMPT = 16
+HZN_NEW = 64                     # decode-bound: long generations
+HZN_REQS = 8
+HZN_REPS = 4                     # timed reps; best-of (noisy host)
+
+
+def _horizon_workload(rng, vocab) -> List[Request]:
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, HZN_PROMPT).astype(np.int32),
+                    max_new_tokens=HZN_NEW) for i in range(HZN_REQS)]
+
+
+def _horizon_engine(cfg, params, horizon):
+    # longer trials + periodic re-exploration vs the defaults: single
+    # fused-call walls wobble 2-3x on a shared host, so a conclusion
+    # needs more evidence, and a conclusion that went the wrong way on
+    # a noise spike must be revisitable before the timed pass.  EVERY
+    # arm gets the same VPE — a fixed horizon registers no
+    # decode_horizon axis, but it tunes serve_decode_impl exactly like
+    # the auto arm, so auto-vs-fixed isolates the horizon axis instead
+    # of confounding it with decode-attention tuning
+    vpe = VPE(controller_kwargs=dict(min_samples=3, trial_samples=16,
+                                     hysteresis=0.02, reexplore_period=48))
+    # pin the decode-attention axis in EVERY arm (system-tagged ops are
+    # measured but never trialed, the paper's system-call exclusion):
+    # the sweep is about the horizon axis, and an arm quietly switching
+    # attention impls mid-comparison would confound it
+    vpe.registry.register_op("serve_decode_impl", system=True)
+    for i, name in enumerate(SERVE_AXES["serve_decode_impl"]):
+        vpe.registry.register_variant("serve_decode_impl", name,
+                                      fn=(lambda name=name: name),
+                                      default=(i == 0))
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=SLOTS, max_len=MAX_LEN, kv_layout="paged",
+        block_size=16, decode_horizon=(horizon if horizon == "auto"
+                                       else int(horizon)),
+        horizon_choices=(4, 16), vpe=vpe)
+    return eng, vpe
+
+
+def _run_horizon_pass(eng, reqs) -> dict:
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    return {
+        "tok_per_s": useful_tokens(reqs) / wall,
+        "ttft_p95_ms": percentile(eng.stats.ttft_s, 95) * 1e3,
+        "queue_p95_ms": percentile(eng.stats.queue_wait_s, 95) * 1e3,
+        "outs": {r.rid: list(map(int, r.out)) for r in reqs},
+    }
+
+
+def _bench_horizon_workload(cfg, params, make_reqs, warm_passes: int) -> dict:
+    """One workload over the horizon sweep; best-of-HZN_REPS timed,
+    reps INTERLEAVED across arms so a slow host epoch degrades every
+    arm alike instead of whichever arm it happened to land on (arms
+    measured minutes apart drift 10-20% on the shared container)."""
+    from repro.core import bucket_label
+    engines = {}
+    for label in HZN_CHOICES:
+        eng, vpe = _horizon_engine(cfg, params, label)
+        for _ in range(warm_passes):   # compiles + controller settling
+            _run_horizon_pass(eng, make_reqs())
+        # tuning (and its trial/re-explore cost) is the warm-up phase,
+        # as everywhere in this bench: freeze exploration so the timed
+        # reps measure steady-state serving under the settled policy
+        vpe.controller.reexplore_period = 0
+        engines[label] = (eng, vpe)
+    results: dict = {}
+    for _ in range(HZN_REPS):
+        for label, (eng, _vpe) in engines.items():
+            eng.stats = type(eng.stats)()
+            r = _run_horizon_pass(eng, make_reqs())
+            # capture per-rep so the persisted hist describes the SAME
+            # pass as the throughput it sits next to
+            r["horizon_hist"] = dict(eng.stats.horizon_hist)
+            if label not in results \
+                    or r["tok_per_s"] > results[label]["tok_per_s"]:
+                results[label] = r
+    for label, (eng, vpe) in engines.items():
+        results[label]["selected"] = {
+            bucket_label(b): d.selected
+            for (op, b), d in vpe.controller._decisions.items()
+            if op == "decode_horizon"}
+    return results
+
+
+def bench_decode_horizon(cfg, params) -> bool:
+    """Horizon sweep: decode-bound speedup + auto tracking the best
+    fixed choice on both a decode-bound and a pressured workload."""
+    record = {"bench": "serve_decode_horizon", "slots": SLOTS,
+              "choices": list(HZN_CHOICES)}
+    ok = True
+    for wname, make_reqs, warm in (
+            ("decode_bound",
+             lambda: _horizon_workload(np.random.default_rng(5),
+                                       cfg.vocab_size), 4),
+            ("admission_pressure",
+             lambda: make_workload(np.random.default_rng(6), 24,
+                                   cfg.vocab_size), 4)):
+        res = _bench_horizon_workload(cfg, params, make_reqs, warm)
+        outs = {k: v.pop("outs") for k, v in res.items()}
+        parity = all(o == outs["1"] for o in outs.values())
+        fixed = {k: v["tok_per_s"] for k, v in res.items() if k != "auto"}
+        best_fixed = max(fixed, key=fixed.get)
+        speedup = fixed[best_fixed] / fixed["1"]
+        auto_ratio = res["auto"]["tok_per_s"] / fixed[best_fixed]
+        w_ok = parity and auto_ratio >= 0.9
+        if wname == "decode_bound":
+            w_ok = w_ok and speedup >= 1.5
+        ok = ok and w_ok
+        record[wname] = {
+            "results": res,
+            "best_fixed": best_fixed,
+            "best_fixed_speedup_vs_1": round(speedup, 2),
+            "auto_vs_best_fixed": round(auto_ratio, 3),
+            "greedy_parity": parity,
+        }
+        for label in HZN_CHOICES:
+            print(f"# horizon {wname:>18} H={label:>4}: "
+                  f"{res[label]['tok_per_s']:8.1f} tok/s, ttft p95 "
+                  f"{res[label]['ttft_p95_ms']:7.2f}ms, queue p95 "
+                  f"{res[label]['queue_p95_ms']:7.2f}ms")
+        print(f"# horizon {wname}: best fixed H={best_fixed} "
+              f"({speedup:.2f}x vs H=1), auto at {auto_ratio:.2f}x of best, "
+              f"parity {'exact' if parity else 'BROKEN'}")
+        if "selected" in res["auto"]:
+            print(f"# horizon {wname} auto decisions: "
+                  f"{res['auto']['selected']}")
+    record["pass"] = ok
+    line = json.dumps(record, sort_keys=True)
+    print(line)
+    with open(BENCH_JSON, "a") as f:  # append: the trajectory accumulates
+        f.write(line + "\n")
+    print(f"# decode horizon: {'PASS' if ok else 'FAIL'} "
+          f"(need >=1.5x decode-bound at the best fixed horizon and "
+          f"auto within 10% of best on both workloads, exact parity)")
+    return ok
+
+
 def main(n_requests: int = 24) -> None:
     cfg = get_config("qwen3-8b").reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -430,7 +590,8 @@ def main(n_requests: int = 24) -> None:
     ok_prefix = bench_prefix_cache(cfg, params, n_requests)
     ok_paged = bench_paged_admission(cfg, params)
     ok_chunked = bench_chunked_prefill(cfg, params)
-    if not (ok and ok_prefix and ok_paged and ok_chunked):
+    ok_horizon = bench_decode_horizon(cfg, params)
+    if not (ok and ok_prefix and ok_paged and ok_chunked and ok_horizon):
         sys.exit(1)
 
 

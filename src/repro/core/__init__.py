@@ -19,8 +19,9 @@ from .dispatch import DEFAULT, VPE, VPEFunction
 from .profiler import Profiler, SampleSet, Welford
 from .registry import GLOBAL, OpEntry, Registry, Variant, reset_global
 from .shape_class import (
-    bucket_label, kv_layout_bucket, occupancy_bucket, pad_to_bucket,
-    prefill_chunk_bucket, prefix_len_bucket, shape_bucket)
+    bucket_label, decode_horizon_bucket, kv_layout_bucket, occupancy_bucket,
+    pad_to_bucket, prefill_chunk_bucket, prefix_len_bucket,
+    queue_depth_bucket, shape_bucket)
 
 __all__ = [
     "VPE",
@@ -43,4 +44,6 @@ __all__ = [
     "prefix_len_bucket",
     "kv_layout_bucket",
     "prefill_chunk_bucket",
+    "queue_depth_bucket",
+    "decode_horizon_bucket",
 ]

@@ -71,6 +71,10 @@ def bucket_label(bucket: Tuple) -> str:
         _, pb, level, total = bucket
         plen = "plen0" if pb == 0 else f"plen[{2 ** (pb - 1)},{2 ** pb})"
         return f"chunk:{plen}xocc{level}/{total}slots"
+    if bucket and bucket[0] == "hzn":
+        _, qb, level, total = bucket
+        q = "q0" if qb == 0 else f"q[{2 ** (qb - 1)},{2 ** qb})"
+        return f"horizon:{q}xocc{level}/{total}slots"
     b, ranks = bucket
     lo, hi = 2 ** b, 2 ** (b + 1)
     return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}"
@@ -138,6 +142,33 @@ def prefill_chunk_bucket(prompt_len: int, active: int, total: int, *,
     p = prefix_len_bucket(prompt_len)
     o = occupancy_bucket(active, total, levels=levels)
     return ("pfc", p[1], o[1], total)
+
+
+def queue_depth_bucket(depth: int) -> int:
+    """Log2 level of the admission-queue depth (0 = empty queue)."""
+    if depth <= 0:
+        return 0
+    return int(math.floor(math.log2(depth))) + 1
+
+
+def decode_horizon_bucket(queue_depth: int, active: int, total: int, *,
+                          levels: int = 4) -> Tuple:
+    """Dispatch key for the serve engine's ``decode_horizon`` axis.
+
+    How many decode steps to fuse into one on-device loop trades
+    per-token host overhead (amortized by a long horizon) against
+    admission latency (a queued request cannot enter a slot mid-horizon)
+    — HPA's amortization-window decision.  Both sides depend on how much
+    work is waiting (queue depth: an empty queue has nothing to delay)
+    and how busy the pool is (occupancy: a full pool amortizes the fused
+    call over more live slots), so the decision is keyed by queue-depth
+    level × occupancy level — the same two-dimensional decision-tree-on-
+    input-size shape as :func:`kv_layout_bucket`, with *load* as the
+    second input instead of length.
+    """
+    q = queue_depth_bucket(queue_depth)
+    o = occupancy_bucket(active, total, levels=levels)
+    return ("hzn", q, o[1], total)
 
 
 def pad_to_bucket(n: int, *, minimum: int = 16) -> int:

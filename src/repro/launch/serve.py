@@ -48,12 +48,23 @@ def main() -> None:
                          "measured per prompt-length x occupancy bucket; "
                          "chunks interleave with decode steps so long "
                          "prompts cannot stall resident requests")
-    ap.add_argument("--chunks-per-step", type=int, default=1,
+    ap.add_argument("--chunks-per-step", type=int, default=None,
                     help="prefill chunks run per engine step (the decode "
-                         "stall budget)")
+                         "stall budget); default adapts to occupancy — "
+                         "1 with resident decoders, one per prefilling "
+                         "slot when nothing decodes")
+    ap.add_argument("--decode-horizon", default="1",
+                    help="decode steps fused into one on-device loop per "
+                         "engine step (int), or 'auto' — a VPE axis keyed "
+                         "by queue-depth x occupancy, fed from per-token "
+                         "wall time: long horizons amortize host dispatch "
+                         "when the queue is empty, 1 keeps admission "
+                         "latency bounded under load")
     args = ap.parse_args()
     chunk = (args.prefill_chunk if args.prefill_chunk in ("whole", "auto")
              else int(args.prefill_chunk))
+    horizon = (args.decode_horizon if args.decode_horizon == "auto"
+               else int(args.decode_horizon))
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -69,7 +80,8 @@ def main() -> None:
             cfg, params, slots=args.batch, max_len=args.max_len, vpe=VPE(),
             prefix_blocks=args.prefix_blocks if args.prefix_cache else 0,
             block_size=args.block_size, kv_layout=args.kv_layout,
-            prefill_chunk=chunk, chunks_per_step=args.chunks_per_step)
+            prefill_chunk=chunk, chunks_per_step=args.chunks_per_step,
+            decode_horizon=horizon)
         for r in reqs:
             engine.submit(r)
         done = engine.run()

@@ -19,6 +19,18 @@ Two length modes coexist:
   positions ``[0, S)`` and ``length[slot]`` is reset, so the causal
   mask ``col <= length`` can never reach a previous occupant's stale
   entries).  Ring buffers are not supported in per-slot mode.
+
+Every append in this module is a pure functional update (``.at[...]``
+scatters / ``dynamic_update_slice``), which is what lets the fused
+decode-horizon path carry caches and the page pool through a
+``lax.scan`` over H steps (:func:`repro.models.transformer.
+_horizon_scan`): :func:`update_layer_cache` writes at a per-slot
+``length`` that the stop mask simply stops advancing for frozen slots
+(their garbage re-writes land at the frozen position of their own
+row), and :func:`append_token_paged`'s ``live`` mask doubles as the
+freeze mask — a frozen slot's append is redirected to the trash page,
+so reserved-but-unreached horizon pages stay untouched and can be
+rolled back afterwards.
 """
 
 from __future__ import annotations

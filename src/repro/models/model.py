@@ -193,6 +193,44 @@ def decode_step_mixed(cfg: ModelConfig, params: Any, cache: Any, pool: Any,
                                                decode_impl=decode_impl)
 
 
+# -- fused multi-token decode horizons ----------------------------------------
+
+def decode_steps_slots(cfg: ModelConfig, params: Any, cache: Any,
+                       tokens: jax.Array, live: jax.Array, eos_ids: jax.Array,
+                       budget: jax.Array, horizon: int,
+                       decode_impl: str = "grouped"
+                       ) -> Tuple[Any, jax.Array, jax.Array, jax.Array]:
+    """Fused H decode steps (contiguous layout): one on-device scan with
+    in-graph greedy feedback and stop handling; one host fence per H
+    tokens instead of per token."""
+    return _slot_module(cfg).decode_steps_slots(
+        cfg, params, cache, tokens, live, eos_ids, budget, horizon,
+        decode_impl=decode_impl)
+
+
+def decode_steps_paged(cfg: ModelConfig, params: Any, pool: Any, cache: Any,
+                       tokens: jax.Array, live: jax.Array, eos_ids: jax.Array,
+                       budget: jax.Array, horizon: int,
+                       decode_impl: str = "grouped"
+                       ) -> Tuple[Any, Any, jax.Array, jax.Array, jax.Array]:
+    """Fused H decode steps over the paged layout (pages covering the
+    whole horizon must be pre-reserved in the block tables)."""
+    return _slot_module(cfg).decode_steps_paged(
+        cfg, params, pool, cache, tokens, live, eos_ids, budget, horizon,
+        decode_impl=decode_impl)
+
+
+def decode_steps_mixed(cfg: ModelConfig, params: Any, cache: Any, pool: Any,
+                       tokens: jax.Array, use_paged: jax.Array,
+                       live: jax.Array, eos_ids: jax.Array, budget: jax.Array,
+                       horizon: int, decode_impl: str = "grouped"
+                       ) -> Tuple[Any, Any, jax.Array, jax.Array, jax.Array]:
+    """Fused H decode steps for ``kv_layout=auto``."""
+    return _slot_module(cfg).decode_steps_mixed(
+        cfg, params, cache, pool, tokens, use_paged, live, eos_ids, budget,
+        horizon, decode_impl=decode_impl)
+
+
 def prefill(cfg: ModelConfig, params: Any, batch: Dict[str, jax.Array], cache: Any
             ) -> Tuple[Any, jax.Array]:
     """Prompt processing.  Families without a fused prefill path replay

@@ -454,7 +454,8 @@ def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Dict,
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array,
-                decode_impl: Optional[str] = None) -> Tuple[Dict, jax.Array]:
+                decode_impl: Optional[str] = None,
+                advance: Optional[jax.Array] = None) -> Tuple[Dict, jax.Array]:
     """One decode step.  tokens: (B, 1) -> (new_cache, logits (B, 1, V)).
 
     Works in both cache modes: scalar ``length`` (lockstep batch) and
@@ -462,6 +463,13 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array
     and writes at its own position; freed slots decode garbage that the
     host discards).  ``decode_impl`` picks the decode-attention variant
     (a VPE implementation axis; ``None`` = the default "grouped").
+
+    ``advance``: optional per-slot (B,) 0/1 mask of which lengths move
+    forward this step (``None`` = all, the classic behavior).  The fused
+    multi-step path passes the not-yet-stopped mask so a slot frozen
+    mid-horizon re-writes the same (garbage) position instead of
+    marching its length forward — everything up to the length advance is
+    identical, which is what keeps fused ≡ repeated-single-step exact.
     """
     B, _ = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -496,7 +504,8 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Dict, tokens: jax.Array
     x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = (x @ head).astype(jnp.float32)
-    new_cache = {"k": k_new, "v": v_new, "length": length + 1}
+    new_len = length + 1 if advance is None else length + advance
+    new_cache = {"k": k_new, "v": v_new, "length": new_len}
     return new_cache, logits
 
 
@@ -514,7 +523,8 @@ def _post_attn(cfg: ModelConfig, lp: Params, x: jax.Array, o: jax.Array
 
 def decode_step_paged(cfg: ModelConfig, params: Params, pool: Dict,
                       cache: Dict, tokens: jax.Array, live: jax.Array,
-                      decode_impl: Optional[str] = None
+                      decode_impl: Optional[str] = None,
+                      advance: Optional[jax.Array] = None
                       ) -> Tuple[Dict, Dict, jax.Array]:
     """One decode step over the PAGED KV layout.
 
@@ -557,13 +567,15 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Dict,
     x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = (x @ head).astype(jnp.float32)
+    new_len = length + 1 if advance is None else length + advance
     return ({"k": k_new, "v": v_new},
-            {"bt": bt, "length": length + 1}, logits)
+            {"bt": bt, "length": new_len}, logits)
 
 
 def decode_step_mixed(cfg: ModelConfig, params: Params, cache: Dict,
                       pool: Dict, tokens: jax.Array, use_paged: jax.Array,
-                      live: jax.Array, decode_impl: Optional[str] = None
+                      live: jax.Array, decode_impl: Optional[str] = None,
+                      advance: Optional[jax.Array] = None
                       ) -> Tuple[Dict, Dict, jax.Array]:
     """Decode step for ``kv_layout=auto``: slots may be in EITHER layout.
 
@@ -609,5 +621,129 @@ def decode_step_mixed(cfg: ModelConfig, params: Params, cache: Dict,
     x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = (x @ head).astype(jnp.float32)
-    new_cache = {"k": k_new, "v": v_new, "bt": bt, "length": length + 1}
+    new_len = length + 1 if advance is None else length + advance
+    new_cache = {"k": k_new, "v": v_new, "bt": bt, "length": new_len}
     return new_cache, {"k": pk_new, "v": pv_new}, logits
+
+
+# -- fused multi-token decode horizons ----------------------------------------
+#
+# One jitted lax.scan runs up to H decode steps back-to-back on device:
+# the greedy argmax of step j feeds step j+1's embedding lookup without
+# a host round-trip, and an in-graph stop mask freezes slots that hit
+# EOS or exhaust their per-slot token budget mid-horizon (a frozen
+# slot's appends are redirected to the trash page — paged — or re-write
+# its own frozen garbage position — contiguous — and its length stops
+# advancing, so nothing it does is observable).  The scan body calls
+# the SAME single-step functions above with ``advance`` = the
+# not-yet-stopped mask, which is what makes a fused horizon token-exact
+# with H repeated engine steps: the per-step math is literally the same
+# code.  The host fences ONCE per horizon — on the (B, H) token block —
+# instead of once per token; that amortization of per-token dispatch
+# overhead is the paper's 32x-by-larger-work-items lever applied to the
+# decode hot path.
+
+def _horizon_scan(step_fn, state, tokens: jax.Array, live: jax.Array,
+                  eos_ids: jax.Array, budget: jax.Array, horizon: int):
+    """Shared stop-handling scan for the three fused decode paths.
+
+    step_fn(state, tok (B,1), step_live (B,)) -> (state, logits) must be
+    one layout's single decode step with ``advance=step_live``.  live:
+    (B,) 0/1 decoding mask; eos_ids: (B,) per-slot stop token (-1 =
+    none — token ids are non-negative so -1 never matches); budget:
+    (B,) tokens each slot may still emit (>= 1 for live slots).
+
+    Returns (state, tok_block (B, H) int32, valid (B, H) int32,
+    final_tok (B,) int32): token ``tok_block[i, j]`` is real iff
+    ``valid[i, j]`` — a slot stopped at step j has zeros from j+1 on, so
+    EOS mid-horizon emits no trailing tokens by construction.
+    ``final_tok`` is each slot's last *valid* token (the next horizon's
+    input), returned on device so the engine never re-uploads it.
+    """
+    B = tokens.shape[0]
+    live = jnp.asarray(live, jnp.int32)
+    eos_ids = jnp.asarray(eos_ids, jnp.int32)
+
+    def body(carry, _):
+        state, tok, stopped, rem = carry
+        step_live = live * (1 - stopped)
+        state, logits = step_fn(state, tok[:, None], step_live)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        rem = rem - step_live
+        stop_now = (step_live > 0) & ((nxt == eos_ids) | (rem <= 0))
+        stopped = jnp.where(stop_now, 1, stopped)
+        tok = jnp.where(step_live > 0, nxt, tok)
+        return (state, tok, stopped, rem), (nxt, step_live)
+
+    carry0 = (state, tokens[:, 0], jnp.zeros((B,), jnp.int32),
+              jnp.asarray(budget, jnp.int32))
+    (state, tok, _stopped, _rem), (toks, emits) = jax.lax.scan(
+        body, carry0, None, length=horizon)
+    return state, toks.T, emits.T, tok               # (H, B) -> (B, H)
+
+
+def decode_steps_slots(cfg: ModelConfig, params: Params, cache: Dict,
+                       tokens: jax.Array, live: jax.Array, eos_ids: jax.Array,
+                       budget: jax.Array, horizon: int,
+                       decode_impl: Optional[str] = None
+                       ) -> Tuple[Dict, jax.Array, jax.Array, jax.Array]:
+    """Fused H-step decode over the contiguous slot cache.
+
+    Returns (cache, tok_block (B, H), valid (B, H), final_tok (B,)) —
+    see :func:`_horizon_scan` for the stop contract.
+    """
+    def step_fn(cache, tok, step_live):
+        return decode_step(cfg, params, cache, tok, decode_impl=decode_impl,
+                           advance=step_live)
+
+    return _horizon_scan(step_fn, cache, tokens, live, eos_ids, budget,
+                         horizon)
+
+
+def decode_steps_paged(cfg: ModelConfig, params: Params, pool: Dict,
+                       cache: Dict, tokens: jax.Array, live: jax.Array,
+                       eos_ids: jax.Array, budget: jax.Array, horizon: int,
+                       decode_impl: Optional[str] = None
+                       ) -> Tuple[Dict, Dict, jax.Array, jax.Array, jax.Array]:
+    """Fused H-step decode over the paged KV layout.
+
+    The engine must pre-reserve every page the horizon can touch
+    (blocks covering positions ``[length, length + H)`` per live slot)
+    and install them in the block table before the call — mid-horizon
+    there is no host to allocate one.  A slot frozen by the stop mask
+    has its appends redirected to the trash page (``step_live`` doubles
+    as the append's live mask), so reserved-but-unused pages are merely
+    untouched and can be rolled back afterwards.  Returns (pool, cache,
+    tok_block (B, H), valid (B, H), final_tok (B,)).
+    """
+    def step_fn(state, tok, step_live):
+        pool, cache = state
+        pool, cache, logits = decode_step_paged(
+            cfg, params, pool, cache, tok, step_live,
+            decode_impl=decode_impl, advance=step_live)
+        return (pool, cache), logits
+
+    (pool, cache), toks, valid, tok = _horizon_scan(
+        step_fn, (pool, cache), tokens, live, eos_ids, budget, horizon)
+    return pool, cache, toks, valid, tok
+
+
+def decode_steps_mixed(cfg: ModelConfig, params: Params, cache: Dict,
+                       pool: Dict, tokens: jax.Array, use_paged: jax.Array,
+                       live: jax.Array, eos_ids: jax.Array, budget: jax.Array,
+                       horizon: int, decode_impl: Optional[str] = None
+                       ) -> Tuple[Dict, Dict, jax.Array, jax.Array, jax.Array]:
+    """Fused H-step decode for ``kv_layout=auto`` (slots in either
+    layout; both attention reads computed and selected per slot, as in
+    :func:`decode_step_mixed`).  Returns (cache, pool, tok_block,
+    valid, final_tok)."""
+    def step_fn(state, tok, step_live):
+        cache, pool = state
+        cache, pool, logits = decode_step_mixed(
+            cfg, params, cache, pool, tok, use_paged, step_live,
+            decode_impl=decode_impl, advance=step_live)
+        return (cache, pool), logits
+
+    (cache, pool), toks, valid, tok = _horizon_scan(
+        step_fn, (cache, pool), tokens, live, eos_ids, budget, horizon)
+    return cache, pool, toks, valid, tok

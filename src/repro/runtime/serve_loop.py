@@ -45,6 +45,17 @@ prompts behind a long one — is bounded by the chunk budget instead of
 by the longest queued prompt.  The chunk size itself is a measured
 dispatch axis (``prefill_chunk``), keyed by prompt-length × occupancy
 buckets and fed from the summed per-chunk wall at prefill completion.
+
+Since PR 5 the decode step can fuse up to ``H`` tokens into ONE jitted
+on-device loop per engine iteration (``decode_horizon``): greedy argmax
+feeds the next step in-graph, an in-graph stop mask freezes slots that
+hit EOS or their token budget mid-horizon, and the host fences once per
+horizon on a ``(slots, H)`` token block instead of once per token.  The
+horizon is itself a measured dispatch axis keyed by queue-depth ×
+occupancy buckets and fed from per-token wall time — the paper's
+amortize-dispatch-over-larger-work-items lever (its 32x matmul) turned
+into a runtime decision: empty queue → fuse long, contended → stay at
+1 so admission latency stays bounded.
 """
 
 from __future__ import annotations
@@ -58,9 +69,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (VPE, kv_layout_bucket, occupancy_bucket,
-                        pad_to_bucket, prefill_chunk_bucket,
-                        prefix_len_bucket)
+from repro.core import (VPE, decode_horizon_bucket, kv_layout_bucket,
+                        occupancy_bucket, pad_to_bucket,
+                        prefill_chunk_bucket, prefix_len_bucket)
 from repro.models import kvcache
 from repro.models import model as model_lib
 from repro.runtime.page_pool import PagePool
@@ -76,12 +87,19 @@ from repro.runtime.prefix_cache import PrefixCache
 # * prefill_chunk — prefill chunk size in tokens ("whole" = one chunk),
 #   keyed by prompt-length × occupancy (only registered for
 #   prefill_chunk="auto"; the registered variant names come from the
-#   engine's ``chunk_choices`` — the list below is the canonical set).
+#   engine's ``chunk_choices`` — the list below is the canonical set);
+# * decode_horizon — how many decode steps to fuse into one on-device
+#   loop per engine step, keyed by queue-depth × occupancy (only
+#   registered for decode_horizon="auto"; variant names come from the
+#   engine's ``horizon_choices``).  Fed from per-TOKEN wall time
+#   (dt / valid tokens), so a long horizon wins exactly when amortizing
+#   the per-call host overhead beats the admission latency it costs.
 SERVE_AXES: Dict[str, List[str]] = {
     "serve_decode_impl": list(kvcache.DECODE_ATTN_VARIANTS),
     "prefix_reuse": ["reuse", "recompute"],
     "kv_layout": ["contiguous", "paged"],
     "prefill_chunk": ["whole", "128", "512", "2048"],
+    "decode_horizon": ["1", "4", "16"],
 }
 
 KV_LAYOUTS = ("contiguous", "paged", "auto")
@@ -120,6 +138,19 @@ class ServeStats:
     # prefill puts whole-prompt walls here; chunking bounds the series
     # by the chunk budget — the mixed-workload bench's p95 target.
     decode_stall_s: List[float] = dataclasses.field(default_factory=list)
+    # fused decode horizons: multi-step on-device calls, the tokens they
+    # emitted, pages reserved for a horizon but returned unused (EOS
+    # froze the slot first), and the horizon length of every decode
+    # call — {H: calls}, single-token steps counted under H=1 — the
+    # auto axis's full decision record (back-off to 1 included)
+    horizon_calls: int = 0
+    horizon_tokens: int = 0
+    reserved_pages_rolled_back: int = 0
+    horizon_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # effective prefill-chunk budget per step that ran chunks — {budget:
+    # steps}; adaptive budgeting raises it when no decoding slot could
+    # be stalled, the explicit chunks_per_step override pins it
+    chunk_budget_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -161,6 +192,9 @@ class ServeStats:
                   f"({self.cow_copies} cow)")
         if self.prefill_chunks:
             s += f", {self.prefill_chunks} prefill chunks"
+        if self.horizon_calls:
+            s += (f", {self.horizon_calls} fused horizons "
+                  f"({self.horizon_tokens} tok)")
         return s
 
 
@@ -386,8 +420,11 @@ class ContinuousBatchingEngine:
                  prefix_blocks: int = 0, block_size: int = 16,
                  kv_layout: str = "contiguous", partial_match: bool = True,
                  max_skip: int = 4, sched_window: int = 16,
-                 prefill_chunk: Any = "whole", chunks_per_step: int = 1,
-                 chunk_choices: Tuple[int, ...] = (128, 512, 2048)) -> None:
+                 prefill_chunk: Any = "whole",
+                 chunks_per_step: Optional[int] = None,
+                 chunk_choices: Tuple[int, ...] = (128, 512, 2048),
+                 decode_horizon: Any = 1,
+                 horizon_choices: Tuple[int, ...] = (4, 16)) -> None:
         if not model_lib.supports_slot_serving(cfg):
             raise ValueError(f"family {cfg.family!r} has no slot-serving path")
         if kv_layout not in KV_LAYOUTS:
@@ -398,8 +435,18 @@ class ContinuousBatchingEngine:
                     "prefill_chunk must be a token count, 'whole' or 'auto'")
         elif int(prefill_chunk) < 0:
             raise ValueError("prefill_chunk must be >= 0 (0 = whole)")
-        if chunks_per_step < 1:
-            raise ValueError("chunks_per_step must be >= 1")
+        if chunks_per_step is not None and chunks_per_step < 1:
+            raise ValueError(
+                "chunks_per_step must be >= 1 (or None = adaptive)")
+        if isinstance(decode_horizon, str):
+            if decode_horizon != "auto":
+                raise ValueError(
+                    "decode_horizon must be a step count >= 1 or 'auto'")
+        elif int(decode_horizon) < 1:
+            raise ValueError("decode_horizon must be >= 1")
+        if any(int(h) < 2 for h in horizon_choices):
+            raise ValueError("horizon_choices must all be >= 2 "
+                             "(1 is always the incumbent)")
         self.cfg = cfg
         self.params = params
         self.num_slots = slots
@@ -414,8 +461,23 @@ class ContinuousBatchingEngine:
         self.prefill_chunk = prefill_chunk
         self.chunks_per_step = chunks_per_step
         self.chunk_choices = tuple(int(c) for c in chunk_choices)
+        self.decode_horizon = (decode_horizon if decode_horizon == "auto"
+                               else int(decode_horizon))
+        self.horizon_choices = tuple(int(h) for h in horizon_choices)
         self._chunk_rr = 0           # round-robin cursor over prefilling slots
         self._decode_fn_created = False
+        # persistent device-side decode inputs: rebuilt from the host
+        # slot mirrors only when an admission/retire/prefill-completion
+        # event dirties them — a steady decode-bound step re-uploads
+        # nothing (the next input token is the previous step's on-device
+        # output)
+        self._tok_dev = None
+        self._live_dev = None
+        self._use_paged_dev = None
+        self._eos_dev = None
+        self._masks_dirty = True
+        self._fused_fns: Dict[Tuple[str, int], Callable] = {}
+        self._fused_fn_created = False
         self.stats = ServeStats()
         self.queue: List[Request] = []
         self.completed: List[Request] = []
@@ -429,6 +491,18 @@ class ContinuousBatchingEngine:
             for i, name in enumerate(SERVE_AXES[self._axis]):
                 vpe.registry.register_variant(
                     self._axis, name, fn=(lambda name=name: name), default=(i == 0))
+        if vpe is not None and self.decode_horizon == "auto" \
+                and not vpe.registry.has_op("decode_horizon"):
+            # "1" (the classic one-token step) is the incumbent; the
+            # fused horizons from this engine's horizon_choices are the
+            # blind-offload candidates, trialed per queue-depth ×
+            # occupancy bucket and fed from per-token wall time
+            vpe.registry.register_op("decode_horizon")
+            names = ["1"] + [str(h) for h in self.horizon_choices]
+            for i, name in enumerate(names):
+                vpe.registry.register_variant(
+                    "decode_horizon", name, fn=(lambda name=name: name),
+                    default=(i == 0))
         # -- KV storage (layout-dependent) ---------------------------------
         self.block_size = block_size
         paged_capable = kv_layout in ("paged", "auto")
@@ -455,6 +529,7 @@ class ContinuousBatchingEngine:
             self._copy_page = jax.jit(kvcache.copy_page, donate_argnums=0)
             self._admit_paged = jax.jit(self._admit_paged_fn, donate_argnums=0)
             self._set_bt = jax.jit(self._set_bt_fn, donate_argnums=0)
+            self._set_bt_many = jax.jit(self._set_bt_many_fn, donate_argnums=0)
             self._set_len = jax.jit(self._set_len_fn, donate_argnums=0)
             # the chunked-prefill jit: donate the pool so every chunk's
             # page scatter updates it in place; one specialization per
@@ -545,6 +620,16 @@ class ContinuousBatchingEngine:
     def _set_bt_fn(cache, slot, col, pid):
         out = dict(cache)
         out["bt"] = cache["bt"].at[slot, col].set(pid)
+        return out
+
+    @staticmethod
+    def _set_bt_many_fn(cache, slots, cols, pids):
+        """Batched block-table splice: every (slot, col) <- pid in ONE
+        scatter (arrays padded by repeating a real splice — duplicate
+        identical writes are harmless), replacing the one-jit-call-per-
+        page loop the pre-horizon engine paid on every block boundary."""
+        out = dict(cache)
+        out["bt"] = cache["bt"].at[slots, cols].set(pids)
         return out
 
     @staticmethod
@@ -760,6 +845,7 @@ class ContinuousBatchingEngine:
         slot.pos = len(req.prompt)
         slot.steps_resident = 0
         slot.clean_step_shares = []
+        self._masks_dirty = True     # live/tok/eos device arrays stale
 
     def _select_chunk(self, S: int, occ: int):
         """Resolve this admission's chunk size (tokens; 0 = whole) and,
@@ -832,12 +918,27 @@ class ContinuousBatchingEngine:
         slot.chunk, slot.chunk_bucket, slot.chunk_variant = \
             self._select_chunk(S, occ)
 
+    def _effective_chunk_budget(self) -> int:
+        """Chunks allowed this engine step.  An explicit
+        ``chunks_per_step`` pins the budget; the adaptive default
+        (``None``) spends 1 when decoding slots are resident (their
+        service interruption is what the budget bounds) and, when no
+        slot is decoding, one chunk per prefilling slot — there is
+        nothing to stall, so batching chunks only shortens TTFT
+        (ROADMAP "chunk-budget adaptivity")."""
+        if self.chunks_per_step is not None:
+            return self.chunks_per_step
+        if self.num_decoding > 0:
+            return 1
+        return max(1, sum(1 for s in self.slots if s.prefilling))
+
     def _run_prefill_chunks(self) -> bool:
-        """Run at most ``chunks_per_step`` prefill chunks, round-robin
-        over the slots currently in the prefilling state — the budget
-        knob that bounds decode service interruption per engine step."""
+        """Run at most the step's chunk budget of prefill chunks,
+        round-robin over the slots currently in the prefilling state —
+        the budget bounds decode service interruption per engine step."""
         ran = False
-        for _ in range(self.chunks_per_step):
+        budget = self._effective_chunk_budget()
+        for _ in range(budget):
             order = [(self._chunk_rr + k) % self.num_slots
                      for k in range(self.num_slots)]
             i = next((j for j in order if self.slots[j].prefilling), None)
@@ -846,6 +947,9 @@ class ContinuousBatchingEngine:
             self._chunk_rr = (i + 1) % self.num_slots
             self._run_one_chunk(i)
             ran = True
+        if ran:
+            self.stats.chunk_budget_hist[budget] = \
+                self.stats.chunk_budget_hist.get(budget, 0) + 1
         return ran
 
     def _run_one_chunk(self, i: int) -> None:
@@ -924,8 +1028,8 @@ class ContinuousBatchingEngine:
         fns = [self._prefill, self._insert]
         if self.pages is not None:
             fns += [self._gather_pages, self._write_pages, self._copy_page,
-                    self._admit_paged, self._set_bt, self._set_len,
-                    self._prefill_chunk]
+                    self._admit_paged, self._set_bt, self._set_bt_many,
+                    self._set_len, self._prefill_chunk]
         if self.prefix_cache is not None:
             fns += [self._insert_at, self._prefill_suffix]
             if self.pages is None:
@@ -1164,24 +1268,47 @@ class ContinuousBatchingEngine:
             slot.admit_bucket = None
             self.completed.append(req)
             slot.req = None   # freed mid-decode; refilled next admission
+            self._masks_dirty = True
 
     # -- decode -------------------------------------------------------------
-    def _grow_block_tables(self) -> None:
-        """Before a decode step: any live paged slot whose next token
-        starts a fresh block gets a page allocated and spliced into its
-        device block table.  (The tail page is otherwise guaranteed
+    def _grow_block_tables(self, span: int = 1,
+                           remaining: Optional[Dict[int, int]] = None) -> None:
+        """Before a decode call: reserve, for every live paged slot, the
+        pages covering its next ``span`` write positions — clipped to the
+        slot's ``remaining`` token budget when given — and install every
+        splice in ONE batched scatter.  ``span=1`` is the classic
+        single-step growth (a page exactly when the next token starts a
+        fresh block); a fused horizon pre-reserves its whole write range
+        ``[pos, pos + min(span, remaining))`` because mid-horizon there
+        is no host to allocate a page.  (The tail page is guaranteed
         private by admission-time copy-on-write, so decode appends never
         need a COW check.)"""
+        splices: List[Tuple[int, int, int]] = []
         for i, slot in enumerate(self.slots):
             if slot.free or slot.prefilling or slot.layout != "paged":
                 continue
-            if slot.pos % self.block_size == 0:
-                col = slot.pos // self.block_size
-                assert col == len(slot.pages), (col, len(slot.pages))
+            upto = slot.pos + (span if remaining is None
+                               else min(span, remaining[i]))
+            last_col = (upto - 1) // self.block_size
+            assert last_col < self.nb_max, (last_col, self.nb_max)
+            for col in range(len(slot.pages), last_col + 1):
                 pid = self._alloc_page()
                 slot.pages.append(pid)
-                self.cache = self._set_bt(self.cache, jnp.int32(i),
-                                          jnp.int32(col), jnp.int32(pid))
+                splices.append((i, col, pid))
+        if not splices:
+            return
+        if len(splices) == 1:
+            (i, col, pid), = splices
+            self.cache = self._set_bt(self.cache, jnp.int32(i),
+                                      jnp.int32(col), jnp.int32(pid))
+            return
+        # pad to a power-of-two splice count (bounded jit shapes) by
+        # repeating the last real splice — an identical duplicate write
+        n_pad = pad_to_bucket(len(splices), minimum=4)
+        splices = splices + [splices[-1]] * (n_pad - len(splices))
+        s, c, p = (np.asarray(x, np.int32) for x in zip(*splices))
+        self.cache = self._set_bt_many(self.cache, jnp.asarray(s),
+                                       jnp.asarray(c), jnp.asarray(p))
 
     def _decode_fn(self, bucket) -> Callable:
         if self.vpe is not None:
@@ -1200,30 +1327,223 @@ class ContinuousBatchingEngine:
                 # are pointer swaps served from the jit cache, not rejits)
                 self.stats.rejits += 1
             cfg = self.cfg
+            # tokens arrive as the persistent (slots,) device array (the
+            # previous step's own output — no host rebuild or re-upload
+            # on steady decode steps); reshape to (slots, 1) in-graph
             if self.kv_layout == "paged":
                 def _step(p, pool, c, t, live, v=vname):
                     pool, c, logits = model_lib.decode_step_paged(
-                        cfg, p, pool, c, t, live, decode_impl=v)
+                        cfg, p, pool, c, t[:, None], live, decode_impl=v)
                     return pool, c, jnp.argmax(
                         logits[:, -1, :], axis=-1).astype(jnp.int32)
                 fn = jax.jit(_step, donate_argnums=(1, 2))
             elif self.kv_layout == "auto":
                 def _step(p, c, pool, t, up, live, v=vname):
                     c, pool, logits = model_lib.decode_step_mixed(
-                        cfg, p, c, pool, t, up, live, decode_impl=v)
+                        cfg, p, c, pool, t[:, None], up, live, decode_impl=v)
                     return c, pool, jnp.argmax(
                         logits[:, -1, :], axis=-1).astype(jnp.int32)
                 fn = jax.jit(_step, donate_argnums=(1, 2))
             else:
                 def _step(p, c, t, v=vname):
                     c, logits = model_lib.decode_step_slots(
-                        cfg, p, c, t, decode_impl=v)
+                        cfg, p, c, t[:, None], decode_impl=v)
                     # greedy argmax on device: only (slots,) ints cross host
                     return c, jnp.argmax(
                         logits[:, -1, :], axis=-1).astype(jnp.int32)
                 fn = jax.jit(_step)
             self._decode_fns[vname] = fn
         return fn
+
+    def _fused_fn(self, bucket, horizon: int) -> Callable:
+        """The fused-horizon analogue of :meth:`_decode_fn`: one jitted
+        H-step on-device loop per (decode-attention variant, H)."""
+        if self.vpe is not None:
+            vname = self.vpe.controller.select(self._axis, bucket)
+        else:
+            vname = self._default_variant
+        self._last_variant = vname
+        key = (vname, horizon)
+        fn = self._fused_fns.get(key)
+        self._fused_fn_created = fn is None
+        if fn is None:
+            if self._fused_fns or self._decode_fns:
+                self.stats.rejits += 1
+            cfg = self.cfg
+            if self.kv_layout == "paged":
+                def _steps(p, pool, c, t, live, eos, bud,
+                           v=vname, h=horizon):
+                    return model_lib.decode_steps_paged(
+                        cfg, p, pool, c, t[:, None], live, eos, bud, h,
+                        decode_impl=v)
+                fn = jax.jit(_steps, donate_argnums=(1, 2))
+            elif self.kv_layout == "auto":
+                def _steps(p, c, pool, t, up, live, eos, bud,
+                           v=vname, h=horizon):
+                    return model_lib.decode_steps_mixed(
+                        cfg, p, c, pool, t[:, None], up, live, eos, bud, h,
+                        decode_impl=v)
+                fn = jax.jit(_steps, donate_argnums=(1, 2))
+            else:
+                def _steps(p, c, t, live, eos, bud, v=vname, h=horizon):
+                    return model_lib.decode_steps_slots(
+                        cfg, p, c, t[:, None], live, eos, bud, h,
+                        decode_impl=v)
+                fn = jax.jit(_steps, donate_argnums=(1,))
+            self._fused_fns[key] = fn
+        return fn
+
+    def _select_horizon(self, n_active: int
+                        ) -> Tuple[int, Optional[Tuple], Optional[str]]:
+        """Resolve this step's decode horizon (and, in auto mode, its
+        VPE bucket + variant name).  The bucket is keyed by the queue
+        depth REMAINING after this step's admission phase — the requests
+        a fused horizon would actually delay — × occupancy."""
+        if self.decode_horizon != "auto":
+            return int(self.decode_horizon), None, None
+        bucket = decode_horizon_bucket(len(self.queue), n_active,
+                                       self.num_slots,
+                                       levels=self.occupancy_levels)
+        if self.vpe is None:
+            return 1, None, None
+        name = self.vpe.controller.select("decode_horizon", bucket)
+        return int(name), bucket, name
+
+    def _refresh_device_masks(self) -> None:
+        """Rebuild the persistent device-side decode inputs from the
+        host slot mirrors — only after an admission/retire/prefill-
+        completion event dirtied them.  Steady decode-bound steps skip
+        this entirely: the input token array is the previous call's own
+        on-device output and the masks are unchanged."""
+        if not self._masks_dirty:
+            return
+        self._tok_dev = jnp.asarray(
+            np.array([s.tok for s in self.slots], np.int32))
+        self._live_dev = jnp.asarray(
+            np.array([0 if (s.free or s.prefilling) else 1
+                      for s in self.slots], np.int32))
+        self._eos_dev = jnp.asarray(
+            np.array([-1 if (s.req is None or s.req.eos_id is None)
+                      else s.req.eos_id for s in self.slots], np.int32))
+        if self.kv_layout == "auto":
+            self._use_paged_dev = jnp.asarray(
+                np.array([1 if s.layout == "paged" else 0
+                          for s in self.slots], np.int32))
+        self._masks_dirty = False
+
+    def _bt_jit_cache_size(self) -> int:
+        """Compiled-specialization count of the block-table splice jits.
+        They trace lazily mid-serve (first splice, first crossing into a
+        bigger pad bucket), inside the horizon axis's timed span — a
+        growth across a step means that step's sample paid a compile and
+        must be dropped, exactly like a decode-fn compile."""
+        if self.pages is None:
+            return 0
+        try:
+            return self._set_bt._cache_size() + self._set_bt_many._cache_size()
+        except AttributeError:  # pragma: no cover - older/newer jax
+            return -1
+
+    def _rollback_reserved(self, i: int) -> None:
+        """Return a slot's reserved-but-unwritten horizon pages to the
+        refcounted pool (EOS froze the slot before it reached them).
+        Pages covering ``[0, pos)`` stay; everything past the last
+        written block goes back, so a drain audit sees zero leaks even
+        when every horizon over-reserved."""
+        slot = self.slots[i]
+        keep = -(-slot.pos // self.block_size)      # ceil
+        while len(slot.pages) > keep:
+            self.pages.unref(slot.pages.pop())
+            self.stats.reserved_pages_rolled_back += 1
+
+    def _fused_decode(self, H: int, hbucket, hname,
+                      remaining: Dict[int, int], t_h: float) -> None:
+        """One fused H-step decode call: pre-reserve every page the
+        horizon can write (ONE batched block-table scatter), run the
+        on-device loop, fence once on the (slots, H) token block, replay
+        it into per-request outputs, retire stopped slots and roll their
+        unused reserved pages back."""
+        bt_jits = self._bt_jit_cache_size()
+        if self.pages is not None:
+            self._grow_block_tables(span=H, remaining=remaining)
+        n_active = len(remaining)
+        bucket = occupancy_bucket(n_active, self.num_slots,
+                                  levels=self.occupancy_levels)
+        fn = self._fused_fn(bucket, H)
+        try:
+            jits = fn._cache_size()
+        except AttributeError:  # pragma: no cover - older/newer jax
+            jits = -1
+        budget = np.zeros((self.num_slots,), np.int32)
+        for i, rem in remaining.items():
+            budget[i] = rem
+        bud_dev = jnp.asarray(budget)
+        t0 = time.perf_counter()
+        if self.kv_layout == "paged":
+            self.page_pool, cache, tok_block, valid, final_tok = fn(
+                self.params, self.page_pool, self.cache, self._tok_dev,
+                self._live_dev, self._eos_dev, bud_dev)
+        elif self.kv_layout == "auto":
+            cache, self.page_pool, tok_block, valid, final_tok = fn(
+                self.params, self.cache, self.page_pool, self._tok_dev,
+                self._use_paged_dev, self._live_dev, self._eos_dev, bud_dev)
+        else:
+            cache, tok_block, valid, final_tok = fn(
+                self.params, self.cache, self._tok_dev, self._live_dev,
+                self._eos_dev, bud_dev)
+        toks = np.asarray(tok_block)     # ONE fence for the whole horizon
+        emits = np.asarray(valid)
+        dt = time.perf_counter() - t0
+        self.cache = cache
+        self._tok_dev = final_tok
+        self.stats.decode_s += dt
+        self.stats.decode_steps += H
+        self.stats.horizon_calls += 1
+        self.stats.horizon_hist[H] = self.stats.horizon_hist.get(H, 0) + 1
+        if jits == -1:
+            step_tainted = self._fused_fn_created
+        else:
+            step_tainted = fn._cache_size() != jits
+        if bt_jits != -1 and self._bt_jit_cache_size() != bt_jits:
+            step_tainted = True     # a splice jit compiled inside t_h
+        if step_tainted:
+            self.stats.tainted_steps += 1
+        valid_total = int(emits.sum())
+        self.stats.horizon_tokens += valid_total
+        if self.vpe is not None:
+            # the decode-attention axis keeps per-STEP units (dt / H,
+            # the same quantity its single-step samples measure)
+            self.vpe.profiler.record(self._axis, self._last_variant, bucket,
+                                     dt / H)
+            self.vpe.controller.on_sample(self._axis, bucket,
+                                          self._last_variant)
+        share = dt / max(valid_total, 1)
+        for i in remaining:
+            slot = self.slots[i]
+            # a slot freezes at most once, so its valid tokens are a
+            # contiguous prefix of the horizon
+            e = int(emits[i].sum())
+            new_toks = [int(t) for t in toks[i, :e]]
+            slot.req.out.extend(new_toks)
+            slot.tok = new_toks[-1]
+            slot.pos += e
+            slot.steps_resident += e
+            if not step_tainted:
+                slot.clean_step_shares.extend([share] * e)
+            self.stats.tokens_out += e
+            if slot.layout == "paged":
+                self._rollback_reserved(i)
+            self._retire_if_done(i)
+        if self.vpe is not None and hbucket is not None \
+                and not step_tainted and valid_total:
+            # per-TOKEN wall of the FULL span (reservation + call +
+            # fence + replay — the overhead a horizon amortizes), with
+            # compile-tainted calls dropped; frozen steps emit nothing,
+            # so over-long horizons pay for themselves here
+            self.vpe.profiler.record("decode_horizon", hname, hbucket,
+                                     (time.perf_counter() - t_h)
+                                     / valid_total)
+            self.vpe.controller.on_sample("decode_horizon", hbucket, hname)
 
     def step(self) -> bool:
         """One engine iteration; returns False when fully idle.
@@ -1249,6 +1569,39 @@ class ContinuousBatchingEngine:
             # decode service interruption imposed by this step's
             # admission + chunk phase on already-resident requests
             self.stats.decode_stall_s.append(time.perf_counter() - t_p)
+        # the horizon axis's timed span starts HERE: it must include the
+        # per-call host work a fused horizon amortizes (remaining/budget
+        # builds, mask refresh, page reservation, the replay loop) — the
+        # fenced device wall alone is nearly horizon-independent per
+        # token, and feeding only that would hide exactly the overhead
+        # the axis exists to measure
+        t_h = time.perf_counter()
+        H, hbucket, hname = self._select_horizon(n_active)
+        if H > 1:
+            # tokens each decoding slot may still emit (host-known): the
+            # fused call's in-graph budget, and the horizon clamp —
+            # fusing past every slot's budget would only burn frozen
+            # steps.  Built only here: the H=1 hot path never reads it.
+            remaining = {i: s.req.max_new_tokens - len(s.req.out)
+                         for i, s in enumerate(self.slots)
+                         if s.req is not None and not s.prefilling}
+            # clamp to the largest remaining budget, flooring onto the
+            # DECLARED horizon set ({1, H} for a fixed horizon, {1} ∪
+            # horizon_choices for auto): an arbitrary clamped length
+            # would pay a fresh trace+compile mid-serve, which costs
+            # more than the frozen steps it avoids
+            cap = pad_to_bucket(max(remaining.values()), minimum=1)
+            allowed = [1] + [c for c in
+                             (self.horizon_choices
+                              if self.decode_horizon == "auto" else (H,))
+                             if c <= H]
+            H = max(c for c in allowed if c <= cap)
+        self._refresh_device_masks()
+        if H > 1:
+            self._fused_decode(H, hbucket, hname, remaining, t_h)
+            return True
+        # -- classic single-token step (the horizon-1 incumbent) ----------
+        bt_jits = self._bt_jit_cache_size()
         if self.pages is not None:
             self._grow_block_tables()
         bucket = occupancy_bucket(n_active, self.num_slots,
@@ -1258,28 +1611,24 @@ class ContinuousBatchingEngine:
             decode_jits = fn._cache_size()
         except AttributeError:  # pragma: no cover - older/newer jax
             decode_jits = -1
-        tokens = np.array([[s.tok] for s in self.slots], np.int32)
-        live = np.array([0 if (s.free or s.prefilling) else 1
-                         for s in self.slots], np.int32)
         t0 = time.perf_counter()
         if self.kv_layout == "paged":
             self.page_pool, cache, next_tok = fn(
-                self.params, self.page_pool, self.cache, jnp.asarray(tokens),
-                jnp.asarray(live))
+                self.params, self.page_pool, self.cache, self._tok_dev,
+                self._live_dev)
         elif self.kv_layout == "auto":
-            use_paged = np.array(
-                [1 if s.layout == "paged" else 0 for s in self.slots],
-                np.int32)
             cache, self.page_pool, next_tok = fn(
-                self.params, self.cache, self.page_pool, jnp.asarray(tokens),
-                jnp.asarray(use_paged), jnp.asarray(live))
+                self.params, self.cache, self.page_pool, self._tok_dev,
+                self._use_paged_dev, self._live_dev)
         else:
-            cache, next_tok = fn(self.params, self.cache, jnp.asarray(tokens))
+            cache, next_tok = fn(self.params, self.cache, self._tok_dev)
         toks = np.asarray(next_tok)  # fences the step
         dt = time.perf_counter() - t0
         self.cache = cache
+        self._tok_dev = next_tok     # next step's input, already on device
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
+        self.stats.horizon_hist[1] = self.stats.horizon_hist.get(1, 0) + 1
         # a step whose wall includes a decode-jit trace+compile must not
         # feed the per-slot attribution (decode shapes are static here,
         # so compiles happen exactly when a variant is first baked in —
@@ -1288,6 +1637,8 @@ class ContinuousBatchingEngine:
             step_tainted = self._decode_fn_created
         else:
             step_tainted = fn._cache_size() != decode_jits
+        if bt_jits != -1 and self._bt_jit_cache_size() != bt_jits:
+            step_tainted = True     # a splice jit compiled inside t_h
         if step_tainted:
             self.stats.tainted_steps += 1
         if self.vpe is not None:
@@ -1306,6 +1657,13 @@ class ContinuousBatchingEngine:
             slot.req.out.append(t)
             self.stats.tokens_out += 1
             self._retire_if_done(i)
+        if self.vpe is not None and hbucket is not None and not step_tainted:
+            # the horizon axis optimizes the per-TOKEN wall of the FULL
+            # step span (host bookkeeping + device call + replay): one
+            # step at occupancy n_active emitted n_active tokens
+            self.vpe.profiler.record("decode_horizon", hname, hbucket,
+                                     (time.perf_counter() - t_h) / n_active)
+            self.vpe.controller.on_sample("decode_horizon", hbucket, hname)
         return True
 
     def run(self, max_steps: Optional[int] = None) -> List[Request]:

@@ -1,0 +1,337 @@
+"""Fused multi-token decode horizons: parity, stop handling, page
+reservation/rollback, the measured ``decode_horizon`` axis, and the
+satellite engine changes that ride with it (batched block-table
+splices, persistent device-side decode inputs, adaptive chunk budget).
+
+The contract: fusing H decode steps into one on-device loop is a pure
+*dispatch* decision — every request's greedy output must equal the
+H=1 engine token for token, across KV layouts, EOS and token-budget
+stops mid-horizon, and any horizon the controller picks.  What fusing
+buys is one host fence per H tokens instead of per token; what it
+costs is admission latency, which is why the horizon is a measured
+per-bucket decision rather than a constant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import VPE, decode_horizon_bucket, queue_depth_bucket
+from repro.models import model
+from repro.runtime.serve_loop import ContinuousBatchingEngine, Request
+
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["qwen3-8b"].reduced()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def run_engine(cfg, params, reqs, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    eng = ContinuousBatchingEngine(cfg, params, **kw)
+    for r in reqs:
+        eng.submit(r)
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    return [r.out for r in done], eng
+
+
+def make_reqs(rng, vocab, plens=(8, 5, 11), maxnew=(20, 7, 13), eos=None):
+    return [Request(rid=i, prompt=rng.integers(0, vocab, p).astype(np.int32),
+                    max_new_tokens=m,
+                    eos_id=None if eos is None else eos[i])
+            for i, (p, m) in enumerate(zip(plens, maxnew))]
+
+
+class TestHorizonParity:
+    @pytest.mark.parametrize("kv_layout", ["contiguous", "paged", "auto"])
+    @pytest.mark.parametrize("horizon", [4, 16])
+    def test_fused_matches_single_step(self, setup, kv_layout, horizon):
+        """The acceptance criterion: H>1 is token-exact with H=1 on all
+        three KV layouts — staggered budgets force stops mid-horizon
+        and mid-decode re-admission between fused calls."""
+        cfg, params = setup
+        ref, _ = run_engine(cfg, params,
+                            make_reqs(np.random.default_rng(0), cfg.vocab_size),
+                            kv_layout=kv_layout, decode_horizon=1)
+        out, eng = run_engine(cfg, params,
+                              make_reqs(np.random.default_rng(0), cfg.vocab_size),
+                              kv_layout=kv_layout, decode_horizon=horizon)
+        assert out == ref, f"fused H={horizon} diverged on {kv_layout}"
+        assert eng.stats.horizon_calls > 0
+        assert eng.stats.horizon_tokens > 0
+        if kv_layout != "contiguous":
+            eng.check_kv()
+
+    def test_budget_stop_is_exact(self, setup):
+        """A slot whose remaining token budget is smaller than the
+        horizon freezes in-graph at exactly max_new_tokens."""
+        cfg, params = setup
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        ref, _ = run_engine(cfg, params,
+                            [Request(rid=0, prompt=prompt, max_new_tokens=5)],
+                            kv_layout="paged", decode_horizon=1)
+        out, eng = run_engine(cfg, params,
+                              [Request(rid=0, prompt=prompt, max_new_tokens=5)],
+                              kv_layout="paged", decode_horizon=16)
+        assert out == ref
+        assert len(out[0]) == 5
+        eng.check_kv()
+
+
+class TestStopHandling:
+    def _eos_setup(self, setup):
+        """A reference run plus an eos token whose FIRST occurrence sits
+        mid-generation (so the stop really fires inside a horizon, not
+        at the prefill token)."""
+        cfg, params = setup
+        rng = np.random.default_rng(2)
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        (ref,), _ = run_engine(
+            cfg, params, [Request(rid=0, prompt=prompt, max_new_tokens=24)],
+            kv_layout="paged", block_size=4, decode_horizon=1)
+        eos = next(t for i, t in enumerate(ref)
+                   if i >= 4 and t not in ref[:i])
+        return cfg, params, prompt, ref, eos
+
+    def test_eos_mid_horizon_emits_no_trailing_tokens(self, setup):
+        cfg, params, prompt, ref, eos = self._eos_setup(setup)
+        k = ref.index(eos)
+        (out,), eng = run_engine(
+            cfg, params,
+            [Request(rid=0, prompt=prompt, max_new_tokens=24, eos_id=eos)],
+            kv_layout="paged", block_size=4, decode_horizon=16)
+        # everything up to and including the EOS token, nothing after
+        assert out == ref[:k + 1]
+        eng.check_kv()
+
+    def test_reserved_page_rollback_leaves_zero_leaks(self, setup):
+        """EOS freezing a slot mid-horizon strands the pages reserved
+        for the rest of the horizon; they must be returned through the
+        refcounted pool, not leaked (block_size 4 << horizon 16 so the
+        reservation really spans several pages)."""
+        cfg, params, prompt, ref, eos = self._eos_setup(setup)
+        (out,), eng = run_engine(
+            cfg, params,
+            [Request(rid=0, prompt=prompt, max_new_tokens=24, eos_id=eos)],
+            kv_layout="paged", block_size=4, decode_horizon=16)
+        assert eng.stats.reserved_pages_rolled_back > 0, \
+            "rollback path never exercised"
+        eng.check_kv()                       # cross-structure refcount audit
+        assert all(not s.pages for s in eng.slots)
+        assert eng.pages.num_live == 0
+        assert sorted(eng.pages.free) == list(range(eng.pages.num_pages))
+
+
+class TestBatchedSplices:
+    def test_horizon_reservation_installs_whole_write_range(self, setup):
+        """White-box: before a fused call every live paged slot's device
+        block-table row must cover its full horizon write range, and the
+        host page mirror must match the device row (the one batched
+        scatter replaced the per-page splice loop)."""
+        cfg, params = setup
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=MAX_LEN,
+                                       kv_layout="paged", block_size=4,
+                                       decode_horizon=8)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=20))
+        eng.step()                           # admit (+ first fused call)
+        slot = eng.slots[0]
+        assert slot.req is not None
+        # pages must cover [0, pos) and the device row must mirror them
+        assert len(slot.pages) * 4 >= slot.pos
+        row = np.asarray(eng.cache["bt"])[0]
+        assert list(row[:len(slot.pages)]) == slot.pages
+        eng.run()
+        eng.check_kv()
+
+    def test_single_step_growth_unchanged(self, setup):
+        """H=1 keeps the one-splice-at-a-block-boundary behavior."""
+        cfg, params = setup
+        rng = np.random.default_rng(4)
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=MAX_LEN,
+                                       kv_layout="paged", block_size=4,
+                                       decode_horizon=1)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=10))
+        eng.run()
+        slot_pages_at_drain = eng.slots[0].pages
+        assert slot_pages_at_drain == []     # released at retire
+        eng.check_kv()
+
+
+class TestHorizonAuto:
+    def test_auto_axis_trials_and_stays_exact(self, setup):
+        """decode_horizon="auto": the controller blind-trials fused
+        horizons per queue-depth × occupancy bucket, concludes with a
+        measured switch-or-revert, and output parity is unconditional."""
+        cfg, params = setup
+        refs, _ = run_engine(
+            cfg, params,
+            make_reqs(np.random.default_rng(5), cfg.vocab_size,
+                      plens=(8, 8, 8, 8), maxnew=(30, 30, 30, 30)),
+            kv_layout="paged", decode_horizon=1)
+        vpe = VPE(controller_kwargs=dict(min_samples=2, trial_samples=2,
+                                         hysteresis=0.0))
+        outs, eng = run_engine(
+            cfg, params,
+            make_reqs(np.random.default_rng(5), cfg.vocab_size,
+                      plens=(8, 8, 8, 8), maxnew=(30, 30, 30, 30)),
+            kv_layout="paged", decode_horizon="auto",
+            horizon_choices=(4, 16), vpe=vpe)
+        assert outs == refs
+        hzn = [(b, d) for (op, b), d in vpe.controller._decisions.items()
+               if op == "decode_horizon"]
+        assert hzn, "decode_horizon axis never exercised"
+        tried = set()
+        for _b, d in hzn:
+            tried.update(d.tried)
+        assert len(tried) >= 2               # incumbent + a fused trial
+        assert any("trial" in [e for e, _, _ in d.history] for _b, d in hzn)
+        eng.check_kv()
+
+    def test_admission_latency_bounded_under_pressure(self, setup):
+        """The mechanism behind "contended → short horizon": the bucket
+        split by queue depth lets the controller run long horizons only
+        when the queue is empty.  With the pressure buckets forced to 1
+        and the empty-queue bucket to 16, a queued request is admitted
+        at most one fused call after a slot frees — its queue wait in
+        decode steps stays bounded by the short horizon — while the
+        drained tail still runs 16-token fused calls."""
+        cfg, params = setup
+        rng = np.random.default_rng(6)
+        # spontaneous blind trials off: the forced per-bucket policy is
+        # exactly what this test observes
+        vpe = VPE(controller_kwargs=dict(min_samples=10 ** 6))
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=1, max_len=MAX_LEN, kv_layout="paged",
+            decode_horizon="auto", horizon_choices=(4, 16), vpe=vpe)
+        for q in range(0, 8):                # every queue-depth level seen
+            b = decode_horizon_bucket(q, 1, 1)
+            vpe.controller.force("decode_horizon", b,
+                                 "1" if q > 0 else "16")
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 8)
+                        .astype(np.int32), max_new_tokens=6)
+                for i in range(4)]
+        # the last request runs alone (empty queue): long horizons again
+        reqs.append(Request(rid=4,
+                            prompt=rng.integers(0, cfg.vocab_size, 8)
+                            .astype(np.int32), max_new_tokens=32))
+        for r in reqs:
+            eng.submit(r)
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        assert len(done) == 5
+        # a pressured residency wastes no decode steps: every step it
+        # held the slot emitted a token (a fused horizon would pad the
+        # residency with frozen steps while the queue waited)
+        for r in done[:4]:
+            assert r.done_step - r.admit_step == len(r.out) - 1, \
+                "fused horizon wasted steps under queue pressure"
+        # the drained tail actually exercised the long horizon, the
+        # pressured phase ran single-token steps only (hist counts every
+        # decode call by horizon, 1 included), and all fused tokens
+        # belong to the tail
+        assert eng.stats.horizon_hist.get(16, 0) >= 1
+        assert set(eng.stats.horizon_hist) == {1, 16}
+        assert eng.stats.horizon_tokens <= done[4].max_new_tokens
+        eng.check_kv()
+
+    def test_horizon_validation(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError):
+            ContinuousBatchingEngine(cfg, params, decode_horizon="sometimes")
+        with pytest.raises(ValueError):
+            ContinuousBatchingEngine(cfg, params, decode_horizon=0)
+        with pytest.raises(ValueError):
+            ContinuousBatchingEngine(cfg, params, horizon_choices=(1, 4))
+
+    def test_bucket_shape(self):
+        assert queue_depth_bucket(0) == 0
+        assert queue_depth_bucket(1) == 1
+        assert queue_depth_bucket(2) == 2
+        assert queue_depth_bucket(5) == 3
+        b0 = decode_horizon_bucket(0, 2, 4)
+        b1 = decode_horizon_bucket(3, 2, 4)
+        assert b0[0] == "hzn" and b0 != b1   # queue depth splits buckets
+        assert decode_horizon_bucket(0, 4, 4) != decode_horizon_bucket(0, 1, 4)
+
+
+class TestPersistentDeviceInputs:
+    def test_steady_decode_reuses_device_arrays(self, setup):
+        """After the masks settle, steady decode steps must not rebuild
+        the token/live device arrays — the token input IS the previous
+        step's on-device output, swapped by reference."""
+        cfg, params = setup
+        rng = np.random.default_rng(7)
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                                       kv_layout="paged")
+        eng.submit(Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=20))
+        eng.step()                           # admit + first decode
+        assert not eng._masks_dirty
+        live_before = eng._live_dev
+        tok_before = eng._tok_dev
+        eng.step()                           # steady: no admission event
+        assert eng._live_dev is live_before  # mask untouched
+        assert eng._tok_dev is not tok_before  # swapped to the new output
+        # the device mirrors agree with the host slot state
+        assert list(np.asarray(eng._live_dev)) == [
+            0 if (s.free or s.prefilling) else 1 for s in eng.slots]
+        assert int(np.asarray(eng._tok_dev)[0]) == eng.slots[0].tok
+        eng.run()
+        eng.check_kv()
+
+
+class TestChunkBudgetAdaptivity:
+    def test_budget_raised_when_nothing_decodes(self, setup):
+        """Two concurrent prefills and no decoding slot: the adaptive
+        budget runs one chunk per prefilling slot per step (nothing to
+        stall), and the decision is recorded in stats."""
+        cfg, params = setup
+        rng = np.random.default_rng(8)
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=128,
+                                       kv_layout="paged", prefill_chunk=16)
+        for i in range(2):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, 64).astype(np.int32), max_new_tokens=2))
+        eng.run()
+        assert 2 in eng.stats.chunk_budget_hist, eng.stats.chunk_budget_hist
+        eng.check_kv()
+
+    def test_budget_stays_one_with_resident_decoders(self, setup):
+        """A decoding slot is present: the adaptive budget must pin
+        itself to 1 chunk per step (the PR 4 stall bound)."""
+        cfg, params = setup
+        rng = np.random.default_rng(9)
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=128,
+                                       kv_layout="paged", prefill_chunk=16)
+        eng.submit(Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=30))
+        for _ in range(3):
+            eng.step()                       # resident and decoding
+        eng.submit(Request(rid=1, prompt=rng.integers(
+            0, cfg.vocab_size, 96).astype(np.int32), max_new_tokens=2))
+        eng.run()
+        assert set(eng.stats.chunk_budget_hist) == {1}
+        eng.check_kv()
+
+    def test_explicit_override_pins_budget(self, setup):
+        cfg, params = setup
+        rng = np.random.default_rng(10)
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=128,
+                                       kv_layout="paged", prefill_chunk=16,
+                                       chunks_per_step=3)
+        eng.submit(Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab_size, 96).astype(np.int32), max_new_tokens=2))
+        eng.run()
+        assert set(eng.stats.chunk_budget_hist) == {3}
+        eng.check_kv()

@@ -5,11 +5,13 @@ templates of different lengths plus random tails) are pushed through a
 small slot pool with a deliberately starved page pool, so admission,
 warm hits, the reuse/recompute VPE axis, prefix-aware queue
 reordering, pinning, eviction and slot recycling all interleave — and
-the whole thing runs once per (KV layout × prefill-chunk) point:
-contiguous slot regions, paged block tables with whole-prompt chunks,
-paged with 16-token chunked admission (concurrent prefilling slots
-interleaved with decode), and auto/auto (both the layout AND the chunk
-size are live VPE axes).  After full drain:
+the whole thing runs once per (KV layout × prefill-chunk ×
+decode-horizon) point: contiguous slot regions, paged block tables
+with whole-prompt chunks and 4-step fused decode horizons, paged with
+16-token chunked admission plus 16-step horizons (EOS stops freeze
+slots mid-horizon, so reserved-page rollback runs continuously), and
+auto/auto/auto (layout, chunk size AND horizon all live VPE axes).
+After full drain:
 
 * every request completed, no slot is still occupied;
 * no KV page is leaked: tree blocks + free list == pool, all pins
@@ -45,13 +47,14 @@ def setup():
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("kv_layout,prefill_chunk", [
-    ("contiguous", "whole"),
-    ("paged", "whole"),
-    ("paged", 16),          # chunked admission interleaved with decode
-    ("auto", "auto"),       # layout AND chunk size both measured axes
+@pytest.mark.parametrize("kv_layout,prefill_chunk,decode_horizon", [
+    ("contiguous", "whole", 1),
+    ("paged", "whole", 4),   # fused horizons + per-residency EOS stops
+    ("paged", 16, 16),       # chunked admission AND long fused horizons
+    ("auto", "auto", "auto"),  # layout, chunk size AND horizon all axes
 ])
-def test_soak_no_leaks_and_sane_stats(setup, kv_layout, prefill_chunk):
+def test_soak_no_leaks_and_sane_stats(setup, kv_layout, prefill_chunk,
+                                      decode_horizon):
     cfg, params = setup
     rng = np.random.default_rng(0)
     templates = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
@@ -61,7 +64,8 @@ def test_soak_no_leaks_and_sane_stats(setup, kv_layout, prefill_chunk):
         cfg, params, slots=4, max_len=128, vpe=vpe,
         prefix_blocks=24, block_size=16,  # starved headroom -> real evictions
         kv_layout=kv_layout, prefill_chunk=prefill_chunk,
-        chunk_choices=(16, 32))
+        chunk_choices=(16, 32), decode_horizon=decode_horizon,
+        horizon_choices=(4, 16))
 
     reqs = []
     for i in range(N_REQUESTS):
@@ -148,3 +152,12 @@ def test_soak_no_leaks_and_sane_stats(setup, kv_layout, prefill_chunk):
     assert any(op == "prefix_reuse" for (op, _b) in vpe.controller._decisions)
     if kv_layout == "auto":
         assert any(op == "kv_layout" for (op, _b) in vpe.controller._decisions)
+    # fused horizons: EOS'd requests (30% of the workload) freeze slots
+    # mid-horizon, so the drain proofs above double as the reservation-
+    # rollback leak check; fixed horizons must actually have fused
+    if decode_horizon in (4, 16):
+        assert eng.stats.horizon_calls > 0
+        assert eng.stats.horizon_tokens > 0
+    if decode_horizon == "auto":
+        assert any(op == "decode_horizon"
+                   for (op, _b) in vpe.controller._decisions)
