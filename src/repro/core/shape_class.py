@@ -17,7 +17,7 @@ regimes that matter for tiling decisions.
 from __future__ import annotations
 
 import math
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
@@ -52,32 +52,50 @@ def shape_bucket(*args: Any, granularity: float = 1.0) -> Tuple:
     return (b, tuple(sorted(set(ranks))))
 
 
+def _split_slo(bucket: Tuple) -> Tuple[Tuple, Optional[Tuple]]:
+    """Split a trailing :func:`slo_pressure_bucket` segment off a
+    composite dispatch key (the serve engine concatenates it onto the
+    ``decode_horizon``/``prefill_chunk`` buckets when SLO-aware
+    scheduling is on)."""
+    if len(bucket) >= 4 and bucket[-3] == "slo":
+        return bucket[:-3], bucket[-3:]
+    return bucket, None
+
+
 def bucket_label(bucket: Tuple) -> str:
+    bucket, slo = _split_slo(bucket)
+    suffix = ""
+    if slo is not None:
+        _, i, b = slo
+        suffix = f"xslo:i{i}b{b}"
     if bucket == ("scalar",):
-        return "scalar"
+        return "scalar" + suffix
     if bucket and bucket[0] == "occ":
         _, level, total = bucket
-        return f"occ{level}/{total}slots"
+        return f"occ{level}/{total}slots" + suffix
     if bucket and bucket[0] == "plen":
         _, b = bucket
         if b == 0:
-            return "plen0"
-        return f"plen[{2 ** (b - 1)},{2 ** b})tok"
+            return "plen0" + suffix
+        return f"plen[{2 ** (b - 1)},{2 ** b})tok" + suffix
+    if bucket and bucket[0] == "slo":
+        _, i, b = bucket
+        return f"slo:i{i}b{b}"
     if bucket and bucket[0] == "kvl":
         _, pb, level, total = bucket
         plen = "plen0" if pb == 0 else f"plen[{2 ** (pb - 1)},{2 ** pb})"
-        return f"{plen}xocc{level}/{total}slots"
+        return f"{plen}xocc{level}/{total}slots" + suffix
     if bucket and bucket[0] == "pfc":
         _, pb, level, total = bucket
         plen = "plen0" if pb == 0 else f"plen[{2 ** (pb - 1)},{2 ** pb})"
-        return f"chunk:{plen}xocc{level}/{total}slots"
+        return f"chunk:{plen}xocc{level}/{total}slots" + suffix
     if bucket and bucket[0] == "hzn":
         _, qb, level, total = bucket
         q = "q0" if qb == 0 else f"q[{2 ** (qb - 1)},{2 ** qb})"
-        return f"horizon:{q}xocc{level}/{total}slots"
+        return f"horizon:{q}xocc{level}/{total}slots" + suffix
     b, ranks = bucket
     lo, hi = 2 ** b, 2 ** (b + 1)
-    return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}"
+    return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}" + suffix
 
 
 def occupancy_bucket(active: int, total: int, *, levels: int = 4) -> Tuple:
@@ -169,6 +187,29 @@ def decode_horizon_bucket(queue_depth: int, active: int, total: int, *,
     q = queue_depth_bucket(queue_depth)
     o = occupancy_bucket(active, total, levels=levels)
     return ("hzn", q, o[1], total)
+
+
+def slo_pressure_bucket(queued_interactive: int, queued_batch: int) -> Tuple:
+    """Dispatch-key extension for SLO-aware horizon/chunk selection.
+
+    A fused decode horizon (or a large prefill chunk) is a deliberately
+    long device call; every QUEUED request waits that call out, and how
+    much that wait *costs* depends on who is waiting — an interactive
+    request burns TTFT budget, a batch request mostly does not.  The
+    serve engine's two-term objective charges each long call for the
+    class-weighted queue wait it imposes, and this bucket keys that
+    decision by the queue's composition, coarsely: interactive waiters
+    at three levels (0 / 1 / 2+: the marginal SLO damage saturates
+    fast) × batch waiters at three levels (0 / ≤4 / more).  The engine
+    concatenates it onto :func:`decode_horizon_bucket` /
+    :func:`prefill_chunk_bucket`, so the controller learns e.g. "fuse
+    long when nobody interactive waits, back off to 1 when someone
+    does" — the paper's decision tree with *who is waiting* as one more
+    input dimension.
+    """
+    i = min(max(queued_interactive, 0), 2)
+    b = 0 if queued_batch <= 0 else (1 if queued_batch <= 4 else 2)
+    return ("slo", i, b)
 
 
 def pad_to_bucket(n: int, *, minimum: int = 16) -> int:

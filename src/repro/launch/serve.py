@@ -60,6 +60,26 @@ def main() -> None:
                          "wall time: long horizons amortize host dispatch "
                          "when the queue is empty, 1 keeps admission "
                          "latency bounded under load")
+    ap.add_argument("--priority", choices=["batch", "interactive", "mix"],
+                    default="batch",
+                    help="request priority class; 'mix' alternates "
+                         "interactive/batch to exercise the class-aware "
+                         "scheduler (preemption + per-class starvation "
+                         "bounds)")
+    ap.add_argument("--page-budget", type=int, default=None,
+                    help="run the paged pool with this many pages instead "
+                         "of the deadlock-free worst case — over-pressure "
+                         "operation recovered by eviction + preemption "
+                         "(min: max_len/block_size + 2)")
+    ap.add_argument("--swap", action="store_true",
+                    help="swap preempted residencies' filled KV to host "
+                         "memory and scatter it back at re-admission "
+                         "instead of recomputing the prefill")
+    ap.add_argument("--slo-weight", type=float, default=0.0,
+                    help="weight of the queue-wait term in the scheduler "
+                         "objective: fused horizons and prefill chunks "
+                         "are charged wall x (1 + w x class-weighted "
+                         "queued requests); 0 disables")
     args = ap.parse_args()
     chunk = (args.prefill_chunk if args.prefill_chunk in ("whole", "auto")
              else int(args.prefill_chunk))
@@ -71,17 +91,24 @@ def main() -> None:
         cfg = cfg.reduced()
     params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
+    def _prio(i: int) -> str:
+        if args.priority == "mix":
+            return "interactive" if i % 2 == 0 else "batch"
+        return args.priority
+
     reqs = [Request(
         rid=i,
         prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-        max_new_tokens=args.new_tokens) for i in range(args.requests)]
+        max_new_tokens=args.new_tokens, priority=_prio(i))
+        for i in range(args.requests)]
     if args.continuous:
         engine = ContinuousBatchingEngine(
             cfg, params, slots=args.batch, max_len=args.max_len, vpe=VPE(),
             prefix_blocks=args.prefix_blocks if args.prefix_cache else 0,
             block_size=args.block_size, kv_layout=args.kv_layout,
             prefill_chunk=chunk, chunks_per_step=args.chunks_per_step,
-            decode_horizon=horizon)
+            decode_horizon=horizon, page_budget=args.page_budget,
+            swap=args.swap, slo_weight=args.slo_weight)
         for r in reqs:
             engine.submit(r)
         done = engine.run()

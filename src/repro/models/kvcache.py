@@ -291,6 +291,42 @@ def copy_page(pool: Cache, src: jax.Array, dst: jax.Array) -> Cache:
     }
 
 
+def swap_out_pages(pool: Cache, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Preemption swap-out: gather a victim slot's filled pages so the
+    host can hold their K/V while the pages are given away.
+
+    Same contract and layout as :func:`gather_pages` — (k, v) of shape
+    (L, 1, Hkv, nb*block_size, D), pages concatenated in ``ids`` order
+    so position ``j*block_size + o`` of the result is block ``j``'s
+    offset ``o`` — which is exactly the source indexing
+    :func:`swap_in_pages` scatters back from.  ``ids`` may be padded by
+    repeating any valid id; the caller records how many positions are
+    real (its ``fill_pos``) and masks on the way back in.  The caller
+    moves the result to host (``np.asarray``) — that copy IS the swap.
+    """
+    return gather_pages(pool, ids)
+
+
+def swap_in_pages(
+    pool: Cache, k_host: jax.Array, v_host: jax.Array, ids: jax.Array,
+    starts: jax.Array, valid_len: jax.Array,
+) -> Cache:
+    """Preemption swap-in: scatter swapped-out K/V into fresh pages.
+
+    ``k_host``/``v_host`` are a :func:`swap_out_pages` result (uploaded
+    back to device), covering absolute positions ``[0, nb*block_size)``;
+    ``ids`` are the newly allocated target pages (pad with the trash
+    id), ``starts`` their block-aligned absolute token starts (pad with
+    any negative start), and ``valid_len`` the number of REAL positions
+    — the preempted residency's ``fill_pos``, so a half-filled tail
+    block's stale columns keep the pool's existing content exactly as a
+    mid-block prefill chunk would.  One masked scatter, the same
+    dispatch :func:`write_pages` uses for admission.
+    """
+    return write_pages(pool, k_host, v_host, ids, starts,
+                       jnp.int32(0), valid_len)
+
+
 def write_chunk_paged_layer(
     pool_k_l: jax.Array, pool_v_l: jax.Array, k_new: jax.Array,
     v_new: jax.Array, bt_row: jax.Array, base: jax.Array,

@@ -43,6 +43,8 @@ class PagePool:
         self.refs: List[int] = [0] * num_pages
         self.allocs = 0          # lifetime counters (bench/stats)
         self.frees = 0
+        self.swap_outs = 0       # preemption swaps (events, not pages)
+        self.swap_ins = 0
 
     @property
     def trash_id(self) -> int:
@@ -85,6 +87,35 @@ class PagePool:
 
     def refcount(self, pid: int) -> int:
         return self.refs[pid]
+
+    # -- preemption swap -------------------------------------------------
+    def swap_out(self, pids: List[int]) -> int:
+        """Release a preempted slot's references after its page CONTENT
+        was gathered to host memory (:func:`repro.models.kvcache.
+        swap_out_pages` does the device half; this is the accounting
+        half).  One reference per page is dropped — a page still aliased
+        by the prefix tree or another slot survives; private pages
+        return to the free list.  Returns the number of pages actually
+        freed."""
+        freed = 0
+        for pid in pids:
+            self.unref(pid)
+            if self.refs[pid] == 0:
+                freed += 1
+        self.swap_outs += 1
+        return freed
+
+    def swap_in(self, n: int) -> Optional[List[int]]:
+        """Atomically allocate ``n`` fresh pages for a swapped-out
+        residency to scatter its host K/V back into — all or none, so a
+        half-satisfied swap-in can never leak pages (the engine falls
+        back to its eviction/preemption escalation when this returns
+        None)."""
+        if len(self.free) < n:
+            return None
+        pids = [self.alloc() for _ in range(n)]
+        self.swap_ins += 1
+        return pids
 
     def check(self, owners: Optional[Dict[int, int]] = None) -> None:
         """Free-list + refcount audit; raises AssertionError on violation.

@@ -56,6 +56,27 @@ occupancy buckets and fed from per-token wall time — the paper's
 amortize-dispatch-over-larger-work-items lever (its 32x matmul) turned
 into a runtime decision: empty queue → fuse long, contended → stay at
 1 so admission latency stays bounded.
+
+Since PR 6 page-pool exhaustion is a *scheduling decision* instead of a
+crash: under pressure ``_alloc_page`` escalates from tree eviction to
+**victim preemption** — the lowest-priority/youngest prefilling slot is
+paused (its entire state is block table + ``fill_pos``, so preemption
+is "stop scheduling chunks, release or swap the pages, re-place
+later"), with decoding slots as a last resort for decode growth.  With
+``swap=True`` a victim's filled pages are gathered to host memory and
+scattered back into fresh pages at re-admission (``swap_out``/
+``swap_in`` on the :class:`~repro.runtime.page_pool.PagePool`, device
+half in :mod:`repro.models.kvcache`); otherwise the work is recomputed.
+Requests carry a **priority class** (``interactive``/``batch``) honored
+by the admission scheduler alongside the prefix-affinity window, with
+the ``max_skip`` starvation bound extendable per class, and a two-term
+SLO × throughput objective (``slo_weight``) charges fused horizons and
+prefill chunks for the class-weighted queue wait they impose — the
+``decode_horizon``/``prefill_chunk`` axes gain a queue-composition
+bucket dimension, so "fuse long" loses exactly when someone latency-
+sensitive is waiting.  Oversized and empty-prompt submissions become
+terminally-failed requests (``status="failed"``, ``error`` set) rather
+than caller-visible exceptions.
 """
 
 from __future__ import annotations
@@ -71,7 +92,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import (VPE, decode_horizon_bucket, kv_layout_bucket,
                         occupancy_bucket, pad_to_bucket,
-                        prefill_chunk_bucket, prefix_len_bucket)
+                        prefill_chunk_bucket, prefix_len_bucket,
+                        slo_pressure_bucket)
 from repro.models import kvcache
 from repro.models import model as model_lib
 from repro.runtime.page_pool import PagePool
@@ -103,6 +125,22 @@ SERVE_AXES: Dict[str, List[str]] = {
 }
 
 KV_LAYOUTS = ("contiguous", "paged", "auto")
+
+# request priority classes, best first.  Rank 0 (interactive) is never
+# preempted by rank 1 (batch) and jumps it in the admission window; the
+# SLO pressure term weighs a waiting interactive request at 1.0 and a
+# batch request at 0.1 (waiting is what batch traffic is FOR).
+PRIORITY_CLASSES = ("interactive", "batch")
+PRIORITY_RANK: Dict[str, int] = {c: i for i, c in enumerate(PRIORITY_CLASSES)}
+SLO_CLASS_WEIGHT: Dict[str, float] = {"interactive": 1.0, "batch": 0.1}
+
+
+class _PagePressure(Exception):
+    """Page demand exceeded everything eviction + preemption could free.
+
+    Internal control flow only: placement catches it to roll back and
+    requeue the admission; decode growth catches it to preempt the
+    growing slot itself.  It never escapes the engine."""
 
 
 @dataclasses.dataclass
@@ -151,6 +189,17 @@ class ServeStats:
     # steps}; adaptive budgeting raises it when no decoding slot could
     # be stalled, the explicit chunks_per_step override pins it
     chunk_budget_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # QoS / pressure recovery (PR 6): terminally-failed submissions,
+    # slots preempted for pages (decode_preemptions counts the decoding
+    # subset — the last-resort tier), host swaps and the pages they
+    # moved, and placements aborted all-or-nothing under pressure
+    rejected: int = 0
+    preemptions: int = 0
+    decode_preemptions: int = 0
+    swap_outs: int = 0
+    swap_ins: int = 0
+    swapped_pages: int = 0
+    placement_rollbacks: int = 0
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -195,6 +244,14 @@ class ServeStats:
         if self.horizon_calls:
             s += (f", {self.horizon_calls} fused horizons "
                   f"({self.horizon_tokens} tok)")
+        if self.preemptions:
+            s += (f", {self.preemptions} preemptions "
+                  f"({self.decode_preemptions} decode)")
+        if self.swap_outs:
+            s += (f", {self.swap_outs}/{self.swap_ins} swaps out/in "
+                  f"({self.swapped_pages} pages)")
+        if self.rejected:
+            s += f", {self.rejected} rejected"
         return s
 
 
@@ -255,6 +312,31 @@ class Request:
     # prefix-aware scheduling: times a later-submitted request was
     # admitted ahead of this one (bounded by the engine's max_skip)
     skips: int = 0
+    # QoS (PR 6): priority class (see PRIORITY_CLASSES), lifecycle
+    # status ("queued" -> "running" -> ["preempted" -> "running"]* ->
+    # "done" | "failed"), the terminal error for failed submissions,
+    # how many times this request was preempted for pages, and — while
+    # preempted with swap on — the host copy of its filled K/V
+    # ((k, v, fill_pos), scattered back into fresh pages at
+    # re-admission).  ttft_recorded guards the one-ttft-per-request
+    # invariant across preempt/resume cycles.
+    priority: str = "batch"
+    status: str = "queued"
+    error: Optional[str] = None
+    preemptions: int = 0
+    swap: Optional[Tuple] = None
+    ttft_recorded: bool = False
+
+    def effective_prompt(self) -> np.ndarray:
+        """The token prefix a (re-)admission must have in KV before
+        decode continues: the prompt plus any tokens already emitted —
+        greedy decode is deterministic, so a preempted-and-requeued
+        decoding request resumes exactly by prefilling this and decoding
+        on (the last emitted token's logits yield the next token)."""
+        p = np.asarray(self.prompt, np.int32)
+        if not self.out:
+            return p
+        return np.concatenate([p, np.asarray(self.out, np.int32)])
 
 
 class WaveScheduler:
@@ -311,6 +393,10 @@ class _Slot:
     fill_pos: int = 0            # prompt positions already prefilled
     chunk: int = 0               # chunk size this admission runs (0 = whole)
     chunk_walls: List[float] = dataclasses.field(default_factory=list)
+    # per-chunk SLO-charged cost: wall x (1 + slo_weight x queue
+    # pressure at chunk time) — what the prefill_chunk axis optimizes
+    # when the two-term objective is on (equal to chunk_walls when off)
+    chunk_costs: List[float] = dataclasses.field(default_factory=list)
     chunk_bucket: Optional[Tuple] = None   # prefill_chunk-axis bucket
     chunk_variant: Optional[str] = None
     place_wall: float = 0.0      # the O(1) placement span of this admission
@@ -424,7 +510,11 @@ class ContinuousBatchingEngine:
                  chunks_per_step: Optional[int] = None,
                  chunk_choices: Tuple[int, ...] = (128, 512, 2048),
                  decode_horizon: Any = 1,
-                 horizon_choices: Tuple[int, ...] = (4, 16)) -> None:
+                 horizon_choices: Tuple[int, ...] = (4, 16),
+                 page_budget: Optional[int] = None,
+                 swap: bool = False,
+                 slo_weight: float = 0.0,
+                 max_skip_by_class: Optional[Dict[str, int]] = None) -> None:
         if not model_lib.supports_slot_serving(cfg):
             raise ValueError(f"family {cfg.family!r} has no slot-serving path")
         if kv_layout not in KV_LAYOUTS:
@@ -458,6 +548,16 @@ class ContinuousBatchingEngine:
         self.partial_match = partial_match
         self.max_skip = max_skip
         self.sched_window = sched_window
+        if max_skip_by_class is not None:
+            bad = set(max_skip_by_class) - set(PRIORITY_CLASSES)
+            if bad:
+                raise ValueError(f"unknown priority classes in "
+                                 f"max_skip_by_class: {sorted(bad)}")
+        self.max_skip_by_class = max_skip_by_class
+        self.swap = swap
+        if slo_weight < 0.0:
+            raise ValueError("slo_weight must be >= 0")
+        self.slo_weight = slo_weight
         self.prefill_chunk = prefill_chunk
         self.chunks_per_step = chunks_per_step
         self.chunk_choices = tuple(int(c) for c in chunk_choices)
@@ -514,6 +614,8 @@ class ContinuousBatchingEngine:
         self.nb_max = max_len // block_size if paged_capable else 0
         self.pages: Optional[PagePool] = None
         self.page_pool = None
+        if page_budget is not None and not paged_capable:
+            raise ValueError("page_budget only applies to paged/auto layouts")
         if paged_capable:
             # sized so the engine can never deadlock on pages: worst-case
             # live block tables (x2 in auto mode, where contiguous
@@ -522,10 +624,30 @@ class ContinuousBatchingEngine:
             # cached-prefix headroom
             n_pages = (slots * self.nb_max * (2 if kv_layout == "auto" else 1)
                        + slots + max(prefix_blocks, 0))
+            if page_budget is not None:
+                # over-pressure operation: run with FEWER pages than the
+                # worst case and recover by eviction + preemption instead
+                # of raising.  Floor: one max_len residency must fit in
+                # an otherwise-drained pool (nb_max table pages + a
+                # pinned partial original + its COW clone), or a single
+                # request could never complete no matter what is
+                # preempted — the one genuinely unrecoverable sizing
+                floor = self.nb_max + 2
+                if page_budget < floor:
+                    raise ValueError(
+                        f"page_budget={page_budget} below the minimum "
+                        f"{floor} (= max_len/block_size + 2) a single "
+                        f"request needs to make progress")
+                n_pages = page_budget
             self.pages = PagePool(n_pages)
             self.page_pool = model_lib.init_page_pool(cfg, n_pages, block_size)
             self._gather_pages = jax.jit(kvcache.gather_pages)
             self._write_pages = jax.jit(kvcache.write_pages, donate_argnums=0)
+            # preemption swap: gather a victim's filled pages to host /
+            # scatter them back into fresh pages at re-admission
+            self._swap_gather = jax.jit(kvcache.swap_out_pages)
+            self._swap_scatter = jax.jit(kvcache.swap_in_pages,
+                                         donate_argnums=0)
             self._copy_page = jax.jit(kvcache.copy_page, donate_argnums=0)
             self._admit_paged = jax.jit(self._admit_paged_fn, donate_argnums=0)
             self._set_bt = jax.jit(self._set_bt_fn, donate_argnums=0)
@@ -640,13 +762,42 @@ class ContinuousBatchingEngine:
 
     # -- request intake ----------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue a request — or terminally fail it.
+
+        A request the engine can never serve (prompt + budget exceeding
+        slot capacity, an empty prompt, an unknown priority class) is
+        NOT an engine error: it completes immediately with
+        ``status="failed"`` and a per-request ``error``, exactly like a
+        served request completes with ``status="done"`` — one request's
+        bad parameters must not throw at a caller batching thousands.
+        (Empty prompts additionally used to poison the prefix-aware
+        scheduler: probing with ``max_match=len(prompt)-1 == -1`` is a
+        no-limit probe.)"""
+        req.submit_t = time.perf_counter()
         need = len(req.prompt) + req.max_new_tokens
         if need > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt+max_new_tokens={need} exceeds "
-                f"slot capacity max_len={self.max_len}")
-        req.submit_t = time.perf_counter()
+            self._reject(req, f"prompt+max_new_tokens={need} exceeds slot "
+                              f"capacity max_len={self.max_len}")
+            return
+        if len(np.asarray(req.prompt)) == 0:
+            self._reject(req, "empty prompt")
+            return
+        if req.priority not in PRIORITY_RANK:
+            self._reject(req, f"unknown priority class {req.priority!r} "
+                              f"(choose from {PRIORITY_CLASSES})")
+            return
+        req.status = "queued"
         self.queue.append(req)
+
+    def _reject(self, req: Request, why: str) -> None:
+        """Terminally fail a submission: error recorded on the request,
+        completed immediately, never queued — the engine keeps serving."""
+        req.error = why
+        req.status = "failed"
+        req.done = True
+        req.done_t = time.perf_counter()
+        self.stats.rejected += 1
+        self.completed.append(req)
 
     @property
     def num_active(self) -> int:
@@ -660,18 +811,180 @@ class ContinuousBatchingEngine:
                    if s.req is not None and not s.prefilling)
 
     # -- page accounting ----------------------------------------------------
-    def _alloc_page(self) -> int:
-        """Take a page from the shared pool, evicting unpinned cached
-        prefixes under pressure; exhaustion beyond that is a sizing bug
-        (the constructor provisions for worst-case live block tables)."""
+    def _alloc_page(self, *, exclude: Optional[int] = None,
+                    rank: Optional[int] = None,
+                    decode_growth: bool = False) -> int:
+        """Take a page from the shared pool, escalating under pressure.
+
+        The escalation ladder (each rung only when the previous is dry):
+
+        1. the free list;
+        2. evict an unpinned cached prefix (the PR 2/3 behavior);
+        3. **preempt a victim slot** — the lowest-priority/youngest
+           prefilling slot whose pages (or released pins) can feed the
+           pool; for ``decode_growth`` (a decoding slot needs its next
+           block NOW — mid-horizon there is no host to wait) the
+           ladder extends to equal-priority prefills and then to
+           strictly-lower-priority *decoding* slots.
+
+        ``exclude`` shields the slot the allocation is FOR; ``rank`` is
+        the requesting request's priority rank (a request never
+        preempts its equals or betters, except the decode-growth rung).
+        When the whole ladder is dry, :class:`_PagePressure` is raised
+        for the CALLER to recover from — placement rolls back
+        all-or-nothing and requeues, decode growth preempts the growing
+        slot itself.  Nothing escapes the engine."""
         pid = self.pages.alloc()
         while pid is None:
-            if self.prefix_cache is None or not self.prefix_cache.evict(1):
-                raise RuntimeError(
-                    "page pool exhausted with nothing evictable — "
-                    "live block tables exceed the provisioned pool")
+            if self.prefix_cache is not None and self.prefix_cache.evict(1):
+                pid = self.pages.alloc()
+                continue
+            victim = self._pick_victim(exclude, rank, decode_growth)
+            if victim is None:
+                raise _PagePressure(
+                    "page demand exceeds free list + evictable prefixes "
+                    "+ preemptible slots")
+            self._preempt_slot(victim)
             pid = self.pages.alloc()
         return pid
+
+    def _skip_budget(self, req: Request) -> int:
+        """Per-class starvation bound (uniform ``max_skip`` fallback)."""
+        if self.max_skip_by_class is not None:
+            return self.max_skip_by_class.get(req.priority, self.max_skip)
+        return self.max_skip
+
+    def _queue_pressure(self) -> float:
+        """Class-weighted count of QUEUED requests — the second term of
+        the scheduler objective.  Every request waiting in the queue
+        pays out the full wall time of whatever long device call (fused
+        horizon, prefill chunk) the engine commits to next, so that
+        call's *charged* cost is ``wall x (1 + slo_weight x pressure)``:
+        cheap when nobody urgent waits, expensive when interactive
+        requests are stacking up."""
+        return sum(SLO_CLASS_WEIGHT.get(r.priority, 1.0)
+                   for r in self.queue)
+
+    def _slo_bucket(self) -> Tuple:
+        """Queue-composition bucket concatenated onto the horizon/chunk
+        dispatch keys when SLO-aware scheduling is on."""
+        ni = sum(1 for r in self.queue if r.priority == "interactive")
+        return slo_pressure_bucket(ni, len(self.queue) - ni)
+
+    def _pick_victim(self, exclude: Optional[int], rank: Optional[int],
+                     decode_growth: bool) -> Optional[int]:
+        """Choose a slot to preempt for pages, or None.
+
+        Prefilling victims strictly before decoding ones (a paused
+        prefill loses only re-placeable work; a paused decode loses its
+        residency).  Within a tier: lowest priority class first, then
+        youngest (latest-admitted) — the least sunk work.  Slots that
+        could free nothing (no pages, no pin to release) are never
+        picked."""
+        r = len(PRIORITY_CLASSES) if rank is None else rank
+        prefills: List[Tuple[int, int, int, int]] = []
+        decodes: List[Tuple[int, int, int, int]] = []
+        for j, s in enumerate(self.slots):
+            if j == exclude or s.req is None:
+                continue
+            if not s.pages and s.req.cache_handle is None:
+                continue            # frees nothing: pointless victim
+            vr = PRIORITY_RANK[s.req.priority]
+            if s.prefilling:
+                if vr > r or (decode_growth and vr >= r):
+                    prefills.append((vr, s.req.admit_step, -s.fill_pos, j))
+            elif decode_growth and vr > r:
+                decodes.append((vr, s.req.admit_step, -len(s.req.out), j))
+        for tier in (prefills, decodes):
+            if tier:
+                return max(tier)[3]
+        return None
+
+    def _preempt_slot(self, j: int) -> None:
+        """Preempt slot ``j``: capture resumable state, return its pages
+        to the pool, unpin its prefix path, requeue its request at the
+        queue head (``status="preempted"``).
+
+        With ``swap=True`` the filled pages' K/V is gathered to host
+        first (:meth:`_swap_out`) so re-admission scatters it back
+        instead of recomputing; either way a preempted DECODING slot
+        resumes exactly via its :meth:`Request.effective_prompt` —
+        greedy decode is deterministic, so re-prefilling prompt+emitted
+        and decoding on reproduces the un-preempted stream."""
+        slot = self.slots[j]
+        req = slot.req
+        was_decoding = not slot.prefilling
+        if self.swap and slot.layout == "paged":
+            filled = slot.pos if was_decoding else slot.fill_pos
+            if filled > 0:
+                self._swap_out(j, filled)
+        if slot.layout == "paged" and slot.pages:
+            if req.swap is not None:
+                self.pages.swap_out(slot.pages)
+                slot.pages = []
+            else:
+                self._release_slot_pages(j)
+        if req.cache_handle is not None:
+            self.prefix_cache.release(req.cache_handle)
+            req.cache_handle = None
+        req.preemptions += 1
+        req.status = "preempted"
+        self.stats.preemptions += 1
+        if was_decoding:
+            self.stats.decode_preemptions += 1
+        slot.req = None
+        slot.prefilling = False
+        slot.fill_pos = 0
+        slot.pos = 0
+        slot.chunk_walls = []
+        slot.chunk_costs = []
+        slot.reuse_bucket = None
+        slot.chunk_bucket = None
+        slot.admit_bucket = None
+        self.queue.insert(0, req)
+        self._masks_dirty = True
+
+    def _swap_out(self, j: int, filled: int) -> None:
+        """Gather slot ``j``'s filled K/V to host memory before its
+        pages are given away (page count padded to a power of two by
+        repeating the first id — bounded jit shapes; the real extent
+        travels with the record as ``filled``)."""
+        slot = self.slots[j]
+        bs = self.block_size
+        nb = -(-filled // bs)                       # ceil
+        ids = slot.pages[:nb]
+        nb_pad = pad_to_bucket(nb, minimum=1)
+        ids_pad = np.asarray(ids + [ids[0]] * (nb_pad - nb), np.int32)
+        k, v = self._swap_gather(self.page_pool, jnp.asarray(ids_pad))
+        # np.asarray fences AND copies off-device: this IS the swap
+        slot.req.swap = (np.asarray(k), np.asarray(v), filled)
+        self.stats.swap_outs += 1
+        self.stats.swapped_pages += nb
+
+    def _swap_in_slot(self, i: int) -> int:
+        """Scatter a swap-resumed request's host K/V into the pages its
+        re-placement just allocated; returns the resume fill position
+        (the preempted residency's ``filled``) so chunked prefill picks
+        up exactly where the victim stopped instead of recomputing."""
+        slot = self.slots[i]
+        req = slot.req
+        k, v, filled = req.swap
+        bs = self.block_size
+        nb = -(-filled // bs)                       # ceil
+        ids = slot.pages[:nb]
+        nb_pad = k.shape[3] // bs                   # gather-time padding
+        trash = self.pages.trash_id
+        ids_pad = np.asarray(ids + [trash] * (nb_pad - nb), np.int32)
+        # padded starts are negative: their whole source window is
+        # invalid, so write_pages keeps the trash row's old content
+        starts = [b * bs for b in range(nb)]
+        starts_pad = np.asarray(starts + [-bs] * (nb_pad - nb), np.int32)
+        self.page_pool = self._swap_scatter(
+            self.page_pool, jnp.asarray(k), jnp.asarray(v),
+            jnp.asarray(ids_pad), jnp.asarray(starts_pad), jnp.int32(filled))
+        req.swap = None
+        self.stats.swap_ins += 1
+        return filled
 
     def check_kv(self) -> None:
         """Cross-structure page audit: pool refcounts must be exactly
@@ -695,33 +1008,59 @@ class ContinuousBatchingEngine:
     def _pop_next(self) -> Request:
         """Pick the next request to admit.
 
-        FIFO unless the prefix cache can do better: the front
-        ``sched_window`` entries are probed against the tree (cheap
+        Priority class first, prefix affinity second: the front
+        ``sched_window`` entries are narrowed to the best class present
+        (interactive jumps batch), then probed against the tree (cheap
         host-side walk, no pinning) and the longest match wins, so
         requests sharing a hot cached prefix are co-scheduled while it
         is resident (ROADMAP: raises hit rate under mixed tenant
         traffic).  Starvation bound: every time a request is jumped its
-        ``skips`` counter ticks; any request that has been skipped
-        ``max_skip`` times is admitted before anything may jump the
-        queue again, so the wait of request i is bounded by
-        ``(max_skip + 1) * (i + 1)`` admissions.
+        ``skips`` counter ticks; any request that has been skipped its
+        class's ``max_skip`` times (``max_skip_by_class``, uniform
+        ``max_skip`` otherwise) is admitted before anything may jump
+        the queue again, so the wait of request i is bounded by
+        ``(max_skip + 1) * (i + 1)`` admissions — priority raises who
+        goes FIRST, never how long anyone can be left behind.
         """
-        if self.prefix_cache is None or len(self.queue) == 1:
+        if len(self.queue) == 1:
             return self.queue.pop(0)
-        # starvation bound.  Skip counts are monotone non-increasing
-        # along the queue (jumping position j increments EVERY request
-        # ahead of j, and new arrivals join the tail at 0), so the head
-        # is always the first — and only — request that can have
-        # exhausted its budget.
-        if self.queue[0].skips >= self.max_skip:
-            return self.queue.pop(0)       # forced: may not be jumped again
+        # starvation bound, now per-class: any request that has been
+        # jumped its class's ``max_skip`` times is admitted before
+        # anything may jump the queue again.  With one uniform budget
+        # skip counts are monotone non-increasing along the queue
+        # (jumping position j increments EVERY request ahead of j, and
+        # new arrivals join the tail at 0) and the head is the only
+        # possible exhaustee; per-class budgets break the monotonicity
+        # argument, so the scan takes the FRONT-MOST exhausted request —
+        # which preserves the wait bound: position i is jumped at most
+        # budget(i) times, and each requester ahead of it is admitted at
+        # most budget+1 times before i, so i admits within
+        # ``(max_skip + 1) * (i + 1)`` admissions (max_skip = its
+        # class's budget when uniform, the largest configured budget
+        # when mixed).
+        forced = next((j for j, r in enumerate(self.queue)
+                       if r.skips >= self._skip_budget(r)), None)
+        if forced is not None:
+            for r in self.queue[:forced]:
+                r.skips += 1
+            self.stats.sched_skips += forced
+            return self.queue.pop(forced)
         window = self.queue[:self.sched_window]
-        best, best_len = 0, -1
-        for j, r in enumerate(window):
-            m = self.prefix_cache.probe(r.prompt,
-                                        max_match=len(r.prompt) - 1)
-            if m > best_len:
-                best, best_len = j, m
+        ranks = [PRIORITY_RANK[r.priority] for r in window]
+        best_rank = min(ranks)
+        if self.prefix_cache is None:
+            # no prefix affinity to weigh: front-most best-class request
+            best = ranks.index(best_rank)
+        else:
+            # among the window's best class only: longest cached prefix
+            best, best_len = None, -1
+            for j, r in enumerate(window):
+                if ranks[j] != best_rank:
+                    continue
+                m = self.prefix_cache.probe(r.prompt,
+                                            max_match=len(r.prompt) - 1)
+                if m > best_len:
+                    best, best_len = j, m
         for r in self.queue[:best]:
             r.skips += 1
         self.stats.sched_skips += best
@@ -738,10 +1077,18 @@ class ContinuousBatchingEngine:
             slot = self.slots[i]
             req = self._pop_next()
             now = time.perf_counter()
-            req.admit_step = self.stats.decode_steps
-            req.queue_wait_s = now - req.submit_t
-            self.stats.queue_wait_s.append(req.queue_wait_s)
-            prompt = np.asarray(req.prompt, np.int32)
+            if req.admit_step < 0:
+                # first admission only: a preempted request keeps its
+                # original queue-wait/admit-step record — the soak
+                # invariants are per request, not per residency
+                req.admit_step = self.stats.decode_steps
+                req.queue_wait_s = now - req.submit_t
+                self.stats.queue_wait_s.append(req.queue_wait_s)
+            req.status = "running"
+            # a preempted-and-requeued DECODING request resumes by
+            # prefilling prompt + already-emitted tokens (greedy decode
+            # is deterministic, so the continuation is exact)
+            prompt = req.effective_prompt()
             S = len(prompt)
             occ = self.num_active           # occupancy excluding this slot
             matched = 0
@@ -750,11 +1097,15 @@ class ContinuousBatchingEngine:
                 # produce the first generated token's logits.  Partial
                 # tail matching is paged-only — the contiguous layout
                 # copies whole blocks and cannot alias half of one
-                # copy-on-write.
+                # copy-on-write.  A swap-resume matches NOTHING: its
+                # swapped K/V covers the filled range wholesale and must
+                # not be spliced with tree pages whose extent may have
+                # changed while the request was preempted.
                 allow_partial = (self.partial_match
                                  and self.kv_layout in ("paged", "auto"))
                 req.cache_handle = self.prefix_cache.acquire(
-                    prompt, max_match=S - 1, allow_partial=allow_partial)
+                    prompt, max_match=(0 if req.swap is not None else S - 1),
+                    allow_partial=allow_partial and req.swap is None)
                 matched = req.cache_handle.matched_len
                 self.stats.prefix_lookups += 1
             # the layout decision sees the RAW match (what aliasing could
@@ -763,7 +1114,11 @@ class ContinuousBatchingEngine:
             # that resolves a partial-only match to the contiguous layout
             # reuses nothing and must neither count as a hit nor feed a
             # cold full-prefill wall time into the "reuse" samples
-            layout, lbucket = self._select_layout(matched)
+            if req.swap is not None:
+                # swapped K/V only scatters back into a block table
+                layout, lbucket = "paged", None
+            else:
+                layout, lbucket = self._select_layout(matched)
             use_matched = (matched if layout == "paged"
                            else self.block_size * len(req.cache_handle.nodes)
                            if req.cache_handle is not None else 0)
@@ -781,9 +1136,19 @@ class ContinuousBatchingEngine:
             if layout == "paged":
                 # placement only — the prompt's compute runs as chunks
                 # interleaved with decode steps (:meth:`_run_prefill_chunks`)
-                self._place_paged(i, req,
-                                  use_matched if variant == "reuse" else 0,
-                                  rbucket, variant, occ)
+                try:
+                    self._place_paged(i, req,
+                                      use_matched if variant == "reuse" else 0,
+                                      rbucket, variant, occ)
+                except _PagePressure:
+                    # the full escalation ladder (free list -> tree
+                    # eviction -> preemption) ran dry: roll the admission
+                    # back and STOP admitting this step.  Progress is
+                    # still guaranteed — resident slots keep decoding,
+                    # retiring slots free pages, and the pool floor
+                    # (nb_max + 2) means a lone request always fits.
+                    self._unadmit(i, req)
+                    return
                 continue
             # -- contiguous: atomic admission (the monolithic baseline) --
             jits_before = self._prefill_jit_cache_size()
@@ -820,6 +1185,24 @@ class ContinuousBatchingEngine:
             self._cache_extend(req, k_all, v_all, base, slot)
             self._retire_if_done(i)
 
+    def _unadmit(self, i: int, req: Request) -> None:
+        """Undo a half-done admission whose placement rolled back: free
+        the slot, unpin the prefix handle, requeue the request at the
+        queue HEAD (its first-admission queue-wait/TTFT accounting is
+        already recorded and is not repeated)."""
+        slot = self.slots[i]
+        slot.req = None
+        slot.prefilling = False
+        slot.admit_bucket = None
+        slot.reuse_bucket = None
+        slot.chunk_bucket = None
+        if req.cache_handle is not None:
+            self.prefix_cache.release(req.cache_handle)
+            req.cache_handle = None
+        req.status = "queued"
+        self.queue.insert(0, req)
+        self._masks_dirty = True
+
     def _select_layout(self, matched: int) -> Tuple[str, Optional[Tuple]]:
         """Resolve this admission's KV layout (and its VPE bucket)."""
         if self.kv_layout != "auto":
@@ -835,14 +1218,20 @@ class ContinuousBatchingEngine:
         generated token (TTFT) and reset the per-step attribution."""
         slot = self.slots[i]
         req = slot.req
-        req.ttft_s = time.perf_counter() - req.submit_t
-        self.stats.ttft_s.append(req.ttft_s)
+        if not req.ttft_recorded:
+            # once per request: a preempted-and-resumed request's first
+            # token already shipped in its first residency
+            req.ttft_s = time.perf_counter() - req.submit_t
+            self.stats.ttft_s.append(req.ttft_s)
+            req.ttft_recorded = True
+        # cache coverage BEFORE this emission: prompt + prior output
+        eff_len = len(req.prompt) + len(req.out)
         req.out.append(first)
         self.stats.tokens_out += 1
         self.stats.prefill_tokens += 1
         slot.prefilling = False
         slot.tok = first
-        slot.pos = len(req.prompt)
+        slot.pos = eff_len
         slot.steps_resident = 0
         slot.clean_step_shares = []
         self._masks_dirty = True     # live/tok/eos device arrays stale
@@ -853,6 +1242,8 @@ class ContinuousBatchingEngine:
         if self.prefill_chunk == "auto" and self.vpe is not None:
             bucket = prefill_chunk_bucket(S, occ, self.num_slots,
                                           levels=self.occupancy_levels)
+            if self.slo_weight > 0:
+                bucket = bucket + self._slo_bucket()
             name = self.vpe.controller.select("prefill_chunk", bucket)
             return (0 if name == "whole" else int(name)), bucket, name
         if self.prefill_chunk in (0, "whole", "auto"):
@@ -870,38 +1261,61 @@ class ContinuousBatchingEngine:
         feeds it through :func:`~repro.models.transformer.
         prefill_chunk_paged` between decode steps.  The timed span
         (``kv_place_s``) is the placement cost the paged layout exists
-        to keep flat."""
+        to keep flat.
+
+        Placement is ALL-OR-NOTHING: every reference taken (aliased
+        prefix pages, the COW clone, suffix allocations) is tracked, and
+        if the allocation escalation runs dry mid-placement every one of
+        them is returned before :class:`_PagePressure` propagates to
+        :meth:`_admit` — a failed placement leaks zero pages and leaves
+        the pool audit-clean (:meth:`check_kv`)."""
         slot = self.slots[i]
-        prompt = np.asarray(req.prompt, np.int32)
+        prompt = req.effective_prompt()
         S = len(prompt)
         handle = req.cache_handle
         self._release_slot_pages(i)
         jits_before = self._prefill_jit_cache_size()
         t0 = time.perf_counter()
-        if reuse_matched:
-            P = handle.matched_len
-            alias = list(handle.block_ids)        # full blocks: zero-copy
-            for pid in alias:
-                self.pages.ref(pid)
-            cow = None
-            if handle.partial_len:
-                # the first chunk's write lands mid-block in the partially
-                # matched page — clone it so the cached original (and
-                # anyone else aliasing it) cannot see this slot's writes
-                cow = self._alloc_page()
-                self.page_pool = self._copy_page(
-                    self.page_pool, jnp.int32(handle.partial_block_id),
-                    jnp.int32(cow))
-                self.stats.cow_copies += 1
-            suffix_ids, _starts = self._suffix_page_ids(P, S, cow)
-            pages = alias + suffix_ids
+        rank = PRIORITY_RANK[req.priority]
+        aliased: List[int] = []       # tree refs taken (rollback: unref)
+        acquired: List[int] = []      # fresh allocations (rollback: unref)
+        try:
+            if reuse_matched:
+                P = handle.matched_len
+                for pid in handle.block_ids:      # full blocks: zero-copy
+                    self.pages.ref(pid)
+                    aliased.append(pid)
+                cow = None
+                if handle.partial_len:
+                    # the first chunk's write lands mid-block in the
+                    # partially matched page — clone it so the cached
+                    # original (and anyone else aliasing it) cannot see
+                    # this slot's writes
+                    cow = self._alloc_page(exclude=i, rank=rank)
+                    acquired.append(cow)
+                    self.page_pool = self._copy_page(
+                        self.page_pool, jnp.int32(handle.partial_block_id),
+                        jnp.int32(cow))
+                    self.stats.cow_copies += 1
+                suffix_ids, _starts = self._suffix_page_ids(
+                    P, S, cow, exclude=i, rank=rank, acquired=acquired)
+                pages = aliased + suffix_ids
+            else:
+                P = 0
+                pages, _starts = self._suffix_page_ids(
+                    0, S, None, exclude=i, rank=rank, acquired=acquired)
+        except _PagePressure:
+            for pid in aliased + acquired:
+                self.pages.unref(pid)
+            self.stats.placement_rollbacks += 1
+            raise
+        if P:
             self.stats.prefix_tokens_saved += P
-        else:
-            P = 0
-            pages, _starts = self._suffix_page_ids(0, S, None)
         # device row now (length stays 0 until the prefill completes —
         # the slot is excluded from decode via the live mask meanwhile)
         self._page_row(i, pages, 0)
+        if req.swap is not None:
+            P = self._swap_in_slot(i)
         jax.block_until_ready(self.cache)
         jax.block_until_ready(self.page_pool)     # the COW copy, if any
         dt = time.perf_counter() - t0
@@ -915,6 +1329,7 @@ class ContinuousBatchingEngine:
         slot.reuse_bucket = rbucket
         slot.reuse_variant = variant
         slot.chunk_walls = []
+        slot.chunk_costs = []
         slot.chunk, slot.chunk_bucket, slot.chunk_variant = \
             self._select_chunk(S, occ)
 
@@ -958,7 +1373,7 @@ class ContinuousBatchingEngine:
         its pages.  The final chunk yields the first generated token."""
         slot = self.slots[i]
         req = slot.req
-        prompt = np.asarray(req.prompt, np.int32)
+        prompt = req.effective_prompt()
         S = len(prompt)
         base = slot.fill_pos
         clen = (S - base) if not slot.chunk else min(slot.chunk, S - base)
@@ -977,6 +1392,10 @@ class ContinuousBatchingEngine:
         jax.block_until_ready((self.page_pool, logits))
         dt = time.perf_counter() - t0
         slot.chunk_walls.append(dt)
+        # the scheduler objective's second term: charge the chunk for the
+        # class-weighted queue wait it imposed while it ran
+        slot.chunk_costs.append(
+            dt * (1.0 + self.slo_weight * self._queue_pressure()))
         if self._prefill_jit_cache_size() != jits_before:
             slot.tainted = True
         self.stats.prefill_s += dt
@@ -994,7 +1413,8 @@ class ContinuousBatchingEngine:
         the prefix tree zero-copy."""
         slot = self.slots[i]
         req = slot.req
-        S = len(req.prompt)
+        # resumed residencies prefilled prompt + prior output
+        S = len(req.prompt) + len(req.out)
         first = int(np.asarray(jnp.argmax(logits[0])))
         self.cache = self._set_len(self.cache, jnp.int32(i), jnp.int32(S))
         slot.admit_wall = slot.place_wall + sum(slot.chunk_walls)
@@ -1007,10 +1427,14 @@ class ContinuousBatchingEngine:
                                               slot.reuse_variant)
             if slot.chunk_bucket is not None:
                 # the chunk-size decision only moves the chunk compute,
-                # not the (size-independent) placement — feed exactly that
+                # not the (size-independent) placement — feed exactly
+                # that, SLO-charged: with slo_weight > 0 each chunk's
+                # wall is scaled by the queue pressure it ran under, so
+                # the controller prefers small chunks when urgent work
+                # waits (identical to raw walls at slo_weight == 0)
                 self.vpe.profiler.record("prefill_chunk", slot.chunk_variant,
                                          slot.chunk_bucket,
-                                         sum(slot.chunk_walls))
+                                         sum(slot.chunk_costs))
                 self.vpe.controller.on_sample("prefill_chunk",
                                               slot.chunk_bucket,
                                               slot.chunk_variant)
@@ -1029,7 +1453,8 @@ class ContinuousBatchingEngine:
         if self.pages is not None:
             fns += [self._gather_pages, self._write_pages, self._copy_page,
                     self._admit_paged, self._set_bt, self._set_bt_many,
-                    self._set_len, self._prefill_chunk]
+                    self._set_len, self._prefill_chunk,
+                    self._swap_gather, self._swap_scatter]
         if self.prefix_cache is not None:
             fns += [self._insert_at, self._prefill_suffix]
             if self.pages is None:
@@ -1123,13 +1548,20 @@ class ContinuousBatchingEngine:
                                        jnp.int32(i), jnp.int32(true_len))
         self.slots[i].pages = list(pages)
 
-    def _suffix_page_ids(self, base: int, S: int, cow_page: Optional[int]
+    def _suffix_page_ids(self, base: int, S: int, cow_page: Optional[int],
+                         *, exclude: Optional[int] = None,
+                         rank: Optional[int] = None,
+                         acquired: Optional[List[int]] = None
                          ) -> Tuple[List[int], List[int]]:
         """Allocate pages covering prompt positions ``[base, S)``.
 
         Returns (write_ids, write_starts) for :func:`kvcache.write_pages`
         — ``cow_page`` (the copy-on-write clone of a partially matched
         block) is the first write target when ``base`` is mid-block.
+        ``exclude``/``rank`` thread through to :meth:`_alloc_page`'s
+        preemption escalation; every page allocated HERE is appended to
+        ``acquired`` as it is taken, so a mid-run :class:`_PagePressure`
+        leaves the caller an exact rollback list.
         """
         bs = self.block_size
         ids, starts = [], []
@@ -1138,7 +1570,9 @@ class ContinuousBatchingEngine:
             if cow_page is not None and b == base // bs and base % bs:
                 pid = cow_page
             else:
-                pid = self._alloc_page()
+                pid = self._alloc_page(exclude=exclude, rank=rank)
+                if acquired is not None:
+                    acquired.append(pid)
             ids.append(pid)
             starts.append(b * bs)
             b += 1
@@ -1230,6 +1664,7 @@ class ContinuousBatchingEngine:
         hit_eos = req.eos_id is not None and req.out and req.out[-1] == req.eos_id
         if len(req.out) >= req.max_new_tokens or hit_eos:
             req.done = True
+            req.status = "done"
             req.done_step = self.stats.decode_steps
             req.done_t = time.perf_counter()
             if slot.layout == "paged":
@@ -1282,7 +1717,16 @@ class ContinuousBatchingEngine:
         ``[pos, pos + min(span, remaining))`` because mid-horizon there
         is no host to allocate a page.  (The tail page is guaranteed
         private by admission-time copy-on-write, so decode appends never
-        need a COW check.)"""
+        need a COW check.)
+
+        Under page pressure the allocation escalates (eviction, then
+        preemption of equal-or-lower-priority prefills and strictly
+        lower-priority decoders); if even that runs dry the growing slot
+        preempts ITSELF — its request resumes exactly later via
+        :meth:`Request.effective_prompt` — rather than crashing the
+        step.  A victim preempted mid-loop may be a slot that grew
+        earlier in the same loop, so only splices whose slot still owns
+        the page are installed."""
         splices: List[Tuple[int, int, int]] = []
         for i, slot in enumerate(self.slots):
             if slot.free or slot.prefilling or slot.layout != "paged":
@@ -1291,10 +1735,22 @@ class ContinuousBatchingEngine:
                                else min(span, remaining[i]))
             last_col = (upto - 1) // self.block_size
             assert last_col < self.nb_max, (last_col, self.nb_max)
-            for col in range(len(slot.pages), last_col + 1):
-                pid = self._alloc_page()
-                slot.pages.append(pid)
-                splices.append((i, col, pid))
+            rank = PRIORITY_RANK[slot.req.priority]
+            try:
+                for col in range(len(slot.pages), last_col + 1):
+                    pid = self._alloc_page(exclude=i, rank=rank,
+                                           decode_growth=True)
+                    slot.pages.append(pid)
+                    splices.append((i, col, pid))
+            except _PagePressure:
+                # nothing left to take anywhere: the grower yields its
+                # own residency (pages already appended this loop are
+                # released with the rest of the slot's pages)
+                self._preempt_slot(i)
+        splices = [(i, col, pid) for (i, col, pid) in splices
+                   if self.slots[i].req is not None
+                   and col < len(self.slots[i].pages)
+                   and self.slots[i].pages[col] == pid]
         if not splices:
             return
         if len(splices) == 1:
@@ -1404,6 +1860,11 @@ class ContinuousBatchingEngine:
         bucket = decode_horizon_bucket(len(self.queue), n_active,
                                        self.num_slots,
                                        levels=self.occupancy_levels)
+        if self.slo_weight > 0:
+            # SLO-aware mode: the horizon decision additionally depends
+            # on WHO is waiting (an interactive waiter makes long fused
+            # calls expensive under the two-term objective)
+            bucket = bucket + self._slo_bucket()
         if self.vpe is None:
             return 1, None, None
         name = self.vpe.controller.select("decode_horizon", bucket)
@@ -1466,6 +1927,15 @@ class ContinuousBatchingEngine:
         bt_jits = self._bt_jit_cache_size()
         if self.pages is not None:
             self._grow_block_tables(span=H, remaining=remaining)
+            # growth may have preempted decoding slots (including a
+            # grower preempting itself): prune them from this call and
+            # refresh the masks the preemption dirtied
+            remaining = {i: r for i, r in remaining.items()
+                         if self.slots[i].req is not None
+                         and not self.slots[i].prefilling}
+            if not remaining:
+                return
+            self._refresh_device_masks()
         n_active = len(remaining)
         bucket = occupancy_bucket(n_active, self.num_slots,
                                   levels=self.occupancy_levels)
@@ -1539,10 +2009,14 @@ class ContinuousBatchingEngine:
             # per-TOKEN wall of the FULL span (reservation + call +
             # fence + replay — the overhead a horizon amortizes), with
             # compile-tainted calls dropped; frozen steps emit nothing,
-            # so over-long horizons pay for themselves here
+            # so over-long horizons pay for themselves here.  The SLO
+            # charge factor makes the same wall cost MORE when queued
+            # (especially interactive) requests waited it out — the
+            # two-term objective's second term.
+            charge = 1.0 + self.slo_weight * self._queue_pressure()
             self.vpe.profiler.record("decode_horizon", hname, hbucket,
                                      (time.perf_counter() - t_h)
-                                     / valid_total)
+                                     / valid_total * charge)
             self.vpe.controller.on_sample("decode_horizon", hbucket, hname)
 
     def step(self) -> bool:
@@ -1604,6 +2078,10 @@ class ContinuousBatchingEngine:
         bt_jits = self._bt_jit_cache_size()
         if self.pages is not None:
             self._grow_block_tables()
+            n_active = self.num_decoding
+            if n_active == 0:
+                return True     # growth preempted every decoder
+            self._refresh_device_masks()
         bucket = occupancy_bucket(n_active, self.num_slots,
                                   levels=self.occupancy_levels)
         fn = self._decode_fn(bucket)
@@ -1660,9 +2138,13 @@ class ContinuousBatchingEngine:
         if self.vpe is not None and hbucket is not None and not step_tainted:
             # the horizon axis optimizes the per-TOKEN wall of the FULL
             # step span (host bookkeeping + device call + replay): one
-            # step at occupancy n_active emitted n_active tokens
+            # step at occupancy n_active emitted n_active tokens.  Same
+            # SLO charge factor as the fused path so the two variants
+            # compete under the same objective.
+            charge = 1.0 + self.slo_weight * self._queue_pressure()
             self.vpe.profiler.record("decode_horizon", hname, hbucket,
-                                     (time.perf_counter() - t_h) / n_active)
+                                     (time.perf_counter() - t_h) / n_active
+                                     * charge)
             self.vpe.controller.on_sample("decode_horizon", hbucket, hname)
         return True
 

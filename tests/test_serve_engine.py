@@ -152,12 +152,57 @@ class TestSlotRecycling:
         with pytest.raises(ValueError):
             ContinuousBatchingEngine(cfg, params=None, slots=2)
 
-    def test_oversized_request_rejected(self, setup):
+    def test_oversized_request_fails_terminally(self, setup):
+        """An unfulfillable submission must not throw (one bad request
+        in a stream would crash the serve loop) — it completes
+        immediately as a failed request with a per-request error."""
         cfg, params = setup
         eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=32)
-        with pytest.raises(ValueError):
-            eng.submit(Request(rid=0, prompt=np.zeros(30, np.int32),
-                               max_new_tokens=8))
+        req = Request(rid=0, prompt=np.zeros(30, np.int32), max_new_tokens=8)
+        eng.submit(req)
+        assert req.done and req.status == "failed"
+        assert "max_len" in req.error
+        assert req.out == []
+        assert eng.queue == [] and eng.stats.rejected == 1
+        assert eng.completed == [req]        # run() returns it with the rest
+
+    def test_empty_prompt_fails_terminally(self, setup):
+        cfg, params = setup
+        eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=32)
+        req = Request(rid=0, prompt=np.asarray([], np.int32),
+                      max_new_tokens=4)
+        eng.submit(req)
+        assert req.done and req.status == "failed"
+        assert "empty" in req.error
+        assert eng.queue == [] and eng.stats.rejected == 1
+
+    def test_unknown_priority_fails_terminally(self, setup):
+        cfg, params = setup
+        eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=32)
+        req = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                      max_new_tokens=2, priority="turbo")
+        eng.submit(req)
+        assert req.done and req.status == "failed"
+        assert "priority" in req.error
+
+    def test_failed_requests_interleave_with_good_ones(self, setup):
+        """A bad submission mid-stream must not disturb its neighbours'
+        outputs — the engine serves around it."""
+        cfg, params = setup
+        rng = np.random.default_rng(11)
+        good = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+                for _ in range(2)]
+        want = [single_request_greedy(cfg, params, p, 4, max_len=48)
+                for p in good]
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=48)
+        eng.submit(Request(rid=0, prompt=good[0], max_new_tokens=4))
+        eng.submit(Request(rid=1, prompt=np.zeros(60, np.int32),
+                           max_new_tokens=8))          # oversized
+        eng.submit(Request(rid=2, prompt=good[1], max_new_tokens=4))
+        done = {r.rid: r for r in eng.run()}
+        assert len(done) == 3
+        assert done[1].status == "failed"
+        assert done[0].out == want[0] and done[2].out == want[1]
 
 
 class TestVPETunedDecode:
@@ -262,6 +307,92 @@ class TestPrefixAwareScheduling:
             [template, np.array([i], np.int32)]), max_new_tokens=1)
             for i in range(4)]
         assert [eng._pop_next().rid for _ in range(4)] == [0, 1, 2, 3]
+
+
+class TestPriorityScheduling:
+    """Priority classes in the admission order: interactive outranks
+    batch BEFORE the prefix-affinity window applies, ties keep FIFO,
+    and the per-class skip budget still forces starving requests in.
+    Pure host-side — drives ``_pop_next`` directly."""
+
+    def _engine(self, setup, **kw):
+        cfg, params = setup
+        kw.setdefault("slots", 1)
+        kw.setdefault("max_len", 64)
+        return ContinuousBatchingEngine(cfg, params, **kw)
+
+    def test_interactive_jumps_batch(self, setup):
+        eng = self._engine(setup)
+        b = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=1)                   # priority="batch"
+        i1 = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                     max_new_tokens=1, priority="interactive")
+        eng.queue = [b, i1]
+        assert eng._pop_next().rid == 1
+        assert b.skips == 1 and eng.stats.sched_skips == 1
+        assert eng._pop_next().rid == 0
+
+    def test_priority_outranks_prefix_affinity(self, setup):
+        """A warm batch sharer does NOT jump a cold interactive request:
+        the class decides first, affinity only breaks ties within it."""
+        eng = self._engine(setup, prefix_blocks=16)
+        rng = np.random.default_rng(3)
+        template = rng.integers(0, eng.cfg.vocab_size, 32).astype(np.int32)
+        h = eng.prefix_cache.acquire(template)
+        eng.prefix_cache.extend(h, template)
+        eng.prefix_cache.release(h)
+        cold_int = Request(rid=0, prompt=rng.integers(
+            0, eng.cfg.vocab_size, 20).astype(np.int32), max_new_tokens=1,
+            priority="interactive")
+        warm_batch = Request(rid=1, prompt=np.concatenate(
+            [template, np.array([7], np.int32)]), max_new_tokens=1)
+        eng.queue = [warm_batch, cold_int]
+        assert eng._pop_next().rid == 0      # class beats affinity
+        assert eng._pop_next().rid == 1
+
+    def test_affinity_breaks_ties_within_class(self, setup):
+        eng = self._engine(setup, prefix_blocks=16)
+        rng = np.random.default_rng(4)
+        template = rng.integers(0, eng.cfg.vocab_size, 32).astype(np.int32)
+        h = eng.prefix_cache.acquire(template)
+        eng.prefix_cache.extend(h, template)
+        eng.prefix_cache.release(h)
+        cold = Request(rid=0, prompt=rng.integers(
+            0, eng.cfg.vocab_size, 20).astype(np.int32), max_new_tokens=1,
+            priority="interactive")
+        warm = Request(rid=1, prompt=np.concatenate(
+            [template, np.array([7], np.int32)]), max_new_tokens=1,
+            priority="interactive")
+        eng.queue = [cold, warm]
+        assert eng._pop_next().rid == 1      # same class: warm first
+        assert eng._pop_next().rid == 0
+
+    def test_fifo_within_class(self, setup):
+        eng = self._engine(setup)
+        eng.queue = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                             max_new_tokens=1, priority="interactive")
+                     for i in range(3)]
+        assert [eng._pop_next().rid for _ in range(3)] == [0, 1, 2]
+
+    def test_per_class_skip_budget_forces_admission(self, setup):
+        """A batch request's own (smaller) budget bounds how long a
+        stream of interactive arrivals can keep jumping it."""
+        eng = self._engine(setup,
+                           max_skip_by_class={"batch": 2, "interactive": 6})
+        b = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=1)
+        eng.queue = [b]
+        admitted = []
+        for i in range(1, 10):
+            eng.queue.append(Request(rid=i,
+                                     prompt=np.arange(4, dtype=np.int32),
+                                     max_new_tokens=1,
+                                     priority="interactive"))
+            admitted.append(eng._pop_next().rid)
+            if 0 in admitted:
+                break
+        assert admitted.index(0) == 2        # forced after budget skips
+        assert b.skips == 2
 
 
 class TestBuckets:
