@@ -89,6 +89,7 @@ from __future__ import annotations
 import copy
 import json
 import os
+import subprocess
 import sys
 import time
 from typing import List
@@ -100,13 +101,33 @@ from repro.configs import get_config
 from repro.core import VPE
 from repro.models import model
 from repro.runtime.serve_loop import (
-    SERVE_AXES, ContinuousBatchingEngine, Request, ServeLoop, WaveScheduler)
+    SERVE_AXES, ContinuousBatchingEngine, Request, ServeLoop, WaveScheduler,
+    make_serve_engine)
 
 SLOTS = 4
 MAX_LEN = 96
 PREFIX_MAX_LEN = 512
 PREFIX_LEN = 384         # shared system prompt (24 KV blocks of 16)
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+# record envelope (schema v1): every line in BENCH_serve.json is
+# {"bench": <part name>, "schema": 1, "pr": <PR that produced it>,
+#  "metrics": {...}} — one shape for every part, so external trajectory
+# tooling can read the whole file without per-part key knowledge.  Bump
+# SCHEMA on envelope changes, PR per growth session.
+SCHEMA = 1
+PR = 7
+
+
+def append_record(bench: str, metrics: dict, *, pr: int = PR) -> None:
+    """THE writer: every part appends through here, so records cannot
+    drift back to ad-hoc top-level keys.  Prints the line and appends it
+    to BENCH_JSON (the trajectory accumulates across PRs)."""
+    record = {"bench": bench, "schema": SCHEMA, "pr": pr, "metrics": metrics}
+    line = json.dumps(record, sort_keys=True)
+    print(line)
+    with open(BENCH_JSON, "a") as f:
+        f.write(line + "\n")
 
 
 def make_workload(rng, n: int, vocab: int) -> List[Request]:
@@ -203,19 +224,14 @@ def bench_prefix_cache(cfg, params, n_requests: int) -> bool:
     parity = r_off.pop("outs") == r_on.pop("outs")
     speedup = (r_off["ttft_p50_ms"] / r_on["ttft_p50_ms"]
                if r_on["ttft_p50_ms"] else 0.0)
-    record = {
-        "bench": "serve_prefix_cache",
+    append_record("serve_prefix_cache", {
         "n_requests": n_requests,
         "prefix_len": PREFIX_LEN,
         "cache_off": r_off,
         "cache_on": r_on,
         "ttft_p50_speedup": round(speedup, 2),
         "greedy_parity": parity,
-    }
-    line = json.dumps(record, sort_keys=True)
-    print(line)
-    with open(BENCH_JSON, "a") as f:  # append: the trajectory accumulates
-        f.write(line + "\n")
+    })
     ok = parity and speedup >= 2.0
     print(f"# prefix-cache ttft p50 speedup: {speedup:.2f}x, "
           f"hit rate {r_on['hit_rate']:.2f}, parity "
@@ -305,8 +321,7 @@ def bench_paged_admission(cfg, params) -> bool:
     # the contiguous marginal cost is at least 5x steeper; thresholds are
     # deliberately loose so scheduler noise can't flip the verdict
     ok = paged_growth < 2.0 and slope_ratio > 5.0 and speedup_8k > 2.0
-    record = {
-        "bench": "serve_paged_admission",
+    append_record("serve_paged_admission", {
         "block_size": ADMIT_BLOCK,
         "tail_len": ADMIT_TAIL,
         "matched": results,
@@ -316,11 +331,7 @@ def bench_paged_admission(cfg, params) -> bool:
         "marginal_cost_ratio": round(slope_ratio, 1),
         "kv_place_speedup_at_8k": round(speedup_8k, 2),
         "pass": ok,
-    }
-    line = json.dumps(record, sort_keys=True)
-    print(line)
-    with open(BENCH_JSON, "a") as f:  # append: the trajectory accumulates
-        f.write(line + "\n")
+    })
     print(f"# paged admission: paged growth {paged_growth:.2f}x (flat), "
           f"marginal cost {slope['contiguous']:.3f} vs "
           f"{slope['paged']:.3f} us/tok ({slope_ratio:.0f}x steeper), "
@@ -406,8 +417,7 @@ def bench_chunked_prefill(cfg, params) -> bool:
     ttft_improved = (results["chunked"]["ttft_short_p95_ms"]
                      < results["monolithic"]["ttft_short_p95_ms"])
     ok = parity and stall_ratio >= 3.0 and ttft_improved
-    record = {
-        "bench": "serve_chunked_prefill",
+    append_record("serve_chunked_prefill", {
         "long_prompt": MIX_LONG,
         "chunk": MIX_CHUNK,
         "n_short": MIX_SHORTS,
@@ -417,11 +427,7 @@ def bench_chunked_prefill(cfg, params) -> bool:
         "short_ttft_p95_improved": ttft_improved,
         "greedy_parity": parity,
         "pass": ok,
-    }
-    line = json.dumps(record, sort_keys=True)
-    print(line)
-    with open(BENCH_JSON, "a") as f:  # append: the trajectory accumulates
-        f.write(line + "\n")
+    })
     print(f"# chunked prefill: decode-stall p95 {stall_ratio:.1f}x lower, "
           f"short ttft p95 {'improved' if ttft_improved else 'WORSE'}, "
           f"parity {'exact' if parity else 'BROKEN'} "
@@ -523,8 +529,7 @@ def _bench_horizon_workload(cfg, params, make_reqs, warm_passes: int) -> dict:
 def bench_decode_horizon(cfg, params) -> bool:
     """Horizon sweep: decode-bound speedup + auto tracking the best
     fixed choice on both a decode-bound and a pressured workload."""
-    record = {"bench": "serve_decode_horizon", "slots": SLOTS,
-              "choices": list(HZN_CHOICES)}
+    record = {"slots": SLOTS, "choices": list(HZN_CHOICES)}
     ok = True
     for wname, make_reqs, warm in (
             ("decode_bound",
@@ -563,10 +568,7 @@ def bench_decode_horizon(cfg, params) -> bool:
             print(f"# horizon {wname} auto decisions: "
                   f"{res['auto']['selected']}")
     record["pass"] = ok
-    line = json.dumps(record, sort_keys=True)
-    print(line)
-    with open(BENCH_JSON, "a") as f:  # append: the trajectory accumulates
-        f.write(line + "\n")
+    append_record("serve_decode_horizon", record)
     print(f"# decode horizon: {'PASS' if ok else 'FAIL'} "
           f"(need >=1.5x decode-bound at the best fixed horizon and "
           f"auto within 10% of best on both workloads, exact parity)")
@@ -681,7 +683,7 @@ def bench_priority_mix(cfg, params) -> bool:
           and p["slo_attainment"] > f["slo_attainment"]
           and p["tok_per_s"] >= 0.85 * f["tok_per_s"])
     record = {
-        "bench": "serve_priority_mix", "slots": SLOTS,
+        "slots": SLOTS,
         "page_budget": PRIO_BUDGET, "n_requests": PRIO_REQS,
         "n_interactive": len(inter), "swap": True,
         "slo_ms": round(slo_s * 1e3, 2),
@@ -697,13 +699,94 @@ def bench_priority_mix(cfg, params) -> bool:
               f"attainment {r['slo_attainment']:.2f}, "
               f"preempt {r['preemptions']}, swap {r['swap_outs']}/"
               f"{r['swap_ins']}, rollbacks {r['placement_rollbacks']}")
-    line = json.dumps(record, sort_keys=True)
-    print(line)
-    with open(BENCH_JSON, "a") as fh:  # append: the trajectory accumulates
-        fh.write(line + "\n")
+    append_record("serve_priority_mix", record)
     print(f"# priority mix: {'PASS' if ok else 'FAIL'} "
           f"(need interactive ttft p95 and SLO attainment strictly "
           f"better than FIFO at >=0.85x its tok/s, exact parity)")
+    return ok
+
+
+# shard sweep: same decode workload served at mp in {1, 2, 4} on forced
+# host devices.  XLA_FLAGS must be set before jax initializes, and this
+# module imports jax at the top — so each mesh width runs in a child
+# process and the parent only aggregates.  Forced host "devices" share
+# one CPU, so mp>1 cannot be faster here; the sweep pins token-exact
+# parity and leak-free drain per width (the dispatch keys carry the
+# shard bucket, so tok/s per width is still a real measured point).
+SHARD_MPS = (1, 2, 4)
+SHARD_REQS = 12
+SHARD_SENTINEL = "SHARD_RESULT "
+
+
+def _shard_workload(vocab: int) -> List[Request]:
+    """Decode-bound and deterministic: identical across child processes
+    so outputs are comparable token-for-token."""
+    rng = np.random.default_rng(11)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, 16).astype(np.int32),
+                    max_new_tokens=24)
+            for i in range(SHARD_REQS)]
+
+
+def _shard_child(mp: int) -> None:
+    """Runs in a subprocess with forced host devices: serve the fixed
+    workload at mesh (1, mp) and print one sentinel-prefixed JSON line."""
+    cfg = get_config("qwen3-8b").reduced()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    eng = make_serve_engine(cfg, params, mesh_shape=(1, mp), slots=SLOTS,
+                            max_len=MAX_LEN, kv_layout="paged", block_size=16)
+    run_engine(eng, _shard_workload(cfg.vocab_size))   # warm: compiles
+    eng.stats = type(eng.stats)()
+    r = run_engine(eng, _shard_workload(cfg.vocab_size))
+    eng.check_kv()   # raises on any leaked page / dangling reference
+    result = {
+        "mp": mp,
+        "devices": jax.device_count(),
+        "kv_heads_sharded": cfg.num_kv_heads % mp == 0,
+        "tok_per_s": round(r["tok_per_s"], 1),
+        "ttft_p95_ms": round(r["ttft_p95_ms"], 2),
+        "kv_clean_at_drain": True,
+        "outs": {str(k): v for k, v in r["outs"].items()},
+    }
+    print(SHARD_SENTINEL + json.dumps(result, sort_keys=True))
+
+
+def bench_shard_sweep() -> bool:
+    """mp sweep in subprocesses; parity vs mp=1 and leak-free drain."""
+    results = {}
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for mp in SHARD_MPS:
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--shard-child", str(mp)],
+            capture_output=True, text=True, env=env, cwd=repo)
+        lines = [ln for ln in proc.stdout.splitlines()
+                 if ln.startswith(SHARD_SENTINEL)]
+        if proc.returncode != 0 or not lines:
+            print(f"# shard mp={mp} child FAILED:\n{proc.stderr[-2000:]}")
+            return False
+        results[str(mp)] = json.loads(lines[-1][len(SHARD_SENTINEL):])
+    outs = {k: v.pop("outs") for k, v in results.items()}
+    parity = all(o == outs["1"] for o in outs.values())
+    clean = all(v["kv_clean_at_drain"] for v in results.values())
+    ok = parity and clean
+    append_record("serve_shard_sweep", {
+        "slots": SLOTS, "n_requests": SHARD_REQS, "kv_layout": "paged",
+        "mesh": {k: v for k, v in results.items()},
+        "greedy_parity": parity, "kv_clean_at_drain": clean, "pass": ok,
+    })
+    for mp in SHARD_MPS:
+        r = results[str(mp)]
+        print(f"# shard mp={mp}: {r['tok_per_s']:8.1f} tok/s, ttft p95 "
+              f"{r['ttft_p95_ms']:7.2f}ms, kv heads "
+              f"{'sharded' if r['kv_heads_sharded'] else 'replicated'}")
+    print(f"# shard sweep: parity {'exact' if parity else 'BROKEN'}, "
+          f"drain {'clean' if clean else 'LEAKED'} "
+          f"({'PASS' if ok else 'FAIL'}: need token-exact parity and "
+          f"zero leaked pages at every mesh width)")
     return ok
 
 
@@ -741,10 +824,14 @@ def main(n_requests: int = 24) -> None:
     ok_chunked = bench_chunked_prefill(cfg, params)
     ok_horizon = bench_decode_horizon(cfg, params)
     ok_priority = bench_priority_mix(cfg, params)
+    ok_shard = bench_shard_sweep()
     if not (ok and ok_prefix and ok_paged and ok_chunked and ok_horizon
-            and ok_priority):
+            and ok_priority and ok_shard):
         sys.exit(1)
 
 
 if __name__ == "__main__":
+    if "--shard-child" in sys.argv:
+        _shard_child(int(sys.argv[sys.argv.index("--shard-child") + 1]))
+        sys.exit(0)
     main(n_requests=12 if "--fast" in sys.argv else 24)

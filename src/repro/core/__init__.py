@@ -21,7 +21,7 @@ from .registry import GLOBAL, OpEntry, Registry, Variant, reset_global
 from .shape_class import (
     bucket_label, decode_horizon_bucket, kv_layout_bucket, occupancy_bucket,
     pad_to_bucket, prefill_chunk_bucket, prefix_len_bucket,
-    queue_depth_bucket, shape_bucket, slo_pressure_bucket)
+    queue_depth_bucket, shape_bucket, shard_bucket, slo_pressure_bucket)
 
 __all__ = [
     "VPE",
@@ -47,4 +47,5 @@ __all__ = [
     "queue_depth_bucket",
     "decode_horizon_bucket",
     "slo_pressure_bucket",
+    "shard_bucket",
 ]

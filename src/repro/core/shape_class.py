@@ -62,12 +62,25 @@ def _split_slo(bucket: Tuple) -> Tuple[Tuple, Optional[Tuple]]:
     return bucket, None
 
 
+def _split_shard(bucket: Tuple) -> Tuple[Tuple, Optional[Tuple]]:
+    """Split a trailing :func:`shard_bucket` segment off a composite
+    dispatch key.  The serve engine appends it LAST (after any SLO
+    segment) on non-trivial meshes, so it is stripped first here."""
+    if len(bucket) >= 4 and bucket[-3] == "shard":
+        return bucket[:-3], bucket[-3:]
+    return bucket, None
+
+
 def bucket_label(bucket: Tuple) -> str:
+    bucket, shard = _split_shard(bucket)
     bucket, slo = _split_slo(bucket)
     suffix = ""
     if slo is not None:
         _, i, b = slo
         suffix = f"xslo:i{i}b{b}"
+    if shard is not None:
+        _, dp, mp = shard
+        suffix += f"xmesh:dp{dp}mp{mp}"
     if bucket == ("scalar",):
         return "scalar" + suffix
     if bucket and bucket[0] == "occ":
@@ -210,6 +223,25 @@ def slo_pressure_bucket(queued_interactive: int, queued_batch: int) -> Tuple:
     i = min(max(queued_interactive, 0), 2)
     b = 0 if queued_batch <= 0 else (1 if queued_batch <= 4 else 2)
     return ("slo", i, b)
+
+
+def shard_bucket(dp: int, mp: int) -> Tuple:
+    """Dispatch-key extension for mesh-sharded serving.
+
+    The best decode impl / fused horizon / prefill chunk all shift with
+    the mesh shape: an ``mp``-sharded step pays a per-call collective
+    (psum after the down-projections) that a single device does not, so
+    the host-overhead-vs-interference tradeoffs the other axes measure
+    land at different crossover points per shard count.  Rather than
+    model that, the engine appends this segment to the
+    ``serve_decode_impl`` / ``decode_horizon`` / ``prefill_chunk``
+    dispatch keys on non-trivial meshes, so the controller learns each
+    policy *per mesh configuration* — the paper's computation-unit axis
+    made an explicit input to the decision tree.  ``(1, 1)`` meshes
+    append nothing, keeping single-device dispatch keys (and any
+    persisted controller state) byte-identical.
+    """
+    return ("shard", int(dp), int(mp))
 
 
 def pad_to_bucket(n: int, *, minimum: int = 16) -> int:

@@ -73,10 +73,25 @@ def axis_sizes(mesh: Mesh) -> Dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def tp_axis(mesh: Mesh) -> Optional[str]:
+    """Physical mesh axis carrying tensor parallelism.
+
+    The training/dry-run meshes call it ``model``; the serve mesh calls
+    it ``mp`` (redco-style ``('dp', 'mp')``).  First present wins.
+    """
+    for name in ("model", "mp"):
+        if name in mesh.axis_names:
+            return name
+    return None
+
+
 def _axis_map(mesh: Mesh, *, fsdp: bool = True, tp: bool = True) -> Dict[str, Optional[Any]]:
     names = set(mesh.axis_names)
+    # NOTE: the serve mesh's "dp" axis deliberately does NOT map to the
+    # logical fsdp axis — dp replicas each hold a full parameter copy
+    # (they are independent engines, not ZeRO shards).
     return {
-        "tp": "model" if tp and "model" in names else None,
+        "tp": tp_axis(mesh) if tp else None,
         "fsdp": ("data" if fsdp and "data" in names else None),
         None: None,
     }
@@ -131,7 +146,7 @@ def param_shardings(tree: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
 # -- activations / batches ------------------------------------------------------
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tuple(a for a in ("pod", "data", "dp") if a in mesh.axis_names)
 
 
 def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
@@ -185,7 +200,7 @@ def cache_partition_specs(cache_tree: Any, mesh: Mesh, *, kv_mode: str = "headdi
     Recurrent states: batch over dp, heads over model when divisible."""
     dp = dp_axes(mesh)
     sizes = axis_sizes(mesh)
-    tp = "model" if "model" in mesh.axis_names else None
+    tp = tp_axis(mesh)
 
     def one(path, leaf):
         key = jax.tree_util.keystr(path)
@@ -223,6 +238,63 @@ def cache_partition_specs(cache_tree: Any, mesh: Mesh, *, kv_mode: str = "headdi
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
     return jax.tree_util.tree_unflatten(
         treedef, [fit_spec(one(p, l), tuple(l.shape), mesh) for p, l in flat])
+
+
+# -- serve mesh (dp replicas × mp tensor shards) -------------------------------
+
+def serve_mesh(dp: int = 1, mp: int = 1, *, devices: Optional[Sequence] = None) -> Mesh:
+    """Build the redco-style serve mesh ``Mesh(('dp', 'mp'))``.
+
+    ``dp`` rows are independent engine replicas (full param copy each);
+    ``mp`` columns shard tensors within a replica.  Uses the first
+    ``dp * mp`` visible devices; a function, not a module constant, so
+    importing never touches jax device state.
+    """
+    import numpy as np
+
+    if dp < 1 or mp < 1:
+        raise ValueError(f"mesh axes must be >= 1, got dp={dp} mp={mp}")
+    devs = list(jax.devices()) if devices is None else list(devices)
+    need = dp * mp
+    if len(devs) < need:
+        raise ValueError(
+            f"mesh ({dp},{mp}) needs {need} devices, only {len(devs)} visible "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU)")
+    return Mesh(np.array(devs[:need]).reshape(dp, mp), ("dp", "mp"))
+
+
+def serve_kv_spec(shape: Tuple[int, ...], mesh: Mesh, *, head_axis: int = 2) -> P:
+    """Spec for one serve-path KV tensor: shard the ``Hkv`` axis on the
+    tensor axis when it divides, else replicate.
+
+    Every serve KV container keeps heads at a fixed axis — slot caches
+    ``(L, slots, Hkv, T, D)``, page pools ``(L, N+1, Hkv, bs, D)``, and
+    block pools ``(N, L, Hkv, bs, D)`` all have ``head_axis=2`` — and
+    sharding ONLY that axis is what keeps block tables host-side ints:
+    page ids index the unsharded N axis, identical on every shard, so
+    gathers/scatters by page id stay local per shard and no layout
+    (contiguous / paged / auto) needs mesh-aware indexing.
+    """
+    tp = tp_axis(mesh)
+    dims: List[Optional[str]] = [None] * len(shape)
+    if tp is not None and shape[head_axis] % axis_sizes(mesh)[tp] == 0:
+        dims[head_axis] = tp
+    return P(*dims)
+
+
+def serve_cache_specs(cache_tree: Any, mesh: Mesh) -> Any:
+    """Spec pytree for serve KV containers (slot cache / page pool /
+    paged cache).  ``k``/``v`` leaves get :func:`serve_kv_spec`; host-
+    mirrored int leaves (``length``, block tables ``bt``) replicate.
+    """
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if key.endswith("['k']") or key.endswith("['v']"):
+            return serve_kv_spec(tuple(leaf.shape), mesh)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])
 
 
 def sharding_summary(specs: Any) -> str:

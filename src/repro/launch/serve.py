@@ -15,7 +15,7 @@ from repro.configs import get_config
 from repro.core import VPE
 from repro.models import model as model_lib
 from repro.runtime.serve_loop import (
-    ContinuousBatchingEngine, Request, ServeLoop, WaveScheduler)
+    Request, ServeLoop, WaveScheduler, make_serve_engine)
 
 
 def main() -> None:
@@ -80,7 +80,19 @@ def main() -> None:
                          "objective: fused horizons and prefill chunks "
                          "are charged wall x (1 + w x class-weighted "
                          "queued requests); 0 disables")
+    ap.add_argument("--mesh", default="1,1", metavar="DP,MP",
+                    help="serve device mesh 'dp,mp' (continuous only): mp "
+                         "shards params + KV heads within a replica, dp "
+                         "runs independent engine replicas behind one "
+                         "shared admission queue; '1,1' (default) is the "
+                         "bitwise-identical single-device engine.  Multi-"
+                         "device CPU needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
+    try:
+        dp, mp = (int(x) for x in args.mesh.split(","))
+    except ValueError:
+        ap.error(f"--mesh must be 'dp,mp' integers, got {args.mesh!r}")
     chunk = (args.prefill_chunk if args.prefill_chunk in ("whole", "auto")
              else int(args.prefill_chunk))
     horizon = (args.decode_horizon if args.decode_horizon == "auto"
@@ -102,8 +114,9 @@ def main() -> None:
         max_new_tokens=args.new_tokens, priority=_prio(i))
         for i in range(args.requests)]
     if args.continuous:
-        engine = ContinuousBatchingEngine(
-            cfg, params, slots=args.batch, max_len=args.max_len, vpe=VPE(),
+        engine = make_serve_engine(
+            cfg, params, mesh_shape=(dp, mp),
+            slots=args.batch, max_len=args.max_len, vpe=VPE(),
             prefix_blocks=args.prefix_blocks if args.prefix_cache else 0,
             block_size=args.block_size, kv_layout=args.kv_layout,
             prefill_chunk=chunk, chunks_per_step=args.chunks_per_step,
@@ -112,8 +125,12 @@ def main() -> None:
         for r in reqs:
             engine.submit(r)
         done = engine.run()
-        print(f"completed {len(done)} requests; {engine.stats.summary()}")
+        mesh_note = f" [mesh {dp}x{mp}]" if (dp, mp) != (1, 1) else ""
+        print(f"completed {len(done)} requests{mesh_note}; "
+              f"{engine.stats.summary()}")
         return
+    if (dp, mp) != (1, 1):
+        ap.error("--mesh requires --continuous")
     serve = ServeLoop(cfg, params, max_len=args.max_len, batch=args.batch)
     sched = WaveScheduler(serve)
     for r in reqs:

@@ -83,17 +83,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.core import (VPE, decode_horizon_bucket, kv_layout_bucket,
                         occupancy_bucket, pad_to_bucket,
                         prefill_chunk_bucket, prefix_len_bucket,
-                        slo_pressure_bucket)
+                        shard_bucket, slo_pressure_bucket)
+from repro.distributed import sharding as sharding_lib
 from repro.models import kvcache
 from repro.models import model as model_lib
 from repro.runtime.page_pool import PagePool
@@ -133,6 +135,25 @@ KV_LAYOUTS = ("contiguous", "paged", "auto")
 PRIORITY_CLASSES = ("interactive", "batch")
 PRIORITY_RANK: Dict[str, int] = {c: i for i, c in enumerate(PRIORITY_CLASSES)}
 SLO_CLASS_WEIGHT: Dict[str, float] = {"interactive": 1.0, "batch": 0.1}
+
+
+def _intake_error(req: "Request", max_len: int) -> Optional[str]:
+    """Why a submission can never be served, or None if it can.
+
+    Shared by :meth:`ContinuousBatchingEngine.submit` and
+    :meth:`EngineReplicaGroup.submit` so single-engine and dp-replica
+    intake reject the exact same population with the exact same
+    messages."""
+    need = len(req.prompt) + req.max_new_tokens
+    if need > max_len:
+        return (f"prompt+max_new_tokens={need} exceeds slot "
+                f"capacity max_len={max_len}")
+    if len(np.asarray(req.prompt)) == 0:
+        return "empty prompt"
+    if req.priority not in PRIORITY_RANK:
+        return (f"unknown priority class {req.priority!r} "
+                f"(choose from {PRIORITY_CLASSES})")
+    return None
 
 
 class _PagePressure(Exception):
@@ -219,8 +240,22 @@ class ServeStats:
 
     @property
     def mean_queue_wait_s(self) -> float:
+        """Mean queue wait over ADMITTED requests only — intake-rejected
+        submissions never waited on scheduling, so they carry their
+        (terminal) wait on the request record instead of skewing this
+        series.  The population accounting closes through
+        :attr:`failed_requests`."""
         return (sum(self.queue_wait_s) / len(self.queue_wait_s)
                 if self.queue_wait_s else 0.0)
+
+    @property
+    def failed_requests(self) -> int:
+        """Terminally-failed submissions (``status="failed"``).  With
+        the engine drained, ``submitted == len(queue_wait_s) +
+        failed_requests`` — the invariant that keeps bench request
+        counts and the queue-wait series talking about the same
+        population."""
+        return self.rejected
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -514,7 +549,10 @@ class ContinuousBatchingEngine:
                  page_budget: Optional[int] = None,
                  swap: bool = False,
                  slo_weight: float = 0.0,
-                 max_skip_by_class: Optional[Dict[str, int]] = None) -> None:
+                 max_skip_by_class: Optional[Dict[str, int]] = None,
+                 mesh_shape: Tuple[int, int] = (1, 1),
+                 mesh_devices: Optional[Sequence] = None,
+                 shard_dims: Optional[Tuple[int, int]] = None) -> None:
         if not model_lib.supports_slot_serving(cfg):
             raise ValueError(f"family {cfg.family!r} has no slot-serving path")
         if kv_layout not in KV_LAYOUTS:
@@ -558,6 +596,30 @@ class ContinuousBatchingEngine:
         if slo_weight < 0.0:
             raise ValueError("slo_weight must be >= 0")
         self.slo_weight = slo_weight
+        # -- device mesh (mp tensor shards; dp replicas live one level up) --
+        # mesh_shape=(1, 1) with no explicit devices is the bitwise no-op
+        # fallback: no mesh is built, nothing is device_put, dispatch keys
+        # carry no shard segment — the single-device engine byte-for-byte.
+        # A dp > 1 shape is the EngineReplicaGroup's job (independent
+        # engines sharing one admission queue); one engine shards over mp
+        # only.  ``shard_dims`` lets the group hand each replica the FULL
+        # (dp, mp) for dispatch-key bucketing while the replica's own mesh
+        # is its (1, mp) device row.
+        dp, mp = (int(mesh_shape[0]), int(mesh_shape[1]))
+        if dp < 1 or mp < 1:
+            raise ValueError(f"mesh_shape axes must be >= 1, got {mesh_shape}")
+        if dp > 1:
+            raise ValueError(
+                "a single engine replica cannot span dp > 1 — use "
+                "make_serve_engine / EngineReplicaGroup for dp replicas")
+        self.mesh_shape = (dp, mp)
+        self._shard_dims = (tuple(int(d) for d in shard_dims)
+                            if shard_dims is not None else self.mesh_shape)
+        self._shard_tail: Tuple = (shard_bucket(*self._shard_dims)
+                                   if self._shard_dims != (1, 1) else ())
+        self.mesh = None
+        if mp > 1 or mesh_devices is not None:
+            self.mesh = sharding_lib.serve_mesh(dp, mp, devices=mesh_devices)
         self.prefill_chunk = prefill_chunk
         self.chunks_per_step = chunks_per_step
         self.chunk_choices = tuple(int(c) for c in chunk_choices)
@@ -729,6 +791,40 @@ class ContinuousBatchingEngine:
                     vpe.registry.register_variant(
                         "prefix_reuse", name, fn=(lambda name=name: name),
                         default=(i == 0))
+        if self.mesh is not None:
+            self._shard_state()
+
+    # -- mesh sharding -------------------------------------------------------
+    def _shard_state(self) -> None:
+        """Commit params + every KV container onto the engine's mesh.
+
+        Params get the rule-table specs (heads / ffn hidden on the
+        tensor axis); KV containers shard the ``Hkv`` axis only
+        (:func:`~repro.distributed.sharding.serve_kv_spec`) so page ids,
+        block tables and lengths stay host-side replicated ints and
+        every layout's gather/scatter indexing is shard-local.  All
+        later engine jits see committed inputs and GSPMD propagates the
+        shardings through them — no per-call mesh plumbing."""
+        mesh = self.mesh
+
+        def put(tree, specs):
+            return jax.device_put(tree, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda x: isinstance(x, PartitionSpec)))
+
+        self.params = put(self.params,
+                          sharding_lib.param_specs(self.params, mesh))
+        self.cache = put(self.cache,
+                         sharding_lib.serve_cache_specs(self.cache, mesh))
+        if self.page_pool is not None:
+            self.page_pool = put(
+                self.page_pool,
+                sharding_lib.serve_cache_specs(self.page_pool, mesh))
+        block_pool = getattr(self, "block_pool", None)
+        if block_pool is not None:
+            self.block_pool = jax.device_put(
+                block_pool, NamedSharding(mesh, sharding_lib.serve_kv_spec(
+                    tuple(block_pool.shape), mesh)))
 
     # -- small jitted paged-state updates ----------------------------------
     @staticmethod
@@ -774,30 +870,51 @@ class ContinuousBatchingEngine:
         scheduler: probing with ``max_match=len(prompt)-1 == -1`` is a
         no-limit probe.)"""
         req.submit_t = time.perf_counter()
-        need = len(req.prompt) + req.max_new_tokens
-        if need > self.max_len:
-            self._reject(req, f"prompt+max_new_tokens={need} exceeds slot "
-                              f"capacity max_len={self.max_len}")
-            return
-        if len(np.asarray(req.prompt)) == 0:
-            self._reject(req, "empty prompt")
-            return
-        if req.priority not in PRIORITY_RANK:
-            self._reject(req, f"unknown priority class {req.priority!r} "
-                              f"(choose from {PRIORITY_CLASSES})")
+        err = _intake_error(req, self.max_len)
+        if err is not None:
+            self._reject(req, err)
             return
         req.status = "queued"
         self.queue.append(req)
 
     def _reject(self, req: Request, why: str) -> None:
         """Terminally fail a submission: error recorded on the request,
-        completed immediately, never queued — the engine keeps serving."""
+        completed immediately, never queued — the engine keeps serving.
+
+        The failed request gets the same terminal accounting as a served
+        one: ``done_t`` is stamped and its (terminal) queue wait recorded
+        on the REQUEST, so per-request latency invariants hold for the
+        whole population.  The engine-level ``stats.queue_wait_s`` series
+        stays admitted-requests-only (its mean is a statement about
+        scheduling, not intake validation); the failed population is
+        exposed separately as :attr:`ServeStats.failed_requests`, so
+        ``submitted == len(stats.queue_wait_s) + stats.failed_requests``
+        once drained — the two counts can no longer silently disagree."""
         req.error = why
         req.status = "failed"
         req.done = True
         req.done_t = time.perf_counter()
+        req.queue_wait_s = req.done_t - req.submit_t
         self.stats.rejected += 1
         self.completed.append(req)
+
+    def _requeue(self, req: Request) -> None:
+        """Put a rolled-back or preempted request back in the queue:
+        ahead of its own class, behind every strictly better class.
+
+        A plain ``insert(0, ...)`` would park e.g. a batch-class request
+        whose placement rolled back in FRONT of waiting interactive
+        requests — each interactive admission would then "jump" it,
+        ticking its ``skips`` until the starvation bound forced it ahead
+        of traffic that should outrank it (a priority inversion the
+        request never earned; rollback is the ENGINE's doing, not the
+        queue's).  Inserting at the head of its own class restores its
+        pre-admission position relative to its peers without charging
+        anyone a skip."""
+        rank = PRIORITY_RANK[req.priority]
+        pos = next((j for j, r in enumerate(self.queue)
+                    if PRIORITY_RANK[r.priority] >= rank), len(self.queue))
+        self.queue.insert(pos, req)
 
     @property
     def num_active(self) -> int:
@@ -903,7 +1020,8 @@ class ContinuousBatchingEngine:
     def _preempt_slot(self, j: int) -> None:
         """Preempt slot ``j``: capture resumable state, return its pages
         to the pool, unpin its prefix path, requeue its request at the
-        queue head (``status="preempted"``).
+        head of its priority class (``status="preempted"``,
+        :meth:`_requeue`).
 
         With ``swap=True`` the filled pages' K/V is gathered to host
         first (:meth:`_swap_out`) so re-admission scatters it back
@@ -941,7 +1059,7 @@ class ContinuousBatchingEngine:
         slot.reuse_bucket = None
         slot.chunk_bucket = None
         slot.admit_bucket = None
-        self.queue.insert(0, req)
+        self._requeue(req)
         self._masks_dirty = True
 
     def _swap_out(self, j: int, filled: int) -> None:
@@ -1188,8 +1306,11 @@ class ContinuousBatchingEngine:
     def _unadmit(self, i: int, req: Request) -> None:
         """Undo a half-done admission whose placement rolled back: free
         the slot, unpin the prefix handle, requeue the request at the
-        queue HEAD (its first-admission queue-wait/TTFT accounting is
-        already recorded and is not repeated)."""
+        head of its own priority class (:meth:`_requeue` — NOT the queue
+        head, which would park a rolled-back batch request ahead of
+        waiting interactive traffic).  Its first-admission
+        queue-wait/TTFT accounting is already recorded and is not
+        repeated."""
         slot = self.slots[i]
         slot.req = None
         slot.prefilling = False
@@ -1200,7 +1321,7 @@ class ContinuousBatchingEngine:
             self.prefix_cache.release(req.cache_handle)
             req.cache_handle = None
         req.status = "queued"
-        self.queue.insert(0, req)
+        self._requeue(req)
         self._masks_dirty = True
 
     def _select_layout(self, matched: int) -> Tuple[str, Optional[Tuple]]:
@@ -1244,6 +1365,10 @@ class ContinuousBatchingEngine:
                                           levels=self.occupancy_levels)
             if self.slo_weight > 0:
                 bucket = bucket + self._slo_bucket()
+            # shard count is a dispatch dimension: chunk-size tradeoffs
+            # shift with the per-call collective cost of an mp-sharded
+            # step (empty tail on a (1,1) mesh — keys stay unchanged)
+            bucket = bucket + self._shard_tail
             name = self.vpe.controller.select("prefill_chunk", bucket)
             return (0 if name == "whole" else int(name)), bucket, name
         if self.prefill_chunk in (0, "whole", "auto"):
@@ -1865,6 +1990,10 @@ class ContinuousBatchingEngine:
             # on WHO is waiting (an interactive waiter makes long fused
             # calls expensive under the two-term objective)
             bucket = bucket + self._slo_bucket()
+        # per-mesh horizon policy: a sharded step amortizes BOTH host
+        # overhead and collective latency, so the best H moves with the
+        # shard count (empty tail on a (1,1) mesh)
+        bucket = bucket + self._shard_tail
         if self.vpe is None:
             return 1, None, None
         name = self.vpe.controller.select("decode_horizon", bucket)
@@ -1938,7 +2067,8 @@ class ContinuousBatchingEngine:
             self._refresh_device_masks()
         n_active = len(remaining)
         bucket = occupancy_bucket(n_active, self.num_slots,
-                                  levels=self.occupancy_levels)
+                                  levels=self.occupancy_levels) \
+            + self._shard_tail
         fn = self._fused_fn(bucket, H)
         try:
             jits = fn._cache_size()
@@ -2082,8 +2212,11 @@ class ContinuousBatchingEngine:
             if n_active == 0:
                 return True     # growth preempted every decoder
             self._refresh_device_masks()
+        # serve_decode_impl is selected per occupancy × mesh shape: the
+        # winning attention layout on one device need not win sharded
         bucket = occupancy_bucket(n_active, self.num_slots,
-                                  levels=self.occupancy_levels)
+                                  levels=self.occupancy_levels) \
+            + self._shard_tail
         fn = self._decode_fn(bucket)
         try:
             decode_jits = fn._cache_size()
@@ -2158,3 +2291,181 @@ class ContinuousBatchingEngine:
             if max_steps is not None and steps >= max_steps:
                 break
         return self.completed
+
+
+def _merge_stats(parts: Sequence[ServeStats]) -> ServeStats:
+    """Aggregate per-replica stats into one :class:`ServeStats` view:
+    scalars sum, series concatenate, histograms merge by key."""
+    out = ServeStats()
+    for p in parts:
+        for f in dataclasses.fields(ServeStats):
+            mine, theirs = getattr(out, f.name), getattr(p, f.name)
+            if isinstance(mine, list):
+                mine.extend(theirs)
+            elif isinstance(mine, dict):
+                for k, v in theirs.items():
+                    mine[k] = mine.get(k, 0) + v
+            else:
+                setattr(out, f.name, mine + theirs)
+    return out
+
+
+class EngineReplicaGroup:
+    """``dp`` independent engine replicas sharing one admission queue.
+
+    The mesh's ``dp`` axis is *replica* parallelism: each replica is a
+    full :class:`ContinuousBatchingEngine` holding its own parameter
+    copy, slot pool, KV storage and page pool on its own ``(1, mp)``
+    row of the device mesh — replicas never exchange activations, so
+    the whole group is plain in-process objects (no RPC, no collective
+    across ``dp``).  What they DO share is admission: one group-level
+    queue feeds whichever replica has free capacity, so a burst lands
+    on idle replicas instead of queueing behind a busy one.
+
+    Dispatch semantics (:meth:`step`): while the shared queue is
+    non-empty and some replica has a free slot, the best-priority
+    (then oldest) queued request moves to the least-loaded replica.
+    Requests are committed to a replica only when it can actually admit
+    them — early binding would recreate per-replica head-of-line
+    blocking, which is the thing a shared queue exists to avoid.
+    Prefix-affinity and starvation bounds then apply *within* the
+    replica exactly as on a single engine.
+
+    Every replica is constructed with the full ``(dp, mp)``
+    ``shard_dims``, so all replicas' dispatch keys carry the same
+    shard segment and a shared ``vpe`` learns ONE policy per mesh
+    configuration from every replica's samples."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, dp: int, mp: int,
+                 **engine_kwargs: Any) -> None:
+        if dp < 2:
+            raise ValueError("EngineReplicaGroup needs dp >= 2 "
+                             "(a single replica is just the engine)")
+        need = dp * mp
+        devs = jax.devices()
+        if len(devs) < need:
+            raise ValueError(
+                f"mesh ({dp},{mp}) needs {need} devices, only "
+                f"{len(devs)} visible (set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N on CPU)")
+        self.mesh_shape = (dp, mp)
+        self.queue: List[Request] = []
+        self._failed: List[Request] = []
+        self._stats = ServeStats()           # group-level intake rejections
+        self.engines = [
+            ContinuousBatchingEngine(
+                cfg, params, mesh_shape=(1, mp),
+                mesh_devices=devs[r * mp:(r + 1) * mp],
+                shard_dims=(dp, mp), **engine_kwargs)
+            for r in range(dp)
+        ]
+        self.max_len = self.engines[0].max_len
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Enqueue on the SHARED queue — or terminally fail, with the
+        same semantics and messages as the single engine."""
+        req.submit_t = time.perf_counter()
+        err = _intake_error(req, self.max_len)
+        if err is not None:
+            req.error = err
+            req.status = "failed"
+            req.done = True
+            req.done_t = time.perf_counter()
+            req.queue_wait_s = req.done_t - req.submit_t
+            self._stats.rejected += 1
+            self._failed.append(req)
+            return
+        req.status = "queued"
+        self.queue.append(req)
+
+    def _dispatch(self) -> None:
+        """Move queued requests onto replicas with free capacity: best
+        priority class first (FIFO within a class), least-loaded replica
+        first.  Appends to the replica's queue directly — validation and
+        ``submit_t`` already happened at group intake, and the replica's
+        own scheduler handles it from here.
+
+        Capacity is free slots MINUS requests already parked on the
+        replica's local queue: dispatched-but-not-yet-admitted requests
+        hold their claim, otherwise every tie-break in one dispatch pass
+        would land on the same replica and a burst would serialize
+        behind it — exactly the head-of-line blocking the shared queue
+        exists to avoid."""
+        while self.queue:
+            cap = [(sum(1 for s in e.slots if s.free) - len(e.queue), -r, e)
+                   for r, e in enumerate(self.engines)]
+            cap.sort(reverse=True)
+            n_free, _, target = cap[0]
+            if n_free <= 0:
+                return
+            j = min(range(len(self.queue)),
+                    key=lambda i: (PRIORITY_RANK[self.queue[i].priority], i))
+            target.queue.append(self.queue.pop(j))
+
+    # -- engine surface ----------------------------------------------------
+    def step(self) -> bool:
+        """One group iteration: dispatch, then step every replica that
+        has work.  Returns False when the whole group is idle."""
+        self._dispatch()
+        progress = False
+        for eng in self.engines:
+            if eng.queue or eng.num_active > 0:
+                progress = eng.step() or progress
+        return progress or bool(self.queue)
+
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Drain the shared queue and every replica; returns completed
+        requests (failures included), exactly like the engine's."""
+        steps = 0
+        while self.queue or any(e.queue or e.num_active > 0
+                                for e in self.engines):
+            if not self.step():
+                break
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.completed
+
+    def check_kv(self) -> None:
+        """Page audit on every replica (replicas share no pages, so the
+        group audit is the conjunction of the per-replica audits)."""
+        for eng in self.engines:
+            eng.check_kv()
+
+    @property
+    def num_active(self) -> int:
+        return sum(e.num_active for e in self.engines)
+
+    @property
+    def completed(self) -> List[Request]:
+        out: List[Request] = list(self._failed)
+        for eng in self.engines:
+            out.extend(eng.completed)
+        return out
+
+    @property
+    def stats(self) -> ServeStats:
+        """Aggregated view: per-replica stats merged plus group-level
+        intake rejections.  Recomputed per access — cheap at bench
+        scale, always consistent."""
+        return _merge_stats([self._stats] + [e.stats for e in self.engines])
+
+
+def make_serve_engine(cfg: ModelConfig, params: Any, *,
+                      mesh_shape: Tuple[int, int] = (1, 1),
+                      **engine_kwargs: Any):
+    """Build the serve engine for a ``(dp, mp)`` mesh shape.
+
+    ``dp == 1`` returns a plain :class:`ContinuousBatchingEngine`
+    (sharded over ``mp`` when ``mp > 1``; the bitwise-identical
+    single-device engine at ``(1, 1)``); ``dp > 1`` returns an
+    :class:`EngineReplicaGroup` of dp single-row engines behind one
+    shared admission queue.  Both expose the same serve surface
+    (``submit`` / ``step`` / ``run`` / ``check_kv`` / ``completed`` /
+    ``stats``)."""
+    dp, mp = (int(mesh_shape[0]), int(mesh_shape[1]))
+    if dp <= 1:
+        return ContinuousBatchingEngine(cfg, params, mesh_shape=(1, mp),
+                                        **engine_kwargs)
+    return EngineReplicaGroup(cfg, params, dp=dp, mp=mp, **engine_kwargs)

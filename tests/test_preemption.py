@@ -160,6 +160,56 @@ class TestPlacementRollback:
         eng.queue = []          # hand the fabricated state back clean
         eng.check_kv()
 
+    def test_unadmit_requeues_behind_better_class(self, setup):
+        """Satellite regression: a rolled-back BATCH admission goes to
+        the head of its OWN class — behind waiting interactive traffic,
+        ahead of its batch peers.  The old unconditional ``insert(0)``
+        parked it in front of interactive requests, which then each
+        ticked its ``skips`` on admission until the starvation bound
+        forced it ahead of traffic that outranks it."""
+        cfg, params = setup
+        rng = np.random.default_rng(6)
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=2, max_len=64, kv_layout="paged",
+            block_size=8, prefix_blocks=0, page_budget=10)
+        inter = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=1, priority="interactive")
+        peer = Request(rid=2, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=1, priority="batch")
+        eng.queue = [inter, peer]
+        req = Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab_size, 12).astype(np.int32), max_new_tokens=2,
+            priority="batch")
+        req.status = "running"
+        eng.slots[0].req = req
+        eng._unadmit(0, req)
+        assert eng.queue == [inter, req, peer]
+        # the rollback itself charges nobody a skip: jumping `req` past
+        # `peer` is the ENGINE's doing, not a scheduling decision
+        assert all(r.skips == 0 for r in eng.queue)
+        assert eng.stats.sched_skips == 0
+        eng.queue = []
+        eng.check_kv()
+
+    def test_interactive_rollback_keeps_class_head(self, setup):
+        """The inverse direction: a rolled-back interactive admission
+        still goes ahead of everything of its class and below."""
+        cfg, params = setup
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=2, max_len=64, kv_layout="paged",
+            block_size=8, prefix_blocks=0, page_budget=10)
+        batch = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=1)
+        eng.queue = [batch]
+        req = Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                      max_new_tokens=2, priority="interactive")
+        req.status = "running"
+        eng.slots[0].req = req
+        eng._unadmit(0, req)
+        assert eng.queue == [req, batch]
+        eng.queue = []
+        eng.check_kv()
+
 
 class TestSwapKernels:
     """Device-level swap round trip + pool accounting, no engine."""

@@ -185,6 +185,47 @@ class TestSlotRecycling:
         assert req.done and req.status == "failed"
         assert "priority" in req.error
 
+    def test_failed_request_latency_record_is_complete(self, setup):
+        """Satellite regression: a terminal intake failure must leave a
+        COMPLETE latency record — ``done_t`` stamped, the request's own
+        ``queue_wait_s`` covering its (instant) queue life — and be
+        countable via ``stats.failed_requests`` without polluting the
+        admitted-only ``stats.queue_wait_s`` series."""
+        cfg, params = setup
+        eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=32)
+        req = Request(rid=0, prompt=np.zeros(40, np.int32),
+                      max_new_tokens=4)
+        eng.submit(req)
+        assert req.done_t >= req.submit_t > 0.0
+        assert req.queue_wait_s == req.done_t - req.submit_t
+        assert eng.stats.failed_requests == 1 == eng.stats.rejected
+        # the admitted-only series stays admitted-only: a rejection
+        # contributing 0s here would drag mean_queue_wait_s toward zero
+        assert eng.stats.queue_wait_s == []
+        assert eng.stats.mean_queue_wait_s == 0.0
+
+    def test_population_invariant_over_mixed_stream(self, setup):
+        """Every submission lands in exactly one population: admitted
+        (queue_wait_s sample) or failed (failed_requests)."""
+        cfg, params = setup
+        rng = np.random.default_rng(13)
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=48)
+        n_sub = 0
+        for i in range(6):
+            if i % 3 == 1:      # oversized -> terminal failure
+                prompt = np.zeros(60, np.int32)
+            else:
+                prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+            eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=3))
+            n_sub += 1
+        done = eng.run()
+        assert len(done) == n_sub
+        assert (len(eng.stats.queue_wait_s) + eng.stats.failed_requests
+                == n_sub)
+        assert eng.stats.failed_requests == 2
+        for r in done:
+            assert r.done_t >= r.submit_t > 0.0
+
     def test_failed_requests_interleave_with_good_ones(self, setup):
         """A bad submission mid-stream must not disturb its neighbours'
         outputs — the engine serves around it."""
