@@ -7,6 +7,16 @@ pressure.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
 
+Part 8 — kernel backend sweep (what PR 8's measured variants buy): the
+paged engine served with both kernel axes pinned to gather, pinned to
+pallas, and measured (auto), on a decode-bound and a prefill-heavy
+workload.  Token-exact greedy parity across backends and leak-free
+drains are the pass criteria; per-bucket auto selections for
+serve_decode_impl AND prefill_kernel are recorded.  On CPU the pallas
+arm runs interpreted, so auto converging away from it is the dispatch
+loop doing its job — the TPU re-run is the real gather-vs-indirect-DMA
+measurement (ROADMAP).
+
 Part 6 — priority classes under over-pressure (what PR 6's scheduling
 buys): a deep burst of short interactive turns mixed with long batch
 generations through a page pool sized FAR below worst case
@@ -116,7 +126,7 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 # tooling can read the whole file without per-part key knowledge.  Bump
 # SCHEMA on envelope changes, PR per growth session.
 SCHEMA = 1
-PR = 7
+PR = 8
 
 
 def append_record(bench: str, metrics: dict, *, pr: int = PR) -> None:
@@ -790,6 +800,121 @@ def bench_shard_sweep() -> bool:
     return ok
 
 
+# -- part 8 (PR 8): kernel backend sweep (gather vs pallas vs auto) ----------
+
+KRN_ARMS = ("gather", "pallas", "auto")
+KRN_REPS = 2
+
+
+def _kernel_workload(kind: str, vocab: int) -> List[Request]:
+    """Small on purpose: the pallas arm runs interpreted on CPU (a
+    correctness-plus-dispatch gate here, the real measurement is a TPU
+    re-run), and interpret-mode wall scales with tokens scored."""
+    rng = np.random.default_rng(13)
+    if kind == "decode_bound":     # short prompts, long generations
+        return [Request(rid=i,
+                        prompt=rng.integers(0, vocab, 10).astype(np.int32),
+                        max_new_tokens=20) for i in range(8)]
+    return [Request(rid=i,        # prefill_heavy: long prompts, short tails
+                    prompt=rng.integers(0, vocab, 48).astype(np.int32),
+                    max_new_tokens=4) for i in range(6)]
+
+
+def _kernel_engine(cfg, params, arm):
+    """One engine per arm.  Pinned arms fix BOTH kernel axes (the engine
+    registers serve_decode_impl as a system op — recorded, never
+    trialed); the auto arm leaves both measured.  Chunk size and horizon
+    are fixed in every arm so the sweep isolates the kernel axes."""
+    vpe = VPE(controller_kwargs=dict(min_samples=3, trial_samples=8,
+                                     hysteresis=0.02, reexplore_period=48))
+    decode_impl = ("auto" if arm == "auto"
+                   else ("grouped" if arm == "gather" else "pallas"))
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=SLOTS, max_len=MAX_LEN, kv_layout="paged",
+        block_size=16, prefill_chunk=16, decode_horizon=4,
+        decode_impl=decode_impl, prefill_kernel=arm, vpe=vpe)
+    return eng, vpe
+
+
+def _run_kernel_pass(eng, reqs) -> dict:
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    eng.check_kv()   # raises on any leaked page at drain
+    return {
+        "tok_per_s": useful_tokens(reqs) / wall,
+        "ttft_p95_ms": percentile(eng.stats.ttft_s, 95) * 1e3,
+        "outs": {r.rid: list(map(int, r.out)) for r in reqs},
+    }
+
+
+def _bench_kernel_workload(cfg, params, kind: str) -> dict:
+    """One workload over the three arms; reps interleaved across arms
+    (same shared-host discipline as the horizon sweep), auto's trial
+    and settling cost confined to the warm passes."""
+    from repro.core import bucket_label
+    engines = {}
+    for arm in KRN_ARMS:
+        eng, vpe = _kernel_engine(cfg, params, arm)
+        warm = 4 if arm == "auto" else 2   # auto also settles its trials
+        for _ in range(warm):
+            _run_kernel_pass(eng, _kernel_workload(kind, cfg.vocab_size))
+        vpe.controller.reexplore_period = 0
+        engines[arm] = (eng, vpe)
+    results: dict = {}
+    for _ in range(KRN_REPS):
+        for arm, (eng, _vpe) in engines.items():
+            eng.stats = type(eng.stats)()
+            r = _run_kernel_pass(eng, _kernel_workload(kind, cfg.vocab_size))
+            if arm not in results \
+                    or r["tok_per_s"] > results[arm]["tok_per_s"]:
+                results[arm] = r
+    _eng, vpe = engines["auto"]
+    results["auto"]["selected"] = {
+        op: {bucket_label(b): d.selected
+             for (o, b), d in vpe.controller._decisions.items() if o == op}
+        for op in ("serve_decode_impl", "prefill_kernel")}
+    return results
+
+
+def bench_kernel_sweep(cfg, params) -> bool:
+    """Gather vs pallas vs auto on a decode-bound and a prefill-heavy
+    workload: token parity across backends is the gate (on CPU the
+    pallas arm runs interpreted, so relative tok/s is reported, not
+    asserted — auto converging AWAY from interpreted pallas is the
+    dispatch loop working); per-bucket auto selections are recorded
+    for both kernel axes."""
+    record = {"slots": SLOTS, "arms": list(KRN_ARMS),
+              "prefill_chunk": 16, "decode_horizon": 4}
+    ok = True
+    for kind in ("decode_bound", "prefill_heavy"):
+        res = _bench_kernel_workload(cfg, params, kind)
+        outs = {k: v.pop("outs") for k, v in res.items()}
+        parity = all(o == outs["gather"] for o in outs.values())
+        ok = ok and parity
+        record[kind] = {
+            "results": res,
+            "pallas_vs_gather": round(
+                res["pallas"]["tok_per_s"] / res["gather"]["tok_per_s"], 3),
+            "greedy_parity": parity,
+        }
+        for arm in KRN_ARMS:
+            print(f"# kernel {kind:>13} {arm:>6}: "
+                  f"{res[arm]['tok_per_s']:8.1f} tok/s, ttft p95 "
+                  f"{res[arm]['ttft_p95_ms']:7.2f}ms")
+        print(f"# kernel {kind}: parity "
+              f"{'exact' if parity else 'BROKEN'}; auto selections: "
+              f"{res['auto']['selected']}")
+    record["pass"] = ok
+    append_record("serve_kernel_sweep", record)
+    print(f"# kernel sweep: {'PASS' if ok else 'FAIL'} "
+          f"(need token-exact greedy parity across backends on both "
+          f"workloads, zero leaked pages at every drain)")
+    return ok
+
+
 def main(n_requests: int = 24) -> None:
     cfg = get_config("qwen3-8b").reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -825,8 +950,9 @@ def main(n_requests: int = 24) -> None:
     ok_horizon = bench_decode_horizon(cfg, params)
     ok_priority = bench_priority_mix(cfg, params)
     ok_shard = bench_shard_sweep()
+    ok_kernel = bench_kernel_sweep(cfg, params)
     if not (ok and ok_prefix and ok_paged and ok_chunked and ok_horizon
-            and ok_priority and ok_shard):
+            and ok_priority and ok_shard and ok_kernel):
         sys.exit(1)
 
 

@@ -169,6 +169,12 @@ def prefill_chunk_bucket(prompt_len: int, active: int, total: int, *,
     is and how busy the pool already is.  So the decision is keyed by
     prompt-length bucket × occupancy level, the same two-dimensional
     decision-tree-on-input-size shape as :func:`kv_layout_bucket`.
+
+    The serve engine's ``prefill_kernel`` axis (gather vs Pallas paged
+    prefill backend) shares this same ``("pfc", ...)`` bucket family:
+    the kernel crossover depends on the identical prompt-length ×
+    occupancy inputs, so both axes key their decisions off one bucketing
+    rather than inventing a parallel family.
     """
     p = prefix_len_bucket(prompt_len)
     o = occupancy_bucket(active, total, levels=levels)

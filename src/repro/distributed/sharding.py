@@ -282,6 +282,25 @@ def serve_kv_spec(shape: Tuple[int, ...], mesh: Mesh, *, head_axis: int = 2) -> 
     return P(*dims)
 
 
+def kernel_shard_ok(num_kv_heads: int, mesh: Optional[Mesh]) -> bool:
+    """Shard contract of the paged Pallas kernels (docs/kernel_variants.md).
+
+    Under the serve mesh each mp shard's kernel must see its local
+    ``Hkv/mp`` head slice and the full unsharded page axis — which only
+    holds when :func:`serve_kv_spec` actually shards the head axis, i.e.
+    ``Hkv % mp == 0``.  When divisibility fails the spec replicates the
+    pool and the engine's fallback ladder routes the ``pallas`` variants
+    to the gather path instead (rung 3).  No mesh (or no tensor axis)
+    is trivially fine: the kernel sees all heads.
+    """
+    if mesh is None:
+        return True
+    tp = tp_axis(mesh)
+    if tp is None:
+        return True
+    return num_kv_heads % axis_sizes(mesh)[tp] == 0
+
+
 def serve_cache_specs(cache_tree: Any, mesh: Mesh) -> Any:
     """Spec pytree for serve KV containers (slot cache / page pool /
     paged cache).  ``k``/``v`` leaves get :func:`serve_kv_spec`; host-

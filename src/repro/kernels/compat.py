@@ -1,13 +1,56 @@
-"""Version-tolerant Pallas TPU API lookups.
+"""Version-tolerant Pallas TPU API lookups and the platform gate.
 
 JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
 (and kept only one spelling per release).  Resolve whichever exists at
 import time so the kernels run against both API generations.
+
+:func:`pallas_supported` is the serve engine's capability gate (rung 2
+of the fallback ladder in docs/kernel_variants.md): the ``pallas``
+decode/prefill variants are only registered on the VPE axes when a
+trivial pallas_call actually executes on this process's backend —
+natively on TPU, via ``interpret=True`` everywhere else.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
+
+_PALLAS_OK: Optional[bool] = None
+
+
+def default_interpret() -> bool:
+    """Interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def pallas_supported() -> bool:
+    """True when Pallas kernels can run here (probe result is cached).
+
+    Runs one trivial pallas_call at first ask; any failure — missing
+    mosaic support, an interpreter regression, an exotic backend —
+    resolves to False, and the engine's fallback ladder routes the
+    pallas variants to the gather path instead of crashing mid-serve.
+    """
+    global _PALLAS_OK
+    if _PALLAS_OK is None:
+        try:
+            def _probe(x_ref, o_ref):
+                o_ref[...] = x_ref[...] + 1.0
+
+            out = pl.pallas_call(
+                _probe,
+                out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+                interpret=default_interpret(),
+            )(jnp.zeros((8, 128), jnp.float32))
+            _PALLAS_OK = bool(out[0, 0] == 1.0)
+        except Exception:
+            _PALLAS_OK = False
+    return _PALLAS_OK

@@ -36,7 +36,11 @@ Mechanics:
 
 Numerics: f32 accumulation throughout, validated against
 ``kernels.ref.paged_attention_ref`` (which is itself exact vs the
-contiguous decode attention on identically-valued pages).
+contiguous decode attention on identically-valued pages).  With
+``read_dtype`` set, decode switches to a two-phase body
+(:func:`_pa_kernel_quantized`) that reproduces the serve gather path's
+bf16 quantization of both the KV reads and the softmax probabilities —
+see that kernel's docstring for why a single online pass can't.
 """
 
 from __future__ import annotations
@@ -49,7 +53,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .compat import CompilerParams
+from .compat import CompilerParams, default_interpret
 
 _NEG_INF = float("-inf")
 
@@ -59,6 +63,7 @@ def _pa_kernel(
     q_ref, k_ref, v_ref, o_ref,
     m_ref, l_ref, acc_ref,
     *, bs: int, nb: int, window: Optional[int], scale: float,
+    read_dtype=None,
 ):
     b = pl.program_id(0)
     j = pl.program_id(2)
@@ -74,8 +79,16 @@ def _pa_kernel(
 
     def body():
         q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
-        k = k_ref[0, 0].astype(jnp.float32)            # (bs, D)
-        v = v_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0]                                # (bs, D)
+        v = v_ref[0, 0]
+        if read_dtype is not None:
+            # round-trip through the slot-cache dtype so the kernel sees
+            # exactly the values the gather path reads (parity contract:
+            # paged_gather_layer(..., out_dtype=SLOT_CACHE_DTYPE))
+            k = k.astype(read_dtype)
+            v = v.astype(read_dtype)
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                      # (G, bs)
@@ -106,11 +119,84 @@ def _pa_kernel(
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-def _pa_prefill_kernel(
-    bt_ref, base_ref,           # scalar prefetch: (B, nb) pages, (B,) bases
+def _pa_kernel_quantized(
+    bt_ref, len_ref,            # scalar prefetch: (B, nb) pages, (B,) lengths
     q_ref, k_ref, v_ref, o_ref,
     m_ref, l_ref, acc_ref,
-    *, bs: int, nb: int, C: int, chunk_len: int,
+    *, bs: int, nb: int, window: Optional[int], scale: float,
+    read_dtype,
+):
+    """Two-phase decode body reproducing the gather path's value-matmul
+    quantization (``decode_attention`` casts the softmax probabilities
+    to the cache dtype before the value einsum — a post-normalization
+    cast an online softmax cannot mirror blockwise, since the final
+    max/denominator aren't known mid-stream).  Phase 0 (grid steps
+    ``0..nb-1``) runs the online recurrence for the final stats only;
+    phase 1 (``nb..2nb-1``) re-scores each page against those FINAL
+    stats and accumulates ``dot(read_dtype(p), read_dtype(v))`` — the
+    exact softmax-then-cast the jnp path computes, page-blocked.  Decode
+    is one query row per head group, so the second score pass is noise
+    next to the page DMAs it rides."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    jj = jax.lax.rem(j, nb)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    col = jj * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+
+    def scores():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        k = k_ref[0, 0].astype(read_dtype).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                      # (G, bs)
+        mask = col <= length
+        if window is not None:
+            mask &= col > length - window
+        return jnp.where(mask[None, :], s, _NEG_INF)
+
+    def stats_pass():
+        s = scores()
+        m_prev = m_ref[...]                            # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.where(m_new == _NEG_INF, 0.0, jnp.exp(s - m_new))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+
+    def value_pass():
+        s = scores()
+        m = m_ref[...]
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows -> 0 output
+        p = jnp.where(m == _NEG_INF, 0.0, jnp.exp(s - m)) / l
+        p = p.astype(read_dtype).astype(jnp.float32)
+        v = v_ref[0, 0].astype(read_dtype).astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot(p, v, preferred_element_type=jnp.float32)
+
+    live = jj * bs <= length
+    if window is not None:
+        live &= (jj * bs + bs - 1) > length - window
+    pl.when(live & (j < nb))(stats_pass)
+    pl.when(live & (j >= nb))(value_pass)
+
+    @pl.when(j == 2 * nb - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)   # pre-normalized
+
+
+def _pa_prefill_kernel(
+    bt_ref, base_ref, lim_ref,  # scalar prefetch: (B, nb) pages, (B,) bases,
+                                # (B,) column limits (= base + chunk_len)
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, bs: int, nb: int, C: int,
     window: Optional[int], scale: float,
 ):
     """Multi-query (chunked-prefill) body: identical online-softmax
@@ -120,7 +206,12 @@ def _pa_prefill_kernel(
     per ROW rather than per sequence.  The chunk's own K/V are read from
     the pages like everything else (the engine writes-then-attends),
     which is exactly what makes prefill a multi-query special case of
-    the decode indirection instead of a separate code path."""
+    the decode indirection instead of a separate code path.
+
+    The valid-column limit rides in as scalar prefetch (not a static),
+    so the engine's chunk jits can pass the real token count as a traced
+    scalar — including from inside ``lax.scan`` bodies — without
+    recompiling per chunk length."""
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -131,6 +222,7 @@ def _pa_prefill_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     base = base_ref[b]
+    limit = lim_ref[b]
     col = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
     GC = m_ref.shape[0]
     # row r of the flattened (group, C) query tile is chunk position r % C
@@ -144,7 +236,7 @@ def _pa_prefill_kernel(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                      # (G*C, bs)
         mask = (col[None, :] <= row_pos[:, None]) \
-            & (col[None, :] < base + chunk_len)
+            & (col[None, :] < limit)
         if window is not None:
             mask &= col[None, :] > row_pos[:, None] - window
         s = jnp.where(mask, s, _NEG_INF)
@@ -159,7 +251,7 @@ def _pa_prefill_kernel(
 
     # block sparsity: skip pages entirely past the LAST query's causal
     # frontier, and (SWA) entirely before the FIRST query's window
-    live = j * bs <= base + chunk_len - 1
+    live = j * bs <= limit - 1
     if window is not None:
         live &= (j * bs + bs - 1) > base - window
     pl.when(live)(body)
@@ -172,7 +264,7 @@ def _pa_prefill_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("chunk_len", "window", "scale", "interpret"))
+    jax.jit, static_argnames=("window", "scale", "interpret"))
 def paged_prefill_attention_pallas(
     q: jax.Array,
     k_pool: jax.Array,
@@ -180,10 +272,10 @@ def paged_prefill_attention_pallas(
     block_tables: jax.Array,
     base: jax.Array,
     *,
-    chunk_len: Optional[int] = None,
+    chunk_len=None,
     window: Optional[int] = None,
     scale: Optional[float] = None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Chunked-prefill attention reading KV pages in place.
 
@@ -191,9 +283,12 @@ def paged_prefill_attention_pallas(
     ``i`` at absolute position ``base[b] + i``; k_pool/v_pool:
     (N, Hkv, bs, D) one layer of the paged pool, with the chunk's own
     K/V already written into its pages; block_tables: (B, nb) int32;
-    base: (B,) int32.  ``chunk_len`` (static) caps valid columns at
-    ``base + chunk_len`` — pass the real token count when C is padded.
-    Returns (B, Hq, C, D).
+    base: (B,) int32.  ``chunk_len`` caps valid columns at
+    ``base + chunk_len`` — pass the real token count when C is padded;
+    a python int or a traced int32 scalar/(B,) vector both work (it is
+    folded into a scalar-prefetch operand, NOT a static arg, so the
+    serve engine's chunk jits and fused ``lax.scan`` bodies never
+    recompile on it).  Returns (B, Hq, C, D).
 
     Same scalar-prefetch indirection as :func:`paged_attention_pallas`
     (grid step (b, h, j) DMAs pool page ``block_tables[b, j]``), with
@@ -207,27 +302,32 @@ def paged_prefill_attention_pallas(
     nb = block_tables.shape[1]
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
+    if interpret is None:
+        interpret = default_interpret()
     if chunk_len is None:
         chunk_len = C
     if scale is None:
         scale = 1.0 / (D ** 0.5)
+    base = base.astype(jnp.int32)
+    limit = jnp.broadcast_to(
+        base + jnp.asarray(chunk_len, jnp.int32), base.shape)
     q4 = q.reshape(B, Hkv, group * C, D)
     kernel = functools.partial(
-        _pa_prefill_kernel, bs=bs, nb=nb, C=C, chunk_len=chunk_len,
+        _pa_prefill_kernel, bs=bs, nb=nb, C=C,
         window=window, scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hkv, nb),
         in_specs=[
             pl.BlockSpec((1, 1, group * C, D),
-                         lambda b, h, j, bt, bs_: (b, h, 0, 0)),
+                         lambda b, h, j, bt, bs_, lm: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, bs, D),
-                         lambda b, h, j, bt, bs_: (bt[b, j], h, 0, 0)),
+                         lambda b, h, j, bt, bs_, lm: (bt[b, j], h, 0, 0)),
             pl.BlockSpec((1, 1, bs, D),
-                         lambda b, h, j, bt, bs_: (bt[b, j], h, 0, 0)),
+                         lambda b, h, j, bt, bs_, lm: (bt[b, j], h, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, group * C, D),
-                               lambda b, h, j, bt, bs_: (b, h, 0, 0)),
+                               lambda b, h, j, bt, bs_, lm: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((group * C, 1), jnp.float32),
             pltpu.VMEM((group * C, 1), jnp.float32),
@@ -242,12 +342,13 @@ def paged_prefill_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(block_tables, base, q4, k_pool, v_pool)
+    )(block_tables, base, limit, q4, k_pool, v_pool)
     return out.reshape(B, Hq, C, D)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("window", "scale", "interpret"))
+    jax.jit,
+    static_argnames=("window", "scale", "interpret", "read_dtype"))
 def paged_attention_pallas(
     q: jax.Array,
     k_pool: jax.Array,
@@ -257,15 +358,28 @@ def paged_attention_pallas(
     *,
     window: Optional[int] = None,
     scale: Optional[float] = None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
+    read_dtype=None,
 ) -> jax.Array:
     """q: (B, Hq, 1, D); k_pool/v_pool: (N, Hkv, bs, D) one layer of the
     paged pool; block_tables: (B, nb) int32; lengths: (B,) int32 (the
     position being decoded).  Returns (B, Hq, 1, D).
 
-    ``interpret=True`` runs the kernel body in python on CPU (this
-    container); a real TPU deployment passes interpret=False — the
-    indirect BlockSpec then turns into per-page DMA.
+    ``interpret`` defaults to true everywhere except a real TPU backend
+    (``compat.default_interpret``); interpret mode runs the kernel body
+    as stock jax ops — traceable under jit/scan — while on TPU the
+    indirect BlockSpec turns into per-page DMA.
+
+    ``read_dtype`` (static) makes the kernel reproduce the gather
+    path's quantization semantics end to end: K/V pages are
+    round-tripped through that dtype before the f32 compute (the values
+    ``paged_gather_layer(..., out_dtype=SLOT_CACHE_DTYPE)`` reads), and
+    the body switches to the two-phase :func:`_pa_kernel_quantized` so
+    the softmax probabilities are ALSO cast through it before the value
+    matmul — the ``p.astype(v.dtype)`` in ``decode_attention``.  Both
+    casts are what keeps the two decode backends token-parity-exact;
+    omitting either leaves a ~4e-3 logit gap that flips greedy tokens
+    over long generations.
     """
     B, Hq, S, D = q.shape
     N, Hkv, bs, _ = k_pool.shape
@@ -273,20 +387,38 @@ def paged_attention_pallas(
     assert S == 1, "paged decode attention is single-position"
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
+    if interpret is None:
+        interpret = default_interpret()
     if scale is None:
         scale = 1.0 / (D ** 0.5)
     q4 = q.reshape(B, Hkv, group, D)
-    kernel = functools.partial(
-        _pa_kernel, bs=bs, nb=nb, window=window, scale=scale)
+    if read_dtype is not None:
+        kernel = functools.partial(
+            _pa_kernel_quantized, bs=bs, nb=nb, window=window, scale=scale,
+            read_dtype=read_dtype)
+        grid = (B, Hkv, 2 * nb)   # stats pass, then quantized value pass
+
+        def page(bt, b, j):
+            return bt[b, jax.lax.rem(j, nb)]
+    else:
+        kernel = functools.partial(
+            _pa_kernel, bs=bs, nb=nb, window=window, scale=scale,
+            read_dtype=None)
+        grid = (B, Hkv, nb)
+
+        def page(bt, b, j):
+            return bt[b, j]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, Hkv, nb),
+        grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, group, D), lambda b, h, j, bt, ln: (b, h, 0, 0)),
             # the paged read: grid step (b, h, j) DMAs pool page
-            # block_tables[b, j] — indirection via scalar prefetch
-            pl.BlockSpec((1, 1, bs, D), lambda b, h, j, bt, ln: (bt[b, j], h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, D), lambda b, h, j, bt, ln: (bt[b, j], h, 0, 0)),
+            # block_tables[b, j mod nb] — indirection via scalar prefetch
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, j, bt, ln: (page(bt, b, j), h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, j, bt, ln: (page(bt, b, j), h, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, j, bt, ln: (b, h, 0, 0)),
         scratch_shapes=[

@@ -18,8 +18,23 @@ from repro.runtime.serve_loop import (
     Request, ServeLoop, WaveScheduler, make_serve_engine)
 
 
+_EPILOG = """\
+kernel backends (--decode-impl / --prefill-kernel):
+  'pallas' runs the block-indirect Pallas kernels over the paged KV
+  layout (scalar-prefetch block tables; interpret=True off-TPU);
+  'grouped'/'flat'/'gather' are the stock jnp paths; 'auto' (default)
+  lets the VPE controller measure both backends per bucket x mesh and
+  route to the winner.  Fallback ladder (docs/kernel_variants.md): a
+  pinned or selected 'pallas' degrades to the gather path when the
+  layout has no pages, the platform fails the pallas probe, or the
+  mesh's Hkv % mp != 0 forces KV replication — it never crashes.
+"""
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
@@ -60,6 +75,21 @@ def main() -> None:
                          "wall time: long horizons amortize host dispatch "
                          "when the queue is empty, 1 keeps admission "
                          "latency bounded under load")
+    ap.add_argument("--decode-impl",
+                    choices=["grouped", "flat", "pallas", "auto"],
+                    default="auto",
+                    help="decode attention backend: stock jnp paths "
+                         "('grouped'/'flat'), the block-indirect Pallas "
+                         "kernel over paged KV ('pallas'), or 'auto' — "
+                         "the serve_decode_impl VPE axis measured per "
+                         "occupancy bucket x mesh (see epilog)")
+    ap.add_argument("--prefill-kernel",
+                    choices=["gather", "pallas", "auto"],
+                    default="auto",
+                    help="paged chunked-prefill backend: 'gather' "
+                         "linearizes pages in-jit, 'pallas' scores them "
+                         "in place, 'auto' measures both per prefill-"
+                         "chunk bucket x mesh (see epilog)")
     ap.add_argument("--priority", choices=["batch", "interactive", "mix"],
                     default="batch",
                     help="request priority class; 'mix' alternates "
@@ -121,7 +151,8 @@ def main() -> None:
             block_size=args.block_size, kv_layout=args.kv_layout,
             prefill_chunk=chunk, chunks_per_step=args.chunks_per_step,
             decode_horizon=horizon, page_budget=args.page_budget,
-            swap=args.swap, slo_weight=args.slo_weight)
+            swap=args.swap, slo_weight=args.slo_weight,
+            decode_impl=args.decode_impl, prefill_kernel=args.prefill_kernel)
         for r in reqs:
             engine.submit(r)
         done = engine.run()

@@ -508,8 +508,71 @@ def decode_attention_flat(
     return out.astype(q.dtype)
 
 
+def decode_attention_pallas(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, length: jax.Array,
+    *, window: Optional[int] = None, scale: Optional[float] = None,
+    ring_window: Optional[int] = None,
+) -> jax.Array:
+    """Contiguous-layout resolution of the ``pallas`` decode variant.
+
+    The Pallas kernel reads block-indirect *pages*; a contiguous
+    (B, Hkv, T, D) slot cache has none, so this rung of the fallback
+    ladder (docs/kernel_variants.md) delegates to the grouped path.
+    The real kernel call lives in the paged step bodies
+    (:func:`repro.models.transformer.decode_step_paged`), which skip
+    the gather entirely when ``decode_impl == "pallas"``.
+    """
+    return decode_attention(q, k_cache, v_cache, length,
+                            window=window, scale=scale,
+                            ring_window=ring_window)
+
+
+def paged_decode_attention_kernel(
+    q: jax.Array, pool_k_l: jax.Array, pool_v_l: jax.Array,
+    block_table: jax.Array, length: jax.Array,
+    *, window: Optional[int] = None, scale: Optional[float] = None,
+    read_dtype=SLOT_CACHE_DTYPE,
+) -> jax.Array:
+    """Block-indirect decode attention — the ``pallas`` paged backend.
+
+    Same contract as ``decode_attention(q, *paged_gather_layer(...))``
+    but without ever linearizing the pages: the kernel DMAs pages
+    straight from the pool via the scalar-prefetch block table.
+    ``read_dtype`` defaults to the slot-cache dtype so the kernel scores
+    exactly the values the gather path reads (token-parity contract).
+    """
+    from repro.kernels.paged_attention import paged_attention_pallas
+    return paged_attention_pallas(
+        q, pool_k_l, pool_v_l, block_table, length,
+        window=window, scale=scale, read_dtype=read_dtype)
+
+
+def paged_prefill_attention_kernel(
+    q: jax.Array, pool_k_l: jax.Array, pool_v_l: jax.Array,
+    block_table: jax.Array, base: jax.Array, chunk_len,
+    *, window: Optional[int] = None, scale: Optional[float] = None,
+) -> jax.Array:
+    """Multi-query chunk attention over pages — the ``pallas`` prefill
+    backend.  Requires the chunk's own K/V already written into its
+    pages (write-then-attend ordering, see ``prefill_chunk_paged``);
+    ``chunk_len`` may be a traced scalar — it becomes a scalar-prefetch
+    operand, not a recompile."""
+    from repro.kernels.paged_attention import paged_prefill_attention_pallas
+    return paged_prefill_attention_pallas(
+        q, pool_k_l, pool_v_l, block_table, base,
+        chunk_len=chunk_len, window=window, scale=scale)
+
+
 # Serve-engine VPE axis: decode-attention implementations (first = default).
+# "pallas" resolves to the block-indirect kernel only on the paged data
+# path; on contiguous caches it is an alias of "grouped" (fallback
+# ladder, docs/kernel_variants.md).
 DECODE_ATTN_VARIANTS = {
     "grouped": decode_attention,
     "flat": decode_attention_flat,
+    "pallas": decode_attention_pallas,
 }
+
+# Variant names that are Pallas-kernel-backed (need the capability gate
+# kernels/compat.pallas_supported + sharding.kernel_shard_ok to pass).
+PAGED_KERNEL_IMPLS = ("pallas",)

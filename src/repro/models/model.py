@@ -176,12 +176,16 @@ def decode_step_paged(cfg: ModelConfig, params: Any, pool: Any, cache: Any,
 
 def prefill_chunk_paged(cfg: ModelConfig, params: Any, pool: Any,
                         bt_row: jax.Array, tokens: jax.Array,
-                        base: jax.Array, chunk_len: jax.Array
+                        base: jax.Array, chunk_len: jax.Array,
+                        kernel: str = "gather"
                         ) -> Tuple[Any, jax.Array]:
     """One prompt chunk prefilled directly over the paged KV layout
-    (reads prior pages through the block table, writes its own)."""
+    (reads prior pages through the block table, writes its own).
+    ``kernel``: ``"gather"`` linearizes pages in-jit; ``"pallas"``
+    scores them in place via the block-indirect multi-query kernel
+    (the serve engine's ``prefill_kernel`` axis)."""
     return _slot_module(cfg).prefill_chunk_paged(
-        cfg, params, pool, bt_row, tokens, base, chunk_len)
+        cfg, params, pool, bt_row, tokens, base, chunk_len, kernel=kernel)
 
 
 def decode_step_mixed(cfg: ModelConfig, params: Any, cache: Any, pool: Any,

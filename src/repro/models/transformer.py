@@ -371,7 +371,8 @@ def prefill_suffix_kv(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Dict,
                         bt_row: jax.Array, tokens: jax.Array,
-                        base: jax.Array, chunk_len: jax.Array
+                        base: jax.Array, chunk_len: jax.Array,
+                        kernel: str = "gather"
                         ) -> Tuple[Dict, jax.Array]:
     """Prefill ONE chunk of a prompt directly over the paged KV layout.
 
@@ -405,6 +406,16 @@ def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Dict,
     would have kept live in registers — chunked ≡ whole-prompt prefill
     is structural up to the masked-softmax padding layout, which the
     parity tests pin token-exact for the served configs.
+
+    ``kernel`` picks the chunk-attention backend (the serve engine's
+    ``prefill_kernel`` VPE axis): ``"gather"`` is the jnp path above;
+    ``"pallas"`` flips the per-layer ordering to write-then-attend —
+    the chunk's fresh K/V are scattered into its pages FIRST, then one
+    block-indirect multi-query kernel call scores prefix and chunk
+    through the block table in place (pages store the compute dtype, so
+    reading the chunk's keys back from its pages is exact; the kernel's
+    ``base + chunk_len`` column cap keeps padded/unwritten positions
+    out of every real row's softmax).
     """
     B, C = tokens.shape
     nb = bt_row.shape[0]
@@ -430,6 +441,23 @@ def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Dict,
 
     def body(x, scanned):
         lp, pk, pv = scanned              # (N, Hkv, bs, D)
+
+        if kernel == "pallas":
+            written = {}
+
+            def attn_call(q, k, v):
+                # write-then-attend: the kernel reads the chunk's own
+                # keys from its pages, so they must land there first
+                wk, wv = kvcache.write_chunk_paged_layer(
+                    pk, pv, k, v, bt_row, base, chunk_len)
+                written["k"], written["v"] = wk, wv
+                return kvcache.paged_prefill_attention_kernel(
+                    q, wk, wv, bt_row[None], base[None], chunk_len,
+                    window=s.window)
+
+            x, _k, _v = _layer_kv_fwd(cfg, s, None, lp, x, positions,
+                                      attn_call=attn_call)
+            return x, (written["k"], written["v"])
 
         def attn_call(q, k, v):
             kg, vg = kvcache.paged_gather_layer(pk, pv, bt_row[None])
@@ -539,7 +567,11 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Dict,
     so gathered column ``t`` is absolute position ``t`` — with
     ``nb * bs == max_len`` the masked softmax sees exactly the same
     values at the same columns as the contiguous layout, making the two
-    decode paths token-identical).  Returns (pool, cache, logits).
+    decode paths token-identical).  ``decode_impl="pallas"`` skips the
+    gather entirely and scores pages in place via the block-indirect
+    kernel (:func:`~repro.models.kvcache.paged_decode_attention_kernel`,
+    read-cast through the slot-cache dtype so both backends see the
+    same values).  Returns (pool, cache, logits).
     """
     B, _ = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -548,6 +580,7 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Dict,
     positions = length[:, None]
     trash = pool["k"].shape[1] - 1
     s = attn_spec(cfg)
+    use_kernel = decode_impl in kvcache.PAGED_KERNEL_IMPLS
     attn_fn = kvcache.DECODE_ATTN_VARIANTS[decode_impl or "grouped"]
 
     def body(x, scanned):
@@ -556,9 +589,13 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Dict,
         q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
         pk, pv = kvcache.append_token_paged(pk, pv, k, v, bt, length,
                                             live, trash)
-        kg, vg = kvcache.paged_gather_layer(
-            pk, pv, bt, out_dtype=kvcache.SLOT_CACHE_DTYPE)
-        o = attn_fn(q, kg, vg, length, window=cfg.window)
+        if use_kernel:
+            o = kvcache.paged_decode_attention_kernel(
+                q, pk, pv, bt, length, window=cfg.window)
+        else:
+            kg, vg = kvcache.paged_gather_layer(
+                pk, pv, bt, out_dtype=kvcache.SLOT_CACHE_DTYPE)
+            o = attn_fn(q, kg, vg, length, window=cfg.window)
         return _post_attn(cfg, lp, x, o), (pk, pv)
 
     x, (k_new, v_new) = layers.scan_layers(
@@ -599,6 +636,7 @@ def decode_step_mixed(cfg: ModelConfig, params: Params, cache: Dict,
     trash = pool["k"].shape[1] - 1
     paged_live = live * use_paged
     s = attn_spec(cfg)
+    use_kernel = decode_impl in kvcache.PAGED_KERNEL_IMPLS
     attn_fn = kvcache.DECODE_ATTN_VARIANTS[decode_impl or "grouped"]
 
     def body(x, scanned):
@@ -608,9 +646,18 @@ def decode_step_mixed(cfg: ModelConfig, params: Params, cache: Dict,
         kc, vc = kvcache.update_layer_cache(kc, vc, k, v, length)
         pk, pv = kvcache.append_token_paged(pk, pv, k, v, bt, length,
                                             paged_live, trash)
-        kg, vg = kvcache.paged_gather_layer(pk, pv, bt, out_dtype=kc.dtype)
+        # "pallas" applies only to the paged read; the contiguous read
+        # of this mixed step uses the variant's contiguous resolution
+        # (grouped — see DECODE_ATTN_VARIANTS)
+        if use_kernel:
+            o_p = kvcache.paged_decode_attention_kernel(
+                q, pk, pv, bt, length, window=cfg.window,
+                read_dtype=kc.dtype)
+        else:
+            kg, vg = kvcache.paged_gather_layer(pk, pv, bt,
+                                                out_dtype=kc.dtype)
+            o_p = attn_fn(q, kg, vg, length, window=cfg.window)
         o_c = attn_fn(q, kc, vc, length, window=cfg.window)
-        o_p = attn_fn(q, kg, vg, length, window=cfg.window)
         o = jnp.where(use_paged[:, None, None, None] > 0, o_p, o_c)
         return _post_attn(cfg, lp, x, o), (kc, vc, pk, pv)
 

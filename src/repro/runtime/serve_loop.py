@@ -96,6 +96,7 @@ from repro.core import (VPE, decode_horizon_bucket, kv_layout_bucket,
                         prefill_chunk_bucket, prefix_len_bucket,
                         shard_bucket, slo_pressure_bucket)
 from repro.distributed import sharding as sharding_lib
+from repro.kernels import compat as pallas_compat
 from repro.models import kvcache
 from repro.models import model as model_lib
 from repro.runtime.page_pool import PagePool
@@ -118,12 +119,21 @@ from repro.runtime.prefix_cache import PrefixCache
 #   engine's ``horizon_choices``).  Fed from per-TOKEN wall time
 #   (dt / valid tokens), so a long horizon wins exactly when amortizing
 #   the per-call host overhead beats the admission latency it costs.
+# * prefill_kernel — chunk-attention backend for paged prefill: "gather"
+#   linearizes pages in-jit, "pallas" reads them in place through the
+#   block-indirect kernel.  Keyed by the SAME prefill_chunk_bucket as
+#   the prefill_chunk axis (prompt-length × occupancy, + shard tail),
+#   fed from the same clean chunk-wall attribution, and only registered
+#   when the engine passes the pallas capability gate
+#   (docs/kernel_variants.md fallback ladder).  serve_decode_impl's
+#   "pallas" variant is the decode-side twin, gated identically.
 SERVE_AXES: Dict[str, List[str]] = {
     "serve_decode_impl": list(kvcache.DECODE_ATTN_VARIANTS),
     "prefix_reuse": ["reuse", "recompute"],
     "kv_layout": ["contiguous", "paged"],
     "prefill_chunk": ["whole", "128", "512", "2048"],
     "decode_horizon": ["1", "4", "16"],
+    "prefill_kernel": ["gather", "pallas"],
 }
 
 KV_LAYOUTS = ("contiguous", "paged", "auto")
@@ -434,6 +444,12 @@ class _Slot:
     chunk_costs: List[float] = dataclasses.field(default_factory=list)
     chunk_bucket: Optional[Tuple] = None   # prefill_chunk-axis bucket
     chunk_variant: Optional[str] = None
+    # prefill_kernel-axis state: which chunk-attention backend this
+    # admission's chunks run (resolved through the fallback ladder), and
+    # — in auto mode — the bucket/variant its clean chunk walls feed
+    kernel: str = "gather"
+    kernel_bucket: Optional[Tuple] = None  # prefill_kernel-axis bucket
+    kernel_variant: Optional[str] = None
     place_wall: float = 0.0      # the O(1) placement span of this admission
     reuse_bucket: Optional[Tuple] = None   # prefix_reuse sample (fed at
     reuse_variant: str = "reuse"           # prefill completion)
@@ -552,11 +568,21 @@ class ContinuousBatchingEngine:
                  max_skip_by_class: Optional[Dict[str, int]] = None,
                  mesh_shape: Tuple[int, int] = (1, 1),
                  mesh_devices: Optional[Sequence] = None,
-                 shard_dims: Optional[Tuple[int, int]] = None) -> None:
+                 shard_dims: Optional[Tuple[int, int]] = None,
+                 decode_impl: str = "auto",
+                 prefill_kernel: str = "auto") -> None:
         if not model_lib.supports_slot_serving(cfg):
             raise ValueError(f"family {cfg.family!r} has no slot-serving path")
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}")
+        if decode_impl != "auto" and decode_impl not in kvcache.DECODE_ATTN_VARIANTS:
+            raise ValueError(
+                f"decode_impl must be 'auto' or one of "
+                f"{sorted(kvcache.DECODE_ATTN_VARIANTS)}, got {decode_impl!r}")
+        if prefill_kernel not in ("auto",) + tuple(SERVE_AXES["prefill_kernel"]):
+            raise ValueError(
+                f"prefill_kernel must be 'auto' or one of "
+                f"{SERVE_AXES['prefill_kernel']}, got {prefill_kernel!r}")
         if isinstance(prefill_chunk, str):
             if prefill_chunk not in ("whole", "auto"):
                 raise ValueError(
@@ -620,6 +646,21 @@ class ContinuousBatchingEngine:
         self.mesh = None
         if mp > 1 or mesh_devices is not None:
             self.mesh = sharding_lib.serve_mesh(dp, mp, devices=mesh_devices)
+        # -- pallas capability gate (docs/kernel_variants.md ladder) --------
+        # the kernel-backed variants are only offered when (1) the layout
+        # has pages at all, (2) a trivial pallas_call actually runs on
+        # this backend, and (3) the mesh's head sharding matches the
+        # kernel's shard contract (Hkv % mp == 0, so each shard sees its
+        # local head slice over the full unsharded page axis).  Anything
+        # short of that resolves to the gather path (_resolve_impl /
+        # _resolve_kernel) — a pinned "pallas" never crashes, it degrades.
+        paged_capable = kv_layout in ("paged", "auto")
+        self._pallas_ok = (paged_capable
+                           and pallas_compat.pallas_supported()
+                           and sharding_lib.kernel_shard_ok(
+                               cfg.num_kv_heads, self.mesh))
+        self.decode_impl = decode_impl
+        self.prefill_kernel = prefill_kernel
         self.prefill_chunk = prefill_chunk
         self.chunks_per_step = chunks_per_step
         self.chunk_choices = tuple(int(c) for c in chunk_choices)
@@ -649,8 +690,18 @@ class ContinuousBatchingEngine:
         self._default_variant = SERVE_AXES[self._axis][0]
         self._last_variant: Optional[str] = None
         if vpe is not None and not vpe.registry.has_op(self._axis):
-            vpe.registry.register_op(self._axis)
-            for i, name in enumerate(SERVE_AXES[self._axis]):
+            # a pinned decode_impl registers the axis as a SYSTEM op:
+            # samples are still recorded per bucket under the name that
+            # actually ran, but the controller never trials alternatives
+            # (the bench's fixed-arm pattern, now first-class)
+            vpe.registry.register_op(self._axis,
+                                     system=(decode_impl != "auto"))
+            # kernel-backed variants are only offered past the
+            # capability gate — an engine that would resolve them to
+            # the gather path anyway must not trial them as if distinct
+            names = [n for n in SERVE_AXES[self._axis]
+                     if self._pallas_ok or n not in kvcache.PAGED_KERNEL_IMPLS]
+            for i, name in enumerate(names):
                 vpe.registry.register_variant(
                     self._axis, name, fn=(lambda name=name: name), default=(i == 0))
         if vpe is not None and self.decode_horizon == "auto" \
@@ -715,13 +766,13 @@ class ContinuousBatchingEngine:
             self._set_bt = jax.jit(self._set_bt_fn, donate_argnums=0)
             self._set_bt_many = jax.jit(self._set_bt_many_fn, donate_argnums=0)
             self._set_len = jax.jit(self._set_len_fn, donate_argnums=0)
-            # the chunked-prefill jit: donate the pool so every chunk's
+            # the chunked-prefill jits, one per chunk-attention backend
+            # (the prefill_kernel axis): donate the pool so every chunk's
             # page scatter updates it in place; one specialization per
-            # padded chunk shape (power-of-two buckets)
-            self._prefill_chunk = jax.jit(
-                lambda p, pool, bt, t, b, n: model_lib.prefill_chunk_paged(
-                    cfg, p, pool, bt, t, b, n),
-                donate_argnums=1)
+            # padded chunk shape (power-of-two buckets) per backend.
+            # Built lazily via _prefill_chunk_fn so an engine that never
+            # selects "pallas" never traces it.
+            self._prefill_chunks: Dict[str, Callable] = {}
         if kv_layout == "paged":
             self.cache = model_lib.init_paged_cache(
                 cfg, slots, max_len, block_size, self.pages.trash_id)
@@ -757,6 +808,19 @@ class ContinuousBatchingEngine:
             for i, name in enumerate(names):
                 vpe.registry.register_variant(
                     "prefill_chunk", name, fn=(lambda name=name: name),
+                    default=(i == 0))
+        if vpe is not None and self._pallas_ok and prefill_kernel == "auto" \
+                and not vpe.registry.has_op("prefill_kernel"):
+            # the chunk-attention backend axis: "gather" (incumbent, the
+            # in-jit linearization) vs "pallas" (block-indirect kernel),
+            # keyed by the same prompt-length × occupancy bucket as
+            # prefill_chunk and fed from the same clean chunk walls.
+            # Only registered past the capability gate — otherwise every
+            # admission resolves to "gather" with no measurement to run.
+            vpe.registry.register_op("prefill_kernel")
+            for i, name in enumerate(SERVE_AXES["prefill_kernel"]):
+                vpe.registry.register_variant(
+                    "prefill_kernel", name, fn=(lambda name=name: name),
                     default=(i == 0))
         # -- shared-prefix KV cache (radix tree) ---------------------------
         self.prefix_cache: Optional[PrefixCache] = None
@@ -1375,6 +1439,55 @@ class ContinuousBatchingEngine:
             return 0, None, None
         return int(self.prefill_chunk), None, None
 
+    def _resolve_impl(self, name: str) -> str:
+        """Fallback ladder for decode variants: a kernel-backed name
+        resolves to "grouped" (whose paged read is the gather path)
+        whenever this engine fails the pallas capability gate — a pinned
+        or foreign-engine-selected "pallas" degrades, never crashes."""
+        if name in kvcache.PAGED_KERNEL_IMPLS and not self._pallas_ok:
+            return "grouped"
+        return name
+
+    def _resolve_kernel(self, name: str) -> str:
+        """Same ladder for the prefill chunk-attention backend."""
+        if name in kvcache.PAGED_KERNEL_IMPLS and not self._pallas_ok:
+            return "gather"
+        return name
+
+    def _select_prefill_kernel(self, S: int, occ: int):
+        """Resolve the chunk-attention backend for this admission and,
+        in auto mode, its ``prefill_kernel`` bucket + variant name.
+        Keyed by the SAME prompt-length × occupancy construction as
+        :meth:`_select_chunk` (the ISSUE's sibling-axis contract), so
+        the controller learns gather-vs-kernel per (chunk bucket ×
+        shard) configuration."""
+        if self.prefill_kernel != "auto":
+            return self._resolve_kernel(self.prefill_kernel), None, None
+        if self.vpe is None or not self._pallas_ok:
+            return "gather", None, None
+        bucket = prefill_chunk_bucket(S, occ, self.num_slots,
+                                      levels=self.occupancy_levels)
+        if self.slo_weight > 0:
+            bucket = bucket + self._slo_bucket()
+        bucket = bucket + self._shard_tail
+        name = self.vpe.controller.select("prefill_kernel", bucket)
+        return self._resolve_kernel(name), bucket, name
+
+    def _prefill_chunk_fn(self, kernel: str) -> Callable:
+        """The chunked-prefill jit for one chunk-attention backend
+        (built lazily; all live backends are summed by
+        :meth:`_prefill_jit_cache_size` for taint detection)."""
+        fn = self._prefill_chunks.get(kernel)
+        if fn is None:
+            cfg = self.cfg
+            fn = jax.jit(
+                lambda p, pool, bt, t, b, n, _k=kernel:
+                    model_lib.prefill_chunk_paged(
+                        cfg, p, pool, bt, t, b, n, kernel=_k),
+                donate_argnums=1)
+            self._prefill_chunks[kernel] = fn
+        return fn
+
     def _place_paged(self, i: int, req: Request, reuse_matched: int,
                      rbucket, variant: str, occ: int) -> None:
         """Paged admission = placement only, O(1) in matched AND prompt
@@ -1457,6 +1570,8 @@ class ContinuousBatchingEngine:
         slot.chunk_costs = []
         slot.chunk, slot.chunk_bucket, slot.chunk_variant = \
             self._select_chunk(S, occ)
+        slot.kernel, slot.kernel_bucket, slot.kernel_variant = \
+            self._select_prefill_kernel(S, occ)
 
     def _effective_chunk_budget(self) -> int:
         """Chunks allowed this engine step.  An explicit
@@ -1507,9 +1622,10 @@ class ContinuousBatchingEngine:
         toks = np.zeros((1, pad), np.int32)
         toks[0, :clen] = prompt[base:base + clen]
         row = self._bt_row(slot.pages)
+        prefill_fn = self._prefill_chunk_fn(slot.kernel)
         jits_before = self._prefill_jit_cache_size()
         t0 = time.perf_counter()
-        self.page_pool, logits = self._prefill_chunk(
+        self.page_pool, logits = prefill_fn(
             self.params, self.page_pool, jnp.asarray(row), jnp.asarray(toks),
             jnp.int32(base), jnp.int32(clen))
         # fence: an async chunk would leak its device time into the next
@@ -1563,8 +1679,21 @@ class ContinuousBatchingEngine:
                 self.vpe.controller.on_sample("prefill_chunk",
                                               slot.chunk_bucket,
                                               slot.chunk_variant)
+            if slot.kernel_bucket is not None:
+                # the kernel decision moves the same chunk compute the
+                # chunk-size decision does — feed the identical
+                # SLO-charged clean chunk walls under the identical
+                # taint discipline (sibling axis, same bucket family)
+                self.vpe.profiler.record("prefill_kernel",
+                                         slot.kernel_variant,
+                                         slot.kernel_bucket,
+                                         sum(slot.chunk_costs))
+                self.vpe.controller.on_sample("prefill_kernel",
+                                              slot.kernel_bucket,
+                                              slot.kernel_variant)
         slot.reuse_bucket = None
         slot.chunk_bucket = None
+        slot.kernel_bucket = None
         self._enter_decode(i, first)
         self._cache_extend(req, None, None, 0, slot)
         self._retire_if_done(i)
@@ -1578,7 +1707,7 @@ class ContinuousBatchingEngine:
         if self.pages is not None:
             fns += [self._gather_pages, self._write_pages, self._copy_page,
                     self._admit_paged, self._set_bt, self._set_bt_many,
-                    self._set_len, self._prefill_chunk,
+                    self._set_len, *self._prefill_chunks.values(),
                     self._swap_gather, self._swap_scatter]
         if self.prefix_cache is not None:
             fns += [self._insert_at, self._prefill_suffix]
@@ -1892,13 +2021,24 @@ class ContinuousBatchingEngine:
                                        jnp.asarray(c), jnp.asarray(p))
 
     def _decode_fn(self, bucket) -> Callable:
-        if self.vpe is not None:
+        if self.decode_impl != "auto":
+            # pinned backend: no per-bucket selection (the axis is a
+            # system op), and samples are recorded under the RESOLVED
+            # name so a shared VPE sees what actually ran
+            vname = self._resolve_impl(self.decode_impl)
+        elif self.vpe is not None:
             # per-call selection (returns in-flight trials too) — the
-            # eager analogue of the paper's patched function pointer
+            # eager analogue of the paper's patched function pointer.
+            # Bookkeeping keeps the controller's selected name (so its
+            # trial accounting converges); the jit below is keyed by the
+            # RESOLVED name — on this engine a gated-out kernel variant
+            # IS the grouped step, so the walls recorded for it are
+            # truthful either way.
             vname = self.vpe.controller.select(self._axis, bucket)
         else:
             vname = self._default_variant
         self._last_variant = vname
+        vname = self._resolve_impl(vname)
         fn = self._decode_fns.get(vname)
         self._decode_fn_created = fn is None
         if fn is None:
@@ -1939,11 +2079,14 @@ class ContinuousBatchingEngine:
     def _fused_fn(self, bucket, horizon: int) -> Callable:
         """The fused-horizon analogue of :meth:`_decode_fn`: one jitted
         H-step on-device loop per (decode-attention variant, H)."""
-        if self.vpe is not None:
+        if self.decode_impl != "auto":
+            vname = self._resolve_impl(self.decode_impl)
+        elif self.vpe is not None:
             vname = self.vpe.controller.select(self._axis, bucket)
         else:
             vname = self._default_variant
         self._last_variant = vname
+        vname = self._resolve_impl(vname)
         key = (vname, horizon)
         fn = self._fused_fns.get(key)
         self._fused_fn_created = fn is None

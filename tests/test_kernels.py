@@ -236,3 +236,193 @@ class TestPagedAttention:
         got = ref.paged_attention_ref(q, kp, vp, bt, lengths)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
+
+    def test_decode_kernel_read_dtype_quantizes_kv(self):
+        """The engine's paged decode gathers pages at bf16
+        (SLOT_CACHE_DTYPE) and ``decode_attention`` additionally casts
+        the softmax probabilities to the cache dtype before the value
+        einsum.  With read_dtype set the kernel reproduces BOTH
+        quantizations (two-phase body: final stats first, then a
+        re-score pass that accumulates bf16(p) @ bf16(v)), so it must
+        match the real serve gather path — not just an f32 oracle over
+        pre-quantized pools — to well under the ~4e-3 gap that flipped
+        greedy tokens when p stayed in f32.  Exact end-to-end greedy
+        parity rides on this and is proven by TestEngineKernelVariants
+        below."""
+        from repro.kernels.paged_attention import paged_attention_pallas
+        from repro.models import kvcache
+        rng = np.random.default_rng(5)
+        B, Hq, Hkv, bs, nb, D = 2, 4, 2, 8, 4, 32
+        kp, vp = self._pool(rng, B * nb, Hkv, bs, D)
+        q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)).astype(np.float32))
+        bt = jnp.asarray(np.arange(B * nb, dtype=np.int32).reshape(B, nb))
+        lengths = jnp.asarray(np.array([13, 29], np.int32))
+        quant = kvcache.SLOT_CACHE_DTYPE
+        kg, vg = kvcache.paged_gather_layer(kp, vp, bt, out_dtype=quant)
+        want = kvcache.decode_attention(q, kg, vg, lengths)
+        got = paged_attention_pallas(q, kp, vp, bt, lengths,
+                                     read_dtype=quant)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-4, atol=5e-4)
+
+
+class TestKernelShardContract:
+    """docs/sharding.md head-slice contract: under mp each shard's
+    kernel sees its LOCAL Hkv/mp head slice with the full unsharded
+    page axis.  Running the kernel per slice and concatenating the
+    matching q-head groups must equal the full-head kernel — the
+    property that makes shard_map-free jit sharding of the pallas
+    variants legal whenever Hkv % mp == 0."""
+
+    Hq, Hkv, bs, nb, D = 8, 4, 8, 4, 32
+    group = Hq // Hkv   # q heads h*group:(h+1)*group attend kv head h
+
+    def _data(self, B, C=1, seed=7):
+        rng = np.random.default_rng(seed)
+        N = B * self.nb
+        kp = jnp.asarray(rng.standard_normal(
+            (N, self.Hkv, self.bs, self.D)).astype(np.float32))
+        vp = jnp.asarray(rng.standard_normal(
+            (N, self.Hkv, self.bs, self.D)).astype(np.float32))
+        q = jnp.asarray(rng.standard_normal(
+            (B, self.Hq, C, self.D)).astype(np.float32))
+        bt = jnp.asarray(rng.integers(0, N, (B, self.nb)).astype(np.int32))
+        return kp, vp, q, bt
+
+    def _head_slices(self, mp):
+        """(q_slice, kv_slice) per shard for an Hkv % mp == 0 split."""
+        kv_per = self.Hkv // mp
+        for s in range(mp):
+            kv = slice(s * kv_per, (s + 1) * kv_per)
+            qs = slice(kv.start * self.group, kv.stop * self.group)
+            yield qs, kv
+
+    @pytest.mark.parametrize("mp", [1, 2])
+    def test_decode_kernel_shards_by_head_slice(self, mp):
+        from repro.kernels.paged_attention import paged_attention_pallas
+        kp, vp, q, bt = self._data(B=2)
+        lengths = jnp.asarray(np.array([11, 27], np.int32))
+        full = paged_attention_pallas(q, kp, vp, bt, lengths)
+        parts = [paged_attention_pallas(q[:, qs], kp[:, kv], vp[:, kv],
+                                        bt, lengths)
+                 for qs, kv in self._head_slices(mp)]
+        got = jnp.concatenate(parts, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("mp", [1, 2])
+    def test_prefill_kernel_shards_by_head_slice(self, mp):
+        from repro.kernels.paged_attention import paged_prefill_attention_pallas
+        kp, vp, q, bt = self._data(B=2, C=12, seed=8)
+        base = jnp.asarray(np.array([4, 16], np.int32))
+        full = paged_prefill_attention_pallas(q, kp, vp, bt, base,
+                                              chunk_len=12)
+        parts = [paged_prefill_attention_pallas(
+                     q[:, qs], kp[:, kv], vp[:, kv], bt, base, chunk_len=12)
+                 for qs, kv in self._head_slices(mp)]
+        got = jnp.concatenate(parts, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+
+    @staticmethod
+    def _fake_mesh(shape, axes=("dp", "mp")):
+        from jax.sharding import Mesh
+
+        class Dev:
+            def __init__(self, i):
+                self.id = i
+        n = int(np.prod(shape))
+        return Mesh(np.array([Dev(i) for i in range(n)],
+                             dtype=object).reshape(shape), axes)
+
+    def test_kernel_shard_ok(self):
+        from repro.distributed.sharding import kernel_shard_ok
+        fake_mesh = self._fake_mesh
+        assert kernel_shard_ok(2, None)                 # no mesh
+        assert kernel_shard_ok(2, fake_mesh((1, 1)))    # trivial mp
+        assert kernel_shard_ok(2, fake_mesh((1, 2)))    # 2 % 2 == 0
+        assert kernel_shard_ok(4, fake_mesh((2, 2)))    # dp ignored
+        assert not kernel_shard_ok(2, fake_mesh((1, 3)))   # replicated KV
+        assert not kernel_shard_ok(3, fake_mesh((1, 2)))
+
+
+class TestEngineKernelVariants:
+    """Serve-engine integration on one CPU device (tier-1): the pallas
+    backends are controller-selectable, fall back down the capability
+    ladder, and keep token-exact greedy parity with the gather paths."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        from repro.configs import ARCHS
+        from repro.models import model
+        cfg = ARCHS["qwen3-8b"].reduced()
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def _run(self, eng, vocab):
+        from repro.runtime.serve_loop import Request
+        rng = np.random.default_rng(11)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, vocab, int(rng.integers(5, 14))
+                                            ).astype(np.int32),
+                        max_new_tokens=6)
+                for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        eng.check_kv()          # zero leaked pages at drain
+        return {r.rid: r.out for r in done}
+
+    @pytest.mark.parametrize("kv_layout", ["paged", "auto"])
+    def test_pallas_token_parity(self, setup, kv_layout):
+        """Pinned pallas on both axes == pinned gather, across chunked
+        prefill and a fused decode horizon."""
+        from repro.runtime.serve_loop import ContinuousBatchingEngine
+        cfg, params = setup
+        outs = {}
+        for decode_impl, prefill_kernel in (("grouped", "gather"),
+                                            ("pallas", "pallas")):
+            eng = ContinuousBatchingEngine(
+                cfg, params, slots=2, max_len=48, kv_layout=kv_layout,
+                block_size=8, prefill_chunk=8, decode_horizon=4,
+                decode_impl=decode_impl, prefill_kernel=prefill_kernel)
+            outs[decode_impl] = self._run(eng, cfg.vocab_size)
+        assert outs["pallas"] == outs["grouped"]
+
+    def test_capability_gate_and_resolution(self, setup):
+        """paged engine on CPU passes the interpret-mode probe; gating
+        it off resolves pallas down the ladder; a contiguous engine is
+        never pallas-capable (no pages to index)."""
+        from repro.runtime.serve_loop import ContinuousBatchingEngine
+        cfg, params = setup
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=48,
+                                       kv_layout="paged", block_size=8)
+        assert eng._pallas_ok
+        assert eng._resolve_impl("pallas") == "pallas"
+        assert eng._resolve_kernel("pallas") == "pallas"
+        eng._pallas_ok = False
+        assert eng._resolve_impl("pallas") == "grouped"
+        assert eng._resolve_kernel("pallas") == "gather"
+        cont = ContinuousBatchingEngine(cfg, params, slots=2, max_len=48)
+        assert not cont._pallas_ok
+
+    def test_auto_axes_register_pallas_variants(self, setup):
+        """kv_layout=paged + vpe: both measured axes expose the pallas
+        variant to the controller; pinning an axis registers it as a
+        system op (recorded, never trialed)."""
+        from repro.core import VPE
+        from repro.runtime.serve_loop import ContinuousBatchingEngine
+        cfg, params = setup
+        vpe = VPE()
+        ContinuousBatchingEngine(cfg, params, slots=2, max_len=48,
+                                 kv_layout="paged", block_size=8, vpe=vpe)
+        assert set(vpe.registry.op("serve_decode_impl").variants) >= {
+            "grouped", "flat", "pallas"}
+        assert set(vpe.registry.op("prefill_kernel").variants) == {
+            "gather", "pallas"}
+        vpe2 = VPE()
+        ContinuousBatchingEngine(cfg, params, slots=2, max_len=48,
+                                 kv_layout="paged", block_size=8, vpe=vpe2,
+                                 decode_impl="pallas", prefill_kernel="pallas")
+        assert vpe2.registry.op("serve_decode_impl").system
+        assert not vpe2.registry.has_op("prefill_kernel")

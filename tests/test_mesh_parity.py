@@ -266,6 +266,49 @@ class TestMeshParity:
         got = _run(group, cfg.vocab_size)
         assert got == want
 
+    @pytest.mark.parametrize("kv_layout", ("paged", "auto"))
+    @pytest.mark.parametrize("mesh_shape", ((1, 1), (1, 2), (2, 1)))
+    def test_pallas_backend_token_parity(self, setup, mesh_shape, kv_layout):
+        """Pinned Pallas on both kernel axes (chunked prefill + fused
+        horizon) == the unsharded gather baseline, token for token.
+        Hkv=2 divides mp=2, so the (1,2) case runs the kernel on true
+        Hkv/mp head slices per shard (docs/kernel_variants.md)."""
+        cfg, params = setup
+        want = _baseline(cfg, params, kv_layout)
+        eng = make_serve_engine(cfg, params, mesh_shape=mesh_shape,
+                                slots=2, max_len=48, kv_layout=kv_layout,
+                                block_size=8, prefill_chunk=8,
+                                decode_horizon=4, decode_impl="pallas",
+                                prefill_kernel="pallas")
+        got = _run(eng, cfg.vocab_size)
+        assert got == want, f"pallas mesh {mesh_shape} diverged on {kv_layout}"
+
+    @pytest.mark.skipif(NDEV < 4, reason="needs 4 devices for mp=4")
+    def test_pallas_indivisible_heads_fall_back(self, setup):
+        """Hkv=2 at mp=4 forces KV replication (serve_kv_spec), so
+        kernel_shard_ok gates Pallas off; a pinned 'pallas' must resolve
+        down the ladder to the gather path and keep parity, not crash."""
+        cfg, params = setup
+        want = _baseline(cfg, params, "paged")
+        eng = make_serve_engine(cfg, params, mesh_shape=(1, 4), slots=2,
+                                max_len=48, kv_layout="paged", block_size=8,
+                                decode_impl="pallas", prefill_kernel="pallas")
+        assert not eng._pallas_ok
+        got = _run(eng, cfg.vocab_size)
+        assert got == want
+
+    def test_pallas_pinned_on_contiguous_resolves_to_grouped(self, setup):
+        """No pages to index: a contiguous engine pins 'pallas' through
+        the first fallback rung (delegates to the grouped path)."""
+        cfg, params = setup
+        want = _baseline(cfg, params, "contiguous")
+        eng = make_serve_engine(cfg, params, mesh_shape=(1, 2), slots=2,
+                                max_len=48, kv_layout="contiguous",
+                                decode_impl="pallas")
+        assert not eng._pallas_ok
+        got = _run(eng, cfg.vocab_size)
+        assert got == want
+
     def test_shard_tail_reaches_dispatch_keys(self, setup):
         """A sharded engine's decode selections must be keyed per mesh
         configuration (the tentpole's VPE contract)."""
