@@ -7,6 +7,21 @@ pressure.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
 
+Part 9 — speculative decoding sweep (what PR 9's draft-and-verify
+buys, and the regime where it must refuse to pay): a repetitive
+decode-bound workload (two shared prompt templates, long generations —
+the n-gram proposer's home turf) and an adversarial zero-repetition
+workload (fresh unique prompts every pass, so drafts essentially never
+land), each served with spec_draft off / pinned 4 / auto over a pinned
+16-step fused horizon.  On the repetitive workload the best
+speculative arm must clear >= 1.3x aggregate tok/s over the plain
+fused-horizon engine (the best non-speculative fixed choice from
+part 5) at exact greedy parity; on the adversarial workload the
+measured accept rate collapses and auto must back off to "off"
+(recorded per bucket) rather than keep paying the wide verify pass.
+Auto lands within 10% of the best arm on BOTH workloads; every arm
+drains leak-free (cross-structure page audit).
+
 Part 8 — kernel backend sweep (what PR 8's measured variants buy): the
 paged engine served with both kernel axes pinned to gather, pinned to
 pallas, and measured (auto), on a decode-bound and a prefill-heavy
@@ -126,7 +141,7 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 # tooling can read the whole file without per-part key knowledge.  Bump
 # SCHEMA on envelope changes, PR per growth session.
 SCHEMA = 1
-PR = 8
+PR = 9
 
 
 def append_record(bench: str, metrics: dict, *, pr: int = PR) -> None:
@@ -915,6 +930,195 @@ def bench_kernel_sweep(cfg, params) -> bool:
     return ok
 
 
+# -- part 9 (PR 9): speculative decoding sweep (off vs fixed vs auto) --------
+SPEC_ARMS = ("off", "4", "16", "auto")
+# auto's verify spans (+ the "off" incumbent).  16 FIRST: the controller
+# blind-trials untried variants in registration order, and over a
+# 16-step fused horizon the wide span is the one with headroom (a
+# 4-token verify replaces a 16-token fused call — even at full accept it
+# commits a quarter of the tokens for most of the dispatch cost, which
+# is exactly why the pinned-4 arm is in the sweep as the cautionary
+# middle ground), so the promising candidate must not queue behind it
+SPEC_CHOICES = (16, 4)
+SPEC_HORIZON = 16                # part 5's best fixed horizon, every arm
+SPEC_REPS = 4
+SPEC_WARM = 8                    # compiles + proposer warm-up + axis trials
+
+
+def _spec_repetitive(vocab) -> List[Request]:
+    """Two shared 16-token templates, long generations: after one warm
+    pass the proposer's table holds each template's whole greedy stream,
+    so drafts replay it and verify calls commit multi-token runs.  The
+    SAME workload every pass — repetition is the point.  Two waves over
+    SLOTS (not a deep queue): queue depth is a component of the spec
+    axis's bucket key, and a deep queue would scatter auto's evidence
+    across queue-depth levels the steady state never revisits."""
+    rng = np.random.default_rng(7)
+    tpls = [rng.integers(0, vocab, 16).astype(np.int32) for _ in range(2)]
+    return [Request(rid=i, prompt=tpls[i % 2].copy(), max_new_tokens=80)
+            for i in range(2 * SLOTS)]
+
+
+def _spec_adversarial(rng, vocab) -> List[Request]:
+    """Zero repetition: fresh unique prompts drawn from an ADVANCING rng
+    (a repeated pass would warm the table and stop being adversarial),
+    so n-gram drafts essentially never land."""
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab,
+                                        int(rng.integers(8, 21))
+                                        ).astype(np.int32),
+                    max_new_tokens=48) for i in range(16)]
+
+
+def _spec_engine(cfg, params, arm):
+    # same isolation discipline as the horizon sweep: every arm gets the
+    # same VPE with the decode-attention axis pinned system-side, and
+    # the fused horizon pinned to part 5's decode-bound winner, so
+    # off-vs-fixed-vs-auto isolates the spec_draft axis alone.
+    # min_samples is deliberately high for this axis: a spec trial's
+    # outcome depends on proposer-table warmth (an early trial measures
+    # the cold table, not the span), so the incumbent must accumulate
+    # evidence — i.e. the table must see the workload — before the
+    # first blind offload fires
+    vpe = VPE(controller_kwargs=dict(min_samples=6, trial_samples=4,
+                                     hysteresis=0.02, reexplore_period=24))
+    vpe.registry.register_op("serve_decode_impl", system=True)
+    for i, name in enumerate(SERVE_AXES["serve_decode_impl"]):
+        vpe.registry.register_variant("serve_decode_impl", name,
+                                      fn=(lambda name=name: name),
+                                      default=(i == 0))
+    spec = arm if arm in ("off", "auto") else int(arm)
+    # occupancy_levels=2: the sweep's workloads hold occupancy near full
+    # during the phase that matters (decode-bound steady state), so the
+    # default 4-level occupancy key only fragments the spec axis's
+    # trials across buckets the workload barely revisits
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=SLOTS, max_len=MAX_LEN, kv_layout="paged",
+        block_size=16, decode_horizon=SPEC_HORIZON, occupancy_levels=2,
+        spec_draft=spec, spec_choices=SPEC_CHOICES, vpe=vpe)
+    return eng, vpe
+
+
+def _run_spec_pass(eng, reqs) -> dict:
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    return {
+        "tok_per_s": useful_tokens(reqs) / wall,
+        "spec_calls": st.spec_calls,
+        "accept_rate": round(st.accepted_tokens / st.draft_tokens, 3)
+                       if st.draft_tokens else 0.0,
+        "accept_hist": {str(k): v for k, v in sorted(st.accept_hist.items())},
+        "outs": {r.rid: list(map(int, r.out)) for r in reqs},
+    }
+
+
+def _bench_spec_workload(cfg, params, passes) -> dict:
+    """One workload (a list of per-pass request lists, shared by every
+    arm so parity is comparable rep-by-rep) over the three arms; reps
+    interleaved across arms, tuning confined to the warm passes."""
+    from repro.core import bucket_label
+    engines = {}
+    for arm in SPEC_ARMS:
+        eng, vpe = _spec_engine(cfg, params, arm)
+        for p in range(SPEC_WARM):
+            _run_spec_pass(eng, copy.deepcopy(passes[p]))
+        vpe.controller.reexplore_period = 0
+        engines[arm] = (eng, vpe)
+    results: dict = {}
+    parity = True
+    for rep in range(SPEC_REPS):
+        outs = {}
+        for arm, (eng, _vpe) in engines.items():
+            eng.stats = type(eng.stats)()
+            r = _run_spec_pass(eng, copy.deepcopy(passes[SPEC_WARM + rep]))
+            outs[arm] = r.pop("outs")
+            if arm not in results \
+                    or r["tok_per_s"] > results[arm]["tok_per_s"]:
+                results[arm] = r
+        # arms at the same rep served the SAME requests — outputs must
+        # match token for token whatever the drafts did
+        parity = parity and all(o == outs["off"] for o in outs.values())
+    for arm, (eng, _vpe) in engines.items():
+        # leak-free drain on every arm: rejected-tail rollback really
+        # returned the reserved pages the accept mask never reached
+        # (check_kv audits pool refcounts == tree + live block tables;
+        # drained slots must hold no pages at all)
+        eng.check_kv()
+        assert all(not s.pages for s in eng.slots)
+    _eng, vpe = engines["auto"]
+    results["auto"]["selected"] = {
+        bucket_label(b): d.selected
+        for (op, b), d in vpe.controller._decisions.items()
+        if op == "spec_draft"}
+    results["parity"] = parity
+    return results
+
+
+def bench_spec_sweep(cfg, params) -> bool:
+    """Speculative decoding sweep: repetitive-workload speedup over the
+    best non-speculative fixed horizon, adversarial-workload back-off,
+    parity + clean drains everywhere."""
+    record = {"slots": SLOTS, "arms": list(SPEC_ARMS),
+              "spec_choices": list(SPEC_CHOICES),
+              "decode_horizon": SPEC_HORIZON}
+    adv_rng = np.random.default_rng(11)
+    ok = True
+    for wname, passes in (
+            ("repetitive",
+             [_spec_repetitive(cfg.vocab_size)
+              for _ in range(SPEC_WARM + SPEC_REPS)]),
+            ("adversarial",
+             [_spec_adversarial(adv_rng, cfg.vocab_size)
+              for _ in range(SPEC_WARM + SPEC_REPS)])):
+        res = _bench_spec_workload(cfg, params, passes)
+        parity = res.pop("parity")
+        rates = {k: v["tok_per_s"] for k, v in res.items()}
+        best_arm = max(rates, key=rates.get)
+        auto_ratio = rates["auto"] / rates[best_arm]
+        sel = res["auto"]["selected"]
+        w_ok = parity and auto_ratio >= 0.9
+        record_w = {
+            "results": res,
+            "best_arm": best_arm,
+            "auto_vs_best": round(auto_ratio, 3),
+            "greedy_parity": parity,
+        }
+        if wname == "repetitive":
+            # the tentpole claim: speculation must clear 1.3x over the
+            # plain engine at ITS best fixed horizon (the off arm)
+            speedup = max(rates[a] for a in SPEC_ARMS
+                          if a != "off") / rates["off"]
+            record_w["best_spec_speedup_vs_off"] = round(speedup, 2)
+            w_ok = w_ok and speedup >= 1.3
+        else:
+            # back-off evidence: at least one concluded bucket chose to
+            # stop speculating once the accept rate collapsed
+            backed_off = any(v == "off" for v in sel.values())
+            record_w["backed_off"] = backed_off
+            w_ok = w_ok and backed_off
+        ok = ok and w_ok
+        record[wname] = record_w
+        for arm in SPEC_ARMS:
+            print(f"# spec {wname:>12} {arm:>5}: "
+                  f"{res[arm]['tok_per_s']:8.1f} tok/s, accept "
+                  f"{res[arm]['accept_rate']:5.1%}, "
+                  f"{res[arm]['spec_calls']} verify calls")
+        print(f"# spec {wname}: best arm {best_arm}, auto at "
+              f"{auto_ratio:.2f}x of best, parity "
+              f"{'exact' if parity else 'BROKEN'}; auto selections: {sel}")
+    record["pass"] = ok
+    append_record("serve_spec_sweep", record)
+    print(f"# spec sweep: {'PASS' if ok else 'FAIL'} "
+          f"(need >=1.3x over off on repetitive, auto within 10% of best "
+          f"on both workloads, back-off recorded on adversarial, exact "
+          f"parity, leak-free drains)")
+    return ok
+
+
 def main(n_requests: int = 24) -> None:
     cfg = get_config("qwen3-8b").reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -951,8 +1155,9 @@ def main(n_requests: int = 24) -> None:
     ok_priority = bench_priority_mix(cfg, params)
     ok_shard = bench_shard_sweep()
     ok_kernel = bench_kernel_sweep(cfg, params)
+    ok_spec = bench_spec_sweep(cfg, params)
     if not (ok and ok_prefix and ok_paged and ok_chunked and ok_horizon
-            and ok_priority and ok_shard and ok_kernel):
+            and ok_priority and ok_shard and ok_kernel and ok_spec):
         sys.exit(1)
 
 

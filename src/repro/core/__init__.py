@@ -19,9 +19,10 @@ from .dispatch import DEFAULT, VPE, VPEFunction
 from .profiler import Profiler, SampleSet, Welford
 from .registry import GLOBAL, OpEntry, Registry, Variant, reset_global
 from .shape_class import (
-    bucket_label, decode_horizon_bucket, kv_layout_bucket, occupancy_bucket,
-    pad_to_bucket, prefill_chunk_bucket, prefix_len_bucket,
-    queue_depth_bucket, shape_bucket, shard_bucket, slo_pressure_bucket)
+    accept_rate_level, bucket_label, decode_horizon_bucket, kv_layout_bucket,
+    occupancy_bucket, pad_to_bucket, prefill_chunk_bucket, prefix_len_bucket,
+    queue_depth_bucket, shape_bucket, shard_bucket, slo_pressure_bucket,
+    spec_accept_bucket)
 
 __all__ = [
     "VPE",
@@ -46,6 +47,8 @@ __all__ = [
     "prefill_chunk_bucket",
     "queue_depth_bucket",
     "decode_horizon_bucket",
+    "accept_rate_level",
+    "spec_accept_bucket",
     "slo_pressure_bucket",
     "shard_bucket",
 ]

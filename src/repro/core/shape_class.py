@@ -106,6 +106,10 @@ def bucket_label(bucket: Tuple) -> str:
         _, qb, level, total = bucket
         q = "q0" if qb == 0 else f"q[{2 ** (qb - 1)},{2 ** qb})"
         return f"horizon:{q}xocc{level}/{total}slots" + suffix
+    if bucket and bucket[0] == "spec":
+        _, qb, level, total, acc = bucket
+        q = "q0" if qb == 0 else f"q[{2 ** (qb - 1)},{2 ** qb})"
+        return f"spec:{q}xocc{level}/{total}slotsxacc{acc}" + suffix
     b, ranks = bucket
     lo, hi = 2 ** b, 2 ** (b + 1)
     return f"[{lo},{hi})elems/rank{','.join(map(str, ranks))}" + suffix
@@ -206,6 +210,51 @@ def decode_horizon_bucket(queue_depth: int, active: int, total: int, *,
     q = queue_depth_bucket(queue_depth)
     o = occupancy_bucket(active, total, levels=levels)
     return ("hzn", q, o[1], total)
+
+
+def accept_rate_level(accept_rate: Optional[float]) -> int:
+    """Quantize a measured draft-acceptance rate to a coarse level.
+
+    Three levels are enough to separate the regimes that flip the
+    speculation decision: below ~0.3 the drafts mostly miss (one verify
+    pass buys barely more than one token — speculation loses to the
+    plain fused horizon), above ~0.7 they mostly land (the verify pass
+    amortizes over most of its span), and the middle band is where the
+    measured wall has to decide.  ``None`` (no signal yet — a freshly
+    started engine) maps to the middle band so the controller's first
+    trials are not keyed off a fictitious extreme.
+    """
+    if accept_rate is None:
+        return 1
+    if accept_rate < 0.3:
+        return 0
+    if accept_rate < 0.7:
+        return 1
+    return 2
+
+
+def spec_accept_bucket(queue_depth: int, active: int, total: int,
+                       accept_rate: Optional[float] = None, *,
+                       levels: int = 4) -> Tuple:
+    """Dispatch key for the serve engine's ``spec_draft`` axis.
+
+    Extends :func:`decode_horizon_bucket` with one more measured input:
+    the engine's recent draft-acceptance rate
+    (:func:`accept_rate_level`).  Whether a speculative verify span
+    beats the plain fused horizon depends on the same load inputs the
+    horizon axis uses (queue depth: a long device call delays waiters;
+    occupancy: more live slots amortize it) AND on how often the
+    n-gram drafts actually land — which is a property of the *workload*
+    the runtime can only know by measuring, exactly the paper's learned
+    input-size correlation with accept rate as the learned dimension.
+    Keying the decision by accept level is what lets one engine learn
+    "speculate on the repetitive traffic, back off on the adversarial
+    traffic" as two separate table rows instead of one averaged-out
+    policy.
+    """
+    q = queue_depth_bucket(queue_depth)
+    o = occupancy_bucket(active, total, levels=levels)
+    return ("spec", q, o[1], total, accept_rate_level(accept_rate))
 
 
 def slo_pressure_bucket(queued_interactive: int, queued_batch: int) -> Tuple:

@@ -28,6 +28,21 @@ kernel backends (--decode-impl / --prefill-kernel):
   pinned or selected 'pallas' degrades to the gather path when the
   layout has no pages, the platform fails the pallas probe, or the
   mesh's Hkv % mp != 0 forces KV replication — it never crashes.
+
+speculative decoding (--spec-draft):
+  an n-gram table drafted from emitted tokens proposes up to S-1
+  candidates per slot; ONE verify pass scores all S positions and
+  commits the longest matching prefix + one correction token — greedy
+  output is token-exact vs the plain path by construction.  'off'
+  (default) disables it, an INT pins the verify span, 'auto' registers
+  a VPE axis keyed by queue-depth x occupancy x measured accept-rate
+  level that learns per bucket when speculation beats plain fused
+  horizons.  Fallback ladder (same no-crash pin-resolution discipline
+  as --decode-impl): --kv-layout contiguous (no block table to write
+  candidates through) and --decode-horizon 1 (multi-token device calls
+  opted out) resolve any requested spec-draft to 'off'; a span larger
+  than a slot's remaining budget falls back to the plain path for that
+  step — it never crashes.
 """
 
 
@@ -75,6 +90,13 @@ def main() -> None:
                          "wall time: long horizons amortize host dispatch "
                          "when the queue is empty, 1 keeps admission "
                          "latency bounded under load")
+    ap.add_argument("--spec-draft", default="off",
+                    help="speculative verify span: 'off', an int S "
+                         "(one pass scores S positions: last committed "
+                         "token + S-1 n-gram drafts), or 'auto' — a VPE "
+                         "axis keyed by queue-depth x occupancy x accept-"
+                         "rate bucket, fed per committed token (see "
+                         "epilog for the fallback ladder)")
     ap.add_argument("--decode-impl",
                     choices=["grouped", "flat", "pallas", "auto"],
                     default="auto",
@@ -127,6 +149,8 @@ def main() -> None:
              else int(args.prefill_chunk))
     horizon = (args.decode_horizon if args.decode_horizon == "auto"
                else int(args.decode_horizon))
+    spec = (args.spec_draft if args.spec_draft in ("off", "auto")
+            else int(args.spec_draft))
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -150,7 +174,8 @@ def main() -> None:
             prefix_blocks=args.prefix_blocks if args.prefix_cache else 0,
             block_size=args.block_size, kv_layout=args.kv_layout,
             prefill_chunk=chunk, chunks_per_step=args.chunks_per_step,
-            decode_horizon=horizon, page_budget=args.page_budget,
+            decode_horizon=horizon, spec_draft=spec,
+            page_budget=args.page_budget,
             swap=args.swap, slo_weight=args.slo_weight,
             decode_impl=args.decode_impl, prefill_kernel=args.prefill_kernel)
         for r in reqs:
@@ -159,6 +184,12 @@ def main() -> None:
         mesh_note = f" [mesh {dp}x{mp}]" if (dp, mp) != (1, 1) else ""
         print(f"completed {len(done)} requests{mesh_note}; "
               f"{engine.stats.summary()}")
+        stats = engine.stats
+        if stats.spec_calls:
+            hist = ", ".join(f"{k}:{v}" for k, v in
+                             sorted(stats.accept_hist.items()))
+            print(f"spec accept histogram (drafts accepted -> slot-calls): "
+                  f"{hist}")
         return
     if (dp, mp) != (1, 1):
         ap.error("--mesh requires --continuous")

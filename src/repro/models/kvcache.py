@@ -420,6 +420,101 @@ def append_token_paged(
     return k_out, v_out
 
 
+def append_tokens_paged(
+    pool_k_l: jax.Array, pool_v_l: jax.Array, k_new: jax.Array,
+    v_new: jax.Array, block_table: jax.Array, length: jax.Array,
+    write_mask: jax.Array, trash: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Write a SPAN of decode-position K/V into each slot's pages (one
+    layer) — the multi-position generalization of
+    :func:`append_token_paged` that the speculative verify pass uses:
+    candidate ``j`` of slot ``i`` lands at absolute position
+    ``length[i] + j``.
+
+    k_new/v_new: (B, Hkv, S, D); ``write_mask`` (B, S) selects which
+    (slot, candidate) writes are real — everything else (free slots,
+    candidates past a slot's token budget) is redirected to the trash
+    page, exactly the single-token function's non-live discipline.  The
+    engine pre-reserves pages covering every maskable position, so real
+    writes always land in pages the slot privately owns; trash-page
+    collisions across slots are benign (the trash row is never read).
+    """
+    B, _, S, _ = k_new.shape
+    bs = pool_k_l.shape[2]
+    nb = block_table.shape[1]
+    pos = length[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    col = jnp.clip(pos // bs, 0, nb - 1)
+    page = jnp.where(write_mask > 0,
+                     jnp.take_along_axis(block_table, col, axis=1), trash)
+    off = pos % bs
+    k_vals = k_new.transpose(0, 2, 1, 3).astype(pool_k_l.dtype)  # (B,S,Hkv,D)
+    v_vals = v_new.transpose(0, 2, 1, 3).astype(pool_v_l.dtype)
+    return (pool_k_l.at[page, :, off].set(k_vals),
+            pool_v_l.at[page, :, off].set(v_vals))
+
+
+def update_layer_cache_multi(
+    k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
+    v_new: jax.Array, length: jax.Array, write_mask: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Masked multi-position insert into a per-slot contiguous cache —
+    the contiguous twin of :func:`append_tokens_paged` for the mixed
+    (``kv_layout=auto``) speculative verify pass.
+
+    k_new/v_new: (B, Hkv, S, D) writing positions ``length[i] + j``;
+    ``write_mask`` (B, S) — masked-off positions are DROPPED (their
+    index is pushed out of bounds and the scatter uses ``mode="drop"``),
+    not clamped: a clamped write near ``max_len`` would slide backward
+    over committed positions, which is exactly the corruption a
+    ``dynamic_update_slice`` would have silently performed here.
+    """
+    B, Hkv, T, D = k_cache.shape
+    S = k_new.shape[2]
+    pos = length[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    pos = jnp.where(write_mask > 0, pos, T)                   # T = dropped
+
+    def upd(c, n, p):
+        return c.at[:, p].set(n.astype(c.dtype), mode="drop")
+
+    return (jax.vmap(upd)(k_cache, k_new, pos),
+            jax.vmap(upd)(v_cache, v_new, pos))
+
+
+def spec_verify_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, length: jax.Array,
+    *, window: Optional[int] = None, scale: Optional[float] = None,
+) -> jax.Array:
+    """Multi-query decode attention for the speculative verify pass.
+
+    q: (B, Hq, S, D) where row ``j`` sits at absolute position
+    ``length[i] + j`` (candidate ``j`` of slot ``i``); k/v_cache:
+    (B, Hkv, T, D) with the span's own keys already written (the
+    write-then-attend ordering of the paged decode step).  Row ``j``
+    masks ``col <= length + j`` — with S=1 this is literally
+    :func:`decode_attention`'s mask, and the grouped GQA layout + f32
+    accumulators are identical, which is what keeps a verified token's
+    logits equal to the sequential step's logits.
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k_cache.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, group, S, D)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    row = length[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    col = jnp.arange(T)
+    mask = col[None, None, :] <= row[:, :, None]              # (B, S, T)
+    if window is not None:
+        mask &= col[None, None, :] > row[:, :, None] - window
+    s = jnp.where(mask[:, None, None], s, float("-inf"))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
 def decode_attention(
     q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, length: jax.Array,
     *, window: Optional[int] = None, scale: Optional[float] = None,

@@ -235,6 +235,28 @@ def decode_steps_mixed(cfg: ModelConfig, params: Any, cache: Any, pool: Any,
         horizon, decode_impl=decode_impl)
 
 
+# -- speculative decoding (one-pass draft verification) -----------------------
+
+def spec_verify_paged(cfg: ModelConfig, params: Any, pool: Any, cache: Any,
+                      tokens: jax.Array, live: jax.Array, eos_ids: jax.Array,
+                      budget: jax.Array
+                      ) -> Tuple[Any, Any, jax.Array, jax.Array, jax.Array]:
+    """Score an S-token candidate span per slot in one pass over the
+    paged layout and commit the longest verified prefix + one correction
+    token (same return contract as :func:`decode_steps_paged`)."""
+    return _slot_module(cfg).spec_verify_paged(
+        cfg, params, pool, cache, tokens, live, eos_ids, budget)
+
+
+def spec_verify_mixed(cfg: ModelConfig, params: Any, cache: Any, pool: Any,
+                      tokens: jax.Array, use_paged: jax.Array,
+                      live: jax.Array, eos_ids: jax.Array, budget: jax.Array
+                      ) -> Tuple[Any, Any, jax.Array, jax.Array, jax.Array]:
+    """Speculative verify for ``kv_layout=auto``."""
+    return _slot_module(cfg).spec_verify_mixed(
+        cfg, params, cache, pool, tokens, use_paged, live, eos_ids, budget)
+
+
 def prefill(cfg: ModelConfig, params: Any, batch: Dict[str, jax.Array], cache: Any
             ) -> Tuple[Any, jax.Array]:
     """Prompt processing.  Families without a fused prefill path replay

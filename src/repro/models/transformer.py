@@ -794,3 +794,181 @@ def decode_steps_mixed(cfg: ModelConfig, params: Params, cache: Dict,
     (cache, pool), toks, valid, tok = _horizon_scan(
         step_fn, (cache, pool), tokens, live, eos_ids, budget, horizon)
     return cache, pool, toks, valid, tok
+
+
+# -- speculative decoding: one-pass draft verification -------------------------
+#
+# The host proposes up to S-1 candidate tokens per live slot (an n-gram
+# suffix table — runtime/spec_decode.py); ONE target-model pass scores
+# all S positions at once.  This is the chunked-prefill multi-query read
+# (prefill_chunk_paged) turned onto the decode path: candidate j of
+# slot i is embedded at absolute position length[i]+j, its K/V written
+# through the slot's block table like a prefill chunk's, and row j's
+# attention masked to col <= length+j — so the logits at row j are
+# EXACTLY what the sequential decode step would have produced after
+# committing candidates 1..j.  Greedy acceptance is therefore exact by
+# construction: a candidate is committed iff it equals the target's own
+# argmax given the (already-exact) prefix before it, and the first
+# mismatch position contributes the target's token as the free
+# correction — the committed stream is the greedy stream, always.
+# Rejected-tail K/V stays behind as garbage past the advanced length
+# (masked exactly like a frozen fused-horizon slot's trash writes);
+# the engine rolls back the pages that covered it.
+
+def _spec_accept(tokens: jax.Array, g: jax.Array, live: jax.Array,
+                 eos_ids: jax.Array, budget: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """In-graph longest-accepted-prefix commit mask.
+
+    tokens: (B, S) the verify pass's inputs — column 0 each slot's last
+    committed token, columns 1.. the drafted candidates; g: (B, S) the
+    target's greedy argmax at every position (``g[:, j]`` is the token
+    AFTER consuming ``tokens[:, j]``).  Candidate ``tokens[:, j+1]`` is
+    accepted iff it matches ``g[:, j]`` and every earlier candidate was
+    accepted; committed position j then emits ``g[:, j]`` — the accepted
+    candidates re-emitted plus the one free correction token at the
+    first mismatch.  On top of acceptance the mask reproduces
+    :func:`_horizon_scan`'s stop contract exactly: the emitted token
+    that hits a slot's EOS id (or exhausts its budget) IS emitted and
+    everything after it is not, and dead slots emit nothing.
+
+    Returns (valid (B, S) int32 — a contiguous prefix per row, n_emit
+    (B,), final_tok (B,) — each slot's last valid token, its input
+    token when nothing was emitted).
+    """
+    B, S = tokens.shape
+    live = jnp.asarray(live, jnp.int32)
+    eos_ids = jnp.asarray(eos_ids, jnp.int32)
+    budget = jnp.asarray(budget, jnp.int32)
+    idx = jnp.arange(S)[None, :]
+    if S > 1:
+        match = (tokens[:, 1:] == g[:, :-1]).astype(jnp.int32)
+        n_acc = jnp.cumprod(match, axis=1).sum(axis=1)        # (B,)
+    else:
+        n_acc = jnp.zeros((B,), jnp.int32)
+    commit = ((idx <= n_acc[:, None]) & (idx < budget[:, None])
+              & (live[:, None] > 0))
+    eos_hit = (g == eos_ids[:, None]) & commit
+    after = (jnp.cumsum(eos_hit.astype(jnp.int32), axis=1)
+             - eos_hit.astype(jnp.int32)) > 0                 # strictly after
+    commit &= ~after
+    valid = commit.astype(jnp.int32)
+    n_emit = valid.sum(axis=1)
+    last = jnp.maximum(n_emit - 1, 0)
+    final = jnp.where(
+        n_emit > 0,
+        jnp.take_along_axis(g, last[:, None], axis=1)[:, 0],
+        tokens[:, 0])
+    return valid, n_emit, final
+
+
+def spec_verify_paged(cfg: ModelConfig, params: Params, pool: Dict,
+                      cache: Dict, tokens: jax.Array, live: jax.Array,
+                      eos_ids: jax.Array, budget: jax.Array
+                      ) -> Tuple[Dict, Dict, jax.Array, jax.Array, jax.Array]:
+    """Score an S-token candidate span per slot in ONE pass (paged KV).
+
+    tokens: (B, S) — [last committed token, draft_1, ..., draft_{S-1}]
+    per slot; the engine must pre-reserve pages covering positions
+    ``[length, length + min(S, budget))`` per live slot (the fused
+    horizon's reservation, reused).  Every under-budget position's K/V
+    is written through the block table first (write-then-attend, like
+    the decode step), then one multi-query read scores all rows; the
+    accept mask commits the longest verified prefix + one correction
+    token and advances ``length`` by exactly the emitted count — K/V
+    past it is dead weight the mask hides and the engine's page
+    rollback reclaims.  Returns (pool, cache, tok_block (B, S), valid
+    (B, S), final_tok (B,)) — the fused-horizon return contract, so the
+    engine's replay/rollback loop runs unchanged.
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    length = cache["length"]
+    bt = cache["bt"]
+    positions = length[:, None] + jnp.arange(S)[None, :]
+    trash = pool["k"].shape[1] - 1
+    s = attn_spec(cfg)
+    live = jnp.asarray(live, jnp.int32)
+    budget = jnp.asarray(budget, jnp.int32)
+    write_mask = ((live[:, None] > 0)
+                  & (jnp.arange(S)[None, :] < budget[:, None])
+                  ).astype(jnp.int32)
+
+    def body(x, scanned):
+        lp, pk, pv = scanned
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+        pk, pv = kvcache.append_tokens_paged(pk, pv, k, v, bt, length,
+                                             write_mask, trash)
+        kg, vg = kvcache.paged_gather_layer(
+            pk, pv, bt, out_dtype=kvcache.SLOT_CACHE_DTYPE)
+        o = kvcache.spec_verify_attention(q, kg, vg, length,
+                                          window=cfg.window)
+        return _post_attn(cfg, lp, x, o), (pk, pv)
+
+    x, (k_new, v_new) = layers.scan_layers(
+        body, x, (params["layers"], pool["k"], pool["v"]),
+        unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)         # (B, S)
+    valid, n_emit, final = _spec_accept(tokens, g, live, eos_ids, budget)
+    return ({"k": k_new, "v": v_new},
+            {"bt": bt, "length": length + n_emit}, g, valid, final)
+
+
+def spec_verify_mixed(cfg: ModelConfig, params: Params, cache: Dict,
+                      pool: Dict, tokens: jax.Array, use_paged: jax.Array,
+                      live: jax.Array, eos_ids: jax.Array, budget: jax.Array
+                      ) -> Tuple[Dict, Dict, jax.Array, jax.Array, jax.Array]:
+    """Speculative verify for ``kv_layout=auto`` (slots in either layout).
+
+    Mirrors :func:`decode_step_mixed`: QKV and FFN run once, writes go
+    to both structures (contiguous via the masked drop-mode scatter —
+    see :func:`~repro.models.kvcache.update_layer_cache_multi` — paged
+    redirected to trash for every position that is not live-paged-and-
+    under-budget), both multi-query reads are computed and selected per
+    slot.  Returns (cache, pool, tok_block, valid, final_tok).
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    length = cache["length"]
+    bt = cache["bt"]
+    positions = length[:, None] + jnp.arange(S)[None, :]
+    trash = pool["k"].shape[1] - 1
+    s = attn_spec(cfg)
+    live = jnp.asarray(live, jnp.int32)
+    budget = jnp.asarray(budget, jnp.int32)
+    write_mask = ((live[:, None] > 0)
+                  & (jnp.arange(S)[None, :] < budget[:, None])
+                  ).astype(jnp.int32)
+    paged_mask = write_mask * use_paged[:, None]
+
+    def body(x, scanned):
+        lp, kc, vc, pk, pv = scanned
+        h = layers.rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = layers.attn_qkv(_sub(lp, "attn_"), s, h, positions)
+        kc, vc = kvcache.update_layer_cache_multi(kc, vc, k, v, length,
+                                                  write_mask)
+        pk, pv = kvcache.append_tokens_paged(pk, pv, k, v, bt, length,
+                                             paged_mask, trash)
+        kg, vg = kvcache.paged_gather_layer(pk, pv, bt, out_dtype=kc.dtype)
+        o_p = kvcache.spec_verify_attention(q, kg, vg, length,
+                                            window=cfg.window)
+        o_c = kvcache.spec_verify_attention(q, kc, vc, length,
+                                            window=cfg.window)
+        o = jnp.where(use_paged[:, None, None, None] > 0, o_p, o_c)
+        return _post_attn(cfg, lp, x, o), (kc, vc, pk, pv)
+
+    x, (k_new, v_new, pk_new, pv_new) = layers.scan_layers(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  pool["k"], pool["v"]),
+        unroll=cfg.unroll_layers)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    valid, n_emit, final = _spec_accept(tokens, g, live, eos_ids, budget)
+    new_cache = {"k": k_new, "v": v_new, "bt": bt, "length": length + n_emit}
+    return new_cache, {"k": pk_new, "v": pv_new}, g, valid, final

@@ -94,13 +94,15 @@ from repro.configs.base import ModelConfig
 from repro.core import (VPE, decode_horizon_bucket, kv_layout_bucket,
                         occupancy_bucket, pad_to_bucket,
                         prefill_chunk_bucket, prefix_len_bucket,
-                        shard_bucket, slo_pressure_bucket)
+                        shard_bucket, slo_pressure_bucket,
+                        spec_accept_bucket)
 from repro.distributed import sharding as sharding_lib
 from repro.kernels import compat as pallas_compat
 from repro.models import kvcache
 from repro.models import model as model_lib
 from repro.runtime.page_pool import PagePool
 from repro.runtime.prefix_cache import PrefixCache
+from repro.runtime.spec_decode import NGramProposer
 
 # serve-engine implementation axes (IMPL_AXES analogue):
 # * serve_decode_impl — decode-attention layout, keyed by occupancy bucket;
@@ -127,6 +129,14 @@ from repro.runtime.prefix_cache import PrefixCache
 #   when the engine passes the pallas capability gate
 #   (docs/kernel_variants.md fallback ladder).  serve_decode_impl's
 #   "pallas" variant is the decode-side twin, gated identically.
+# * spec_draft — speculative verify span: "off" (the plain fused-
+#   horizon path) vs S-position one-pass draft verification, keyed by
+#   queue-depth × occupancy × measured accept-rate level (only
+#   registered for spec_draft="auto"; variant names come from the
+#   engine's ``spec_choices``).  Fed from per-COMMITTED-token wall of
+#   the full span — a span whose drafts miss commits ~1 token per call
+#   and prices itself out, which is exactly the back-off the axis
+#   exists to learn.
 SERVE_AXES: Dict[str, List[str]] = {
     "serve_decode_impl": list(kvcache.DECODE_ATTN_VARIANTS),
     "prefix_reuse": ["reuse", "recompute"],
@@ -134,6 +144,7 @@ SERVE_AXES: Dict[str, List[str]] = {
     "prefill_chunk": ["whole", "128", "512", "2048"],
     "decode_horizon": ["1", "4", "16"],
     "prefill_kernel": ["gather", "pallas"],
+    "spec_draft": ["off", "4", "16"],
 }
 
 KV_LAYOUTS = ("contiguous", "paged", "auto")
@@ -216,6 +227,17 @@ class ServeStats:
     horizon_tokens: int = 0
     reserved_pages_rolled_back: int = 0
     horizon_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # speculative decoding: one-pass verify calls, drafts offered vs
+    # accepted (offered = draft positions a slot's budget could still
+    # commit, so budget-clamped calls don't deflate the rate), and the
+    # per-slot-call acceptance histogram {accepted drafts: occurrences}
+    # — the measured signal behind the spec axis's accept-rate bucket
+    # level.  All four merge through the generic field-walk in
+    # _merge_stats (scalars sum, dicts merge by key).
+    spec_calls: int = 0
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
+    accept_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
     # effective prefill-chunk budget per step that ran chunks — {budget:
     # steps}; adaptive budgeting raises it when no decoding slot could
     # be stalled, the explicit chunks_per_step override pins it
@@ -289,6 +311,12 @@ class ServeStats:
         if self.horizon_calls:
             s += (f", {self.horizon_calls} fused horizons "
                   f"({self.horizon_tokens} tok)")
+        if self.spec_calls:
+            rate = (self.accepted_tokens / self.draft_tokens
+                    if self.draft_tokens else 0.0)
+            s += (f", {self.spec_calls} spec verifies "
+                  f"({self.accepted_tokens}/{self.draft_tokens} drafts, "
+                  f"{rate:.0%} accept)")
         if self.preemptions:
             s += (f", {self.preemptions} preemptions "
                   f"({self.decode_preemptions} decode)")
@@ -562,6 +590,8 @@ class ContinuousBatchingEngine:
                  chunk_choices: Tuple[int, ...] = (128, 512, 2048),
                  decode_horizon: Any = 1,
                  horizon_choices: Tuple[int, ...] = (4, 16),
+                 spec_draft: Any = "off",
+                 spec_choices: Optional[Tuple[int, ...]] = None,
                  page_budget: Optional[int] = None,
                  swap: bool = False,
                  slo_weight: float = 0.0,
@@ -601,6 +631,15 @@ class ContinuousBatchingEngine:
         if any(int(h) < 2 for h in horizon_choices):
             raise ValueError("horizon_choices must all be >= 2 "
                              "(1 is always the incumbent)")
+        if isinstance(spec_draft, str):
+            if spec_draft not in ("off", "auto"):
+                raise ValueError(
+                    "spec_draft must be a verify span >= 2, 'off' or 'auto'")
+        elif int(spec_draft) < 2:
+            raise ValueError("spec_draft must be >= 2 (a 1-position "
+                             "verify is just a decode step — use 'off')")
+        if spec_choices is not None and any(int(s) < 2 for s in spec_choices):
+            raise ValueError("spec_choices must all be >= 2")
         self.cfg = cfg
         self.params = params
         self.num_slots = slots
@@ -667,6 +706,42 @@ class ContinuousBatchingEngine:
         self.decode_horizon = (decode_horizon if decode_horizon == "auto"
                                else int(decode_horizon))
         self.horizon_choices = tuple(int(h) for h in horizon_choices)
+        # -- speculative decoding (fallback ladder, --decode-impl style) ----
+        # A requested spec_draft resolves to "off" rather than crashing
+        # when the configuration cannot host it: the verify pass writes
+        # candidates through the paged block table (a contiguous-only
+        # engine has none to reserve against), and speculation is a
+        # variant OF the fused decode path (a decode_horizon=1 engine
+        # opted out of multi-token device calls entirely).
+        self.spec_draft = (spec_draft if isinstance(spec_draft, str)
+                           else int(spec_draft))
+        if self.spec_draft != "off" and not (
+                kv_layout in ("paged", "auto") and self.decode_horizon != 1):
+            self.spec_draft = "off"
+        self.spec_choices = (tuple(int(s) for s in spec_choices)
+                             if spec_choices is not None
+                             else self.horizon_choices)
+        # the draft proposer exists only on spec-enabled engines — a
+        # spec-off engine pays zero host overhead at the commit sites
+        self.proposer: Optional[NGramProposer] = (
+            NGramProposer() if self.spec_draft != "off" else None)
+        self._spec_fns: Dict[int, Callable] = {}
+        self._spec_fn_created = False
+        # EMA of the per-call draft-acceptance fraction: the engine-level
+        # workload signal quantized into the spec axis's bucket key
+        # (None until the first measurement = neutral middle level).
+        # Fed by real verify calls AND by the plain path's free
+        # counterfactual probe (_probe_accept), so the signal stays live
+        # while the axis has speculation switched off
+        self._accept_ema: Optional[float] = None
+        # plain-path calls between counterfactual probes: the EMA only
+        # needs LIVENESS while "off" is selected, not per-token
+        # precision, and a probe is order-deep table lookups per
+        # committed token — sampled 1-in-4 it stays well under 1% of a
+        # plain span's host share
+        self._probe_every = 4
+        self._probe_tick = 0
+        self._spec_off_pending: Optional[Tuple[Tuple, str]] = None
         self._chunk_rr = 0           # round-robin cursor over prefilling slots
         self._decode_fn_created = False
         # persistent device-side decode inputs: rebuilt from the host
@@ -715,6 +790,21 @@ class ContinuousBatchingEngine:
             for i, name in enumerate(names):
                 vpe.registry.register_variant(
                     "decode_horizon", name, fn=(lambda name=name: name),
+                    default=(i == 0))
+        if vpe is not None and self.spec_draft == "auto" \
+                and not vpe.registry.has_op("spec_draft"):
+            # "off" (the plain fused-horizon path) is the incumbent and
+            # the verify spans from spec_choices are the candidates,
+            # trialed per queue-depth × occupancy × accept-level bucket
+            # and fed from per-committed-token wall of the full span —
+            # so the controller backs off to plain horizons exactly
+            # where the measured accept rate stops paying for the wider
+            # verify pass
+            vpe.registry.register_op("spec_draft")
+            names = ["off"] + [str(s) for s in self.spec_choices]
+            for i, name in enumerate(names):
+                vpe.registry.register_variant(
+                    "spec_draft", name, fn=(lambda name=name: name),
                     default=(i == 0))
         # -- KV storage (layout-dependent) ---------------------------------
         self.block_size = block_size
@@ -1123,6 +1213,11 @@ class ContinuousBatchingEngine:
         slot.reuse_bucket = None
         slot.chunk_bucket = None
         slot.admit_bucket = None
+        if self.proposer is not None:
+            # drop the rolling draft context only — table entries are
+            # the cross-request memory and stay; re-admission re-seeds
+            # the context from effective_prompt
+            self.proposer.forget_slot(j)
         self._requeue(req)
         self._masks_dirty = True
 
@@ -1412,6 +1507,15 @@ class ContinuousBatchingEngine:
         # cache coverage BEFORE this emission: prompt + prior output
         eff_len = len(req.prompt) + len(req.out)
         req.out.append(first)
+        if self.proposer is not None:
+            # seed the slot's draft context from prompt + anything a
+            # previous residency already emitted (preemption resume),
+            # then feed the fresh first token through the commit path —
+            # prompts are where cross-request repetition lives, so the
+            # table warms before the first decode step runs
+            self.proposer.observe_prompt(
+                i, [int(t) for t in req.prompt] + req.out[:-1])
+            self.proposer.observe(i, [first])
         self.stats.tokens_out += 1
         self.stats.prefill_tokens += 1
         slot.prefilling = False
@@ -1957,6 +2061,8 @@ class ContinuousBatchingEngine:
             slot.admit_bucket = None
             self.completed.append(req)
             slot.req = None   # freed mid-decode; refilled next admission
+            if self.proposer is not None:
+                self.proposer.forget_slot(i)
             self._masks_dirty = True
 
     # -- decode -------------------------------------------------------------
@@ -2261,6 +2367,10 @@ class ContinuousBatchingEngine:
             self.vpe.controller.on_sample(self._axis, bucket,
                                           self._last_variant)
         share = dt / max(valid_total, 1)
+        probe_off = probe_acc = 0
+        self._probe_tick += 1
+        probing = (self.spec_draft == "auto"
+                   and self._probe_tick % self._probe_every == 0)
         for i in remaining:
             slot = self.slots[i]
             # a slot freezes at most once, so its valid tokens are a
@@ -2268,6 +2378,13 @@ class ContinuousBatchingEngine:
             e = int(emits[i].sum())
             new_toks = [int(t) for t in toks[i, :e]]
             slot.req.out.extend(new_toks)
+            if self.proposer is not None:
+                if probing and new_toks:
+                    # counterfactual probe BEFORE observe() advances the
+                    # slot's context (see _probe_accept)
+                    probe_acc += self._probe_accept(i, new_toks)
+                    probe_off += len(new_toks)
+                self.proposer.observe(i, new_toks)
             slot.tok = new_toks[-1]
             slot.pos += e
             slot.steps_resident += e
@@ -2277,6 +2394,7 @@ class ContinuousBatchingEngine:
             if slot.layout == "paged":
                 self._rollback_reserved(i)
             self._retire_if_done(i)
+        self._update_accept_ema(probe_off, probe_acc)
         if self.vpe is not None and hbucket is not None \
                 and not step_tainted and valid_total:
             # per-TOKEN wall of the FULL span (reservation + call +
@@ -2291,6 +2409,212 @@ class ContinuousBatchingEngine:
                                      (time.perf_counter() - t_h)
                                      / valid_total * charge)
             self.vpe.controller.on_sample("decode_horizon", hbucket, hname)
+        if self.vpe is not None and self._spec_off_pending is not None \
+                and not step_tainted and valid_total:
+            # the spec axis selected "off" (or its span clamped out)
+            # this step: the plain fused path IS the off variant, so
+            # its per-committed-token wall feeds the spec axis in the
+            # same units the verify path records — the off-vs-span
+            # comparison the controller runs per bucket
+            sb, sn = self._spec_off_pending
+            charge = 1.0 + self.slo_weight * self._queue_pressure()
+            self.vpe.profiler.record("spec_draft", sn, sb,
+                                     (time.perf_counter() - t_h)
+                                     / valid_total * charge)
+            self.vpe.controller.on_sample("spec_draft", sb, sn)
+
+    def _spec_fn(self, span: int) -> Callable:
+        """The speculative-verify analogue of :meth:`_fused_fn`: one
+        jitted S-position verify per span.  No decode-attention variant
+        in the key — the verify read is the multi-query chunked-prefill
+        generalization, not one of the single-token kernels."""
+        fn = self._spec_fns.get(span)
+        self._spec_fn_created = fn is None
+        if fn is None:
+            if self._spec_fns or self._fused_fns or self._decode_fns:
+                self.stats.rejits += 1
+            cfg = self.cfg
+            if self.kv_layout == "paged":
+                def _verify(p, pool, c, t, live, eos, bud):
+                    return model_lib.spec_verify_paged(
+                        cfg, p, pool, c, t, live, eos, bud)
+                fn = jax.jit(_verify, donate_argnums=(1, 2))
+            else:   # "auto" (contiguous engines resolve spec to off)
+                def _verify(p, c, pool, t, up, live, eos, bud):
+                    return model_lib.spec_verify_mixed(
+                        cfg, p, c, pool, t, up, live, eos, bud)
+                fn = jax.jit(_verify, donate_argnums=(1, 2))
+            self._spec_fns[span] = fn
+        return fn
+
+    def _select_spec(self, n_active: int
+                     ) -> Tuple[int, Optional[Tuple], Optional[str]]:
+        """Resolve this step's speculative verify span (0 = off) and,
+        in auto mode, its VPE bucket + variant name.
+
+        Runs BEFORE horizon selection: a step that speculates REPLACES
+        the fused-horizon call outright, so the decode_horizon axis
+        sees no sample that step (its trial accounting never dangles on
+        a call that didn't run) and plain-vs-speculative compete only
+        through the spec axis's own off-vs-span record.  The bucket
+        extends the horizon axis's queue-depth × occupancy key with the
+        engine's measured accept-rate level — the workload dimension
+        that decides whether a wider verify pass pays."""
+        if self.spec_draft == "off":
+            return 0, None, None
+        if self.spec_draft != "auto":
+            return int(self.spec_draft), None, None
+        if self.vpe is None:
+            return 0, None, None
+        bucket = spec_accept_bucket(len(self.queue), n_active,
+                                    self.num_slots, self._accept_ema,
+                                    levels=self.occupancy_levels)
+        if self.slo_weight > 0:
+            bucket = bucket + self._slo_bucket()
+        bucket = bucket + self._shard_tail
+        name = self.vpe.controller.select("spec_draft", bucket)
+        return (0 if name == "off" else int(name)), bucket, name
+
+    def _update_accept_ema(self, offered: int, accepted: int) -> None:
+        # acceptance is a workload property, not a timing — compile
+        # taint doesn't corrupt it, so the EMA always updates
+        if not offered:
+            return
+        frac = accepted / offered
+        self._accept_ema = (frac if self._accept_ema is None
+                            else 0.8 * self._accept_ema + 0.2 * frac)
+
+    def _probe_accept(self, i: int, new_toks: List[int]) -> int:
+        """Counterfactual accept count on the PLAIN path: how many of
+        this call's committed tokens the proposer WOULD have drafted.
+
+        The accept-rate level is part of the spec axis's dispatch key,
+        but real accept measurements only happen while speculating — if
+        the EMA froze whenever the axis selected "off", a bucket that
+        concluded "off" against a cold table could never discover the
+        table has since warmed (the information arrow would point one
+        way).  Drafting is deterministic host-side table lookups, so
+        the plain path can measure the exact counterfactual for free:
+        draft against the pre-commit context and count the longest
+        matching prefix, the same longest-prefix rule the verify mask
+        applies on device.  Keeps the EMA live in both directions with
+        zero device cost and no output influence."""
+        drafts = self.proposer.draft(i, len(new_toks))
+        e = 0
+        while e < len(new_toks) and drafts[e] == new_toks[e]:
+            e += 1
+        return e
+
+    def _spec_decode(self, S: int, sbucket, sname,
+                     remaining: Dict[int, int], t_h: float) -> None:
+        """One speculative verify call: reserve pages for the full
+        S-position candidate span, draft S-1 tokens per live slot from
+        the n-gram table, run the one-pass verify, fence once, replay
+        the committed prefixes, roll rejected-tail pages back and
+        retire stopped slots.  Structure mirrors :meth:`_fused_decode`;
+        the differences are the host-built (slots, S) token block (the
+        drafts) and the accept-rate accounting that feeds the spec
+        axis's bucket level."""
+        bt_jits = self._bt_jit_cache_size()
+        if self.pages is not None:
+            self._grow_block_tables(span=S, remaining=remaining)
+            remaining = {i: r for i, r in remaining.items()
+                         if self.slots[i].req is not None
+                         and not self.slots[i].prefilling}
+            if not remaining:
+                return
+            self._refresh_device_masks()
+        n_active = len(remaining)
+        # host-side drafting: column 0 is the slot's committed last
+        # token (the verify input contract — its score is the token a
+        # plain decode step would emit), columns 1..S-1 the candidates.
+        # Misses pad with a deliberately-wrong token (see NGramProposer)
+        # so speculation measures as a loss where the table is cold.
+        tokens = np.zeros((self.num_slots, S), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None:
+                tokens[i, 0] = slot.tok
+            if i in remaining:
+                tokens[i, 1:] = self.proposer.draft(i, S - 1)
+        fn = self._spec_fn(S)
+        try:
+            jits = fn._cache_size()
+        except AttributeError:  # pragma: no cover - older/newer jax
+            jits = -1
+        budget = np.zeros((self.num_slots,), np.int32)
+        for i, rem in remaining.items():
+            budget[i] = rem
+        bud_dev = jnp.asarray(budget)
+        tok_dev = jnp.asarray(tokens)
+        t0 = time.perf_counter()
+        if self.kv_layout == "paged":
+            self.page_pool, cache, tok_block, valid, final_tok = fn(
+                self.params, self.page_pool, self.cache, tok_dev,
+                self._live_dev, self._eos_dev, bud_dev)
+        else:
+            cache, self.page_pool, tok_block, valid, final_tok = fn(
+                self.params, self.cache, self.page_pool, tok_dev,
+                self._use_paged_dev, self._live_dev, self._eos_dev, bud_dev)
+        toks = np.asarray(tok_block)     # ONE fence for the whole span
+        emits = np.asarray(valid)
+        dt = time.perf_counter() - t0
+        self.cache = cache
+        self._tok_dev = final_tok
+        self.stats.decode_s += dt
+        self.stats.decode_steps += 1
+        self.stats.spec_calls += 1
+        if jits == -1:
+            step_tainted = self._spec_fn_created
+        else:
+            step_tainted = fn._cache_size() != jits
+        if bt_jits != -1 and self._bt_jit_cache_size() != bt_jits:
+            step_tainted = True     # a splice jit compiled inside t_h
+        if step_tainted:
+            self.stats.tainted_steps += 1
+        valid_total = int(emits.sum())
+        share = dt / max(valid_total, 1)
+        offered_total = accepted_total = 0
+        for i in remaining:
+            slot = self.slots[i]
+            # committed tokens are a contiguous prefix of the span
+            # (match, budget and EOS masks are all prefixes)
+            e = int(emits[i].sum())
+            new_toks = [int(t) for t in toks[i, :e]]
+            # drafts this slot's budget could still have committed
+            # (committing k drafts needs k+1 <= budget), vs the drafts
+            # that actually landed (everything before the correction)
+            offered = min(S - 1, max(remaining[i] - 1, 0))
+            acc = max(e - 1, 0)
+            offered_total += offered
+            accepted_total += acc
+            self.stats.draft_tokens += offered
+            self.stats.accepted_tokens += acc
+            self.stats.accept_hist[acc] = \
+                self.stats.accept_hist.get(acc, 0) + 1
+            slot.req.out.extend(new_toks)
+            self.proposer.observe(i, new_toks)
+            slot.tok = new_toks[-1]
+            slot.pos += e
+            slot.steps_resident += e
+            if not step_tainted:
+                slot.clean_step_shares.extend([share] * e)
+            self.stats.tokens_out += e
+            if slot.layout == "paged":
+                self._rollback_reserved(i)
+            self._retire_if_done(i)
+        self._update_accept_ema(offered_total, accepted_total)
+        if self.vpe is not None and sbucket is not None \
+                and not step_tainted and valid_total:
+            # per-COMMITTED-token wall of the full span (drafting +
+            # reservation + call + fence + replay): a span whose drafts
+            # miss commits ~1 token per call and prices itself out —
+            # the same self-pricing contract as the horizon axis, with
+            # the accept rate doing the work the freeze mask does there
+            charge = 1.0 + self.slo_weight * self._queue_pressure()
+            self.vpe.profiler.record("spec_draft", sname, sbucket,
+                                     (time.perf_counter() - t_h)
+                                     / valid_total * charge)
+            self.vpe.controller.on_sample("spec_draft", sbucket, sname)
 
     def step(self) -> bool:
         """One engine iteration; returns False when fully idle.
@@ -2323,6 +2647,32 @@ class ContinuousBatchingEngine:
         # token, and feeding only that would hide exactly the overhead
         # the axis exists to measure
         t_h = time.perf_counter()
+        # speculative decoding is tried FIRST: a step that speculates
+        # replaces the fused-horizon call outright (one verify pass IS
+        # this step's decode), so horizon selection below never runs
+        # that step and neither axis records a sample for a call that
+        # didn't happen.  When the spec axis is live but resolves to
+        # "off" (or the span is clamped out by tiny budgets), the plain
+        # path runs and feeds the spec axis as the off variant.
+        self._spec_off_pending = None
+        S, sbucket, sname = self._select_spec(n_active)
+        if S > 1 or sbucket is not None:
+            remaining = {i: s.req.max_new_tokens - len(s.req.out)
+                         for i, s in enumerate(self.slots)
+                         if s.req is not None and not s.prefilling}
+            if S > 1:
+                # same declared-set clamp as the horizon path: an
+                # arbitrary clamped span would pay a fresh trace+compile
+                cap = pad_to_bucket(max(remaining.values()), minimum=1)
+                choices = (self.spec_choices if self.spec_draft == "auto"
+                           else (int(self.spec_draft),))
+                fit = [c for c in choices if c <= S and c <= cap]
+                S = max(fit) if fit else 0
+            if S > 1:
+                self._spec_decode(S, sbucket, sname, remaining, t_h)
+                return True
+            if sbucket is not None:
+                self._spec_off_pending = (sbucket, sname)
         H, hbucket, hname = self._select_horizon(n_active)
         if H > 1:
             # tokens each decoding slot may still emit (host-known): the
@@ -2399,6 +2749,10 @@ class ContinuousBatchingEngine:
             self.vpe.profiler.record(self._axis, self._last_variant, bucket, dt)
             self.vpe.controller.on_sample(self._axis, bucket, self._last_variant)
         share = dt / n_active
+        probe_off = probe_acc = 0
+        self._probe_tick += 1
+        probing = (self.spec_draft == "auto"
+                   and self._probe_tick % self._probe_every == 0)
         for i, slot in enumerate(self.slots):
             if slot.req is None or slot.prefilling:
                 continue   # free/prefilling slot decoded garbage; discard
@@ -2409,8 +2763,14 @@ class ContinuousBatchingEngine:
             if not step_tainted:
                 slot.clean_step_shares.append(share)
             slot.req.out.append(t)
+            if self.proposer is not None:
+                if probing:
+                    probe_acc += self._probe_accept(i, [t])
+                    probe_off += 1
+                self.proposer.observe(i, [t])
             self.stats.tokens_out += 1
             self._retire_if_done(i)
+        self._update_accept_ema(probe_off, probe_acc)
         if self.vpe is not None and hbucket is not None and not step_tainted:
             # the horizon axis optimizes the per-TOKEN wall of the FULL
             # step span (host bookkeeping + device call + replay): one
@@ -2422,6 +2782,16 @@ class ContinuousBatchingEngine:
                                      (time.perf_counter() - t_h) / n_active
                                      * charge)
             self.vpe.controller.on_sample("decode_horizon", hbucket, hname)
+        if self.vpe is not None and self._spec_off_pending is not None \
+                and not step_tainted:
+            # same off-variant feed as the fused path: one step at
+            # occupancy n_active emitted n_active tokens
+            sb, sn = self._spec_off_pending
+            charge = 1.0 + self.slo_weight * self._queue_pressure()
+            self.vpe.profiler.record("spec_draft", sn, sb,
+                                     (time.perf_counter() - t_h) / n_active
+                                     * charge)
+            self.vpe.controller.on_sample("spec_draft", sb, sn)
         return True
 
     def run(self, max_steps: Optional[int] = None) -> List[Request]:

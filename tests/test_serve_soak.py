@@ -5,12 +5,15 @@ templates of different lengths plus random tails) are pushed through a
 small slot pool with a deliberately starved page pool, so admission,
 warm hits, the reuse/recompute VPE axis, prefix-aware queue
 reordering, pinning, eviction and slot recycling all interleave — and
-the whole thing runs once per (KV layout × prefill-chunk ×
-decode-horizon) point: contiguous slot regions, paged block tables
-with whole-prompt chunks and 4-step fused decode horizons, paged with
+the whole thing runs once per (KV layout × prefill-chunk × decode-horizon
+× spec-draft) point: contiguous slot regions, paged block tables with
+whole-prompt chunks and 4-step fused decode horizons, paged with
 16-token chunked admission plus 16-step horizons (EOS stops freeze
-slots mid-horizon, so reserved-page rollback runs continuously), and
-auto/auto/auto (layout, chunk size AND horizon all live VPE axes).
+slots mid-horizon, so reserved-page rollback runs continuously), paged
+with a pinned 4-position speculative verify span (draft acceptance,
+rejected-tail rollback and the n-gram proposer all under
+eviction/preemption churn), and auto everywhere (layout, chunk size,
+horizon AND spec span all live VPE axes).
 After full drain:
 
 * every request completed, no slot is still occupied;
@@ -47,14 +50,17 @@ def setup():
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("kv_layout,prefill_chunk,decode_horizon", [
-    ("contiguous", "whole", 1),
-    ("paged", "whole", 4),   # fused horizons + per-residency EOS stops
-    ("paged", 16, 16),       # chunked admission AND long fused horizons
-    ("auto", "auto", "auto"),  # layout, chunk size AND horizon all axes
+@pytest.mark.parametrize("kv_layout,prefill_chunk,decode_horizon,spec_draft", [
+    ("contiguous", "whole", 1, "off"),
+    ("paged", "whole", 4, "off"),  # fused horizons + per-residency EOS stops
+    ("paged", 16, 16, "off"),      # chunked admission AND long fused horizons
+    ("paged", "whole", 4, 4),      # speculative verify over fused horizons:
+                                   # span reservation + rejected-tail rollback
+                                   # under eviction/preemption pressure
+    ("auto", "auto", "auto", "auto"),  # layout, chunk, horizon AND spec axes
 ])
 def test_soak_no_leaks_and_sane_stats(setup, kv_layout, prefill_chunk,
-                                      decode_horizon):
+                                      decode_horizon, spec_draft):
     cfg, params = setup
     rng = np.random.default_rng(0)
     templates = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
@@ -65,7 +71,7 @@ def test_soak_no_leaks_and_sane_stats(setup, kv_layout, prefill_chunk,
         prefix_blocks=24, block_size=16,  # starved headroom -> real evictions
         kv_layout=kv_layout, prefill_chunk=prefill_chunk,
         chunk_choices=(16, 32), decode_horizon=decode_horizon,
-        horizon_choices=(4, 16))
+        horizon_choices=(4, 16), spec_draft=spec_draft)
 
     reqs = []
     for i in range(N_REQUESTS):
@@ -155,11 +161,25 @@ def test_soak_no_leaks_and_sane_stats(setup, kv_layout, prefill_chunk,
     # fused horizons: EOS'd requests (30% of the workload) freeze slots
     # mid-horizon, so the drain proofs above double as the reservation-
     # rollback leak check; fixed horizons must actually have fused
-    if decode_horizon in (4, 16):
+    # (with a pinned spec span the verify path runs INSTEAD of the plain
+    # fused-horizon path, so horizon_calls legitimately stays 0 there)
+    if decode_horizon in (4, 16) and spec_draft == "off":
         assert eng.stats.horizon_calls > 0
         assert eng.stats.horizon_tokens > 0
     if decode_horizon == "auto":
         assert any(op == "decode_horizon"
+                   for (op, _b) in vpe.controller._decisions)
+    # speculative arm: verify calls actually ran, accepted tokens are a
+    # subset of drafts offered, and the accept histogram sums to the
+    # per-slot verify count — the drain proofs above double as the
+    # rejected-tail reservation-rollback leak check
+    if spec_draft == 4:
+        assert st.spec_calls > 0
+        assert 0 <= st.accepted_tokens <= st.draft_tokens
+        assert sum(st.accept_hist.values()) <= st.spec_calls * eng.num_slots
+        assert st.reserved_pages_rolled_back > 0
+    if spec_draft == "auto":
+        assert any(op == "spec_draft"
                    for (op, _b) in vpe.controller._decisions)
 
 
