@@ -7,6 +7,22 @@ pressure.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
 
+Part 10 — fault-storm sweep (what PR 10's recovery ladder buys): the
+same mixed interactive/batch workload served twice on identically
+configured engines (paged KV, chunked prefill, fused horizon 4,
+speculation 4, watchdog armed) — once clean, once under a scripted
+fault storm that walks the whole degradation ladder: speculative
+verify poisoned then device-faulted (spec -> off), the fused horizon
+call NaN'd then stalled (horizon -> 1), the single-token incumbent
+device-faulted, a prefill chunk device-faulted, and a page allocation
+faulted, with probation re-promoting each demoted rung once its
+window runs clean.  The engine must absorb every injected fault
+without raising, finish every request at exact greedy parity with the
+clean arm, and drain leak-free.  Reported: tok/s retention
+(storm/clean), interactive TTFT p95 on both arms, and the full
+recovery ledger (device/numeric faults, watchdog trips, demotions by
+rung, re-promotions, failures by reason).
+
 Part 9 — speculative decoding sweep (what PR 9's draft-and-verify
 buys, and the regime where it must refuse to pay): a repetitive
 decode-bound workload (two shared prompt templates, long generations —
@@ -125,6 +141,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import VPE
 from repro.models import model
+from repro.runtime.serve_faults import FaultPlan, FaultSpec
 from repro.runtime.serve_loop import (
     SERVE_AXES, ContinuousBatchingEngine, Request, ServeLoop, WaveScheduler,
     make_serve_engine)
@@ -141,7 +158,7 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 # tooling can read the whole file without per-part key knowledge.  Bump
 # SCHEMA on envelope changes, PR per growth session.
 SCHEMA = 1
-PR = 9
+PR = 10
 
 
 def append_record(bench: str, metrics: dict, *, pr: int = PR) -> None:
@@ -1119,6 +1136,166 @@ def bench_spec_sweep(cfg, params) -> bool:
     return ok
 
 
+FAULT_REQS = 24
+FAULT_REPS = 2
+FAULT_WARM = 2
+
+
+def _fault_workload(rng, vocab) -> List[Request]:
+    """Part 6's shape at part 10's scale: short interactive turns mixed
+    with longer batch generations, all submitted at once — the storm
+    must not be able to hide behind a uniform workload."""
+    reqs = []
+    for i in range(FAULT_REQS):
+        if i % 3 == 2:
+            prompt = rng.integers(0, vocab, int(rng.integers(6, 13)))
+            new, prio = 4, "interactive"
+        else:
+            prompt = rng.integers(0, vocab, int(rng.integers(16, 33)))
+            new, prio = 16, "batch"
+        reqs.append(Request(rid=i, prompt=prompt.astype(np.int32),
+                            max_new_tokens=new, priority=prio))
+    return reqs
+
+
+def _storm_plan() -> FaultPlan:
+    """One deterministic storm that walks the WHOLE ladder, in order:
+    speculation is poisoned then device-faulted (spec -> off), which
+    exposes the fused-horizon path; that is NaN'd then stalled
+    (horizon -> 1), which exposes the single-token incumbent; that is
+    device-faulted and poisoned; a prefill chunk and a page allocation
+    fault ride along.  Coordinates are per-site call indices, chosen
+    early enough that every spec fires long before the queue drains
+    (``exhausted`` is part of the pass criterion).  A fresh plan per
+    pass — plans are consumed as they fire."""
+    return FaultPlan([
+        FaultSpec("spec", "nan", at=1, slot=0,
+                  note="poisoned verify logits, one slot"),
+        FaultSpec("spec", "device", at=3, note="demotes spec -> off"),
+        FaultSpec("fused", "nan", at=1, note="poisoned horizon, all slots"),
+        FaultSpec("fused", "stall", at=3, note="demotes horizon -> 1"),
+        FaultSpec("decode", "device", at=1),
+        FaultSpec("decode", "nan", at=3, slot=1),
+        FaultSpec("prefill", "device", at=2),
+        FaultSpec("page_alloc", "device", at=10),
+    ])
+
+
+def _fault_engine(cfg, params, plan) -> ContinuousBatchingEngine:
+    return ContinuousBatchingEngine(
+        cfg, params, slots=SLOTS, max_len=MAX_LEN, kv_layout="paged",
+        block_size=16, prefill_chunk=16, decode_horizon=4, spec_draft=4,
+        watchdog=True, probation_steps=6, fault_plan=plan)
+
+
+def _run_fault_pass(eng, reqs) -> dict:
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    inter = sorted(r.ttft_s * 1e3 for r in reqs
+                   if r.priority == "interactive" and r.status == "done")
+    return {
+        "tok_per_s": useful_tokens(reqs) / wall,
+        "ttft_p95_ms": round(percentile(inter, 95), 2) if inter else None,
+        "device_faults": st.device_faults,
+        "numeric_faults": st.numeric_faults,
+        "watchdog_trips": st.watchdog_trips,
+        "demotions": dict(st.demotions),
+        "repromotions": st.repromotions,
+        "failed_by_reason": dict(st.failed_by_reason),
+        "outs": {r.rid: list(map(int, r.out)) for r in reqs
+                 if r.status == "done"},
+        "failed": {r.rid: r.error for r in reqs if r.status == "failed"},
+    }
+
+
+def bench_fault_sweep(cfg, params) -> bool:
+    """Part 10: clean arm vs fault-storm arm on the same workload.  The
+    storm arm must survive every injected fault without the engine
+    raising, keep every surviving request token-exact against the
+    clean arm, fire the entire plan, demote AND re-promote along the
+    ladder, and drain leak-free; tok/s retention is the robustness
+    headline (a recovery ladder that recovers by crawling is not a
+    recovery ladder)."""
+    rng = np.random.default_rng(23)
+    base = _fault_workload(rng, cfg.vocab_size)
+
+    engines = {"clean": _fault_engine(cfg, params, None),
+               "storm": _fault_engine(cfg, params, _storm_plan())}
+    for arm, eng in engines.items():
+        for _ in range(FAULT_WARM):
+            # the storm arm's warm passes consume a fresh plan each, so
+            # the timed pass pays no demoted-path compiles (the
+            # single-token incumbent only traces once horizon -> 1)
+            if arm == "storm":
+                eng.faults = _storm_plan()
+            _run_fault_pass(eng, copy.deepcopy(base))
+
+    results: dict = {}
+    parity, exhausted, ladder = True, True, True
+    for _ in range(FAULT_REPS):
+        outs = {}
+        for arm, eng in engines.items():
+            eng.stats = type(eng.stats)()
+            plan = _storm_plan() if arm == "storm" else None
+            eng.faults = plan
+            r = _run_fault_pass(eng, copy.deepcopy(base))
+            outs[arm] = r.pop("outs")
+            if plan is not None:
+                exhausted = exhausted and plan.exhausted
+                ladder = ladder and bool(r["demotions"]) \
+                    and r["repromotions"] >= 1
+            if arm not in results \
+                    or r["tok_per_s"] > results[arm]["tok_per_s"]:
+                results[arm] = r
+            eng.check_kv()
+            assert all(not s.pages for s in eng.slots)
+        # every storm survivor must match the clean arm token for token
+        # — demotions swap variants and quarantines replay slots, none
+        # of which may change what gets emitted
+        parity = parity and all(outs["storm"][rid] == outs["clean"][rid]
+                                for rid in outs["storm"])
+    clean_ok = (results["clean"]["device_faults"] == 0
+                and results["clean"]["numeric_faults"] == 0
+                and not results["clean"]["failed_by_reason"])
+    retention = results["storm"]["tok_per_s"] / results["clean"]["tok_per_s"]
+    ok = (parity and exhausted and ladder and clean_ok
+          and retention >= 0.4)
+    record = {
+        "slots": SLOTS, "requests": FAULT_REQS,
+        "plan_faults": len(_storm_plan()),
+        "clean": {k: v for k, v in results["clean"].items()
+                  if k in ("tok_per_s", "ttft_p95_ms")},
+        "storm": dict(results["storm"]),
+        "retention": round(retention, 3),
+        "greedy_parity": parity,
+        "plan_exhausted": exhausted,
+        "pass": ok,
+    }
+    record["clean"]["tok_per_s"] = round(record["clean"]["tok_per_s"], 1)
+    record["storm"]["tok_per_s"] = round(record["storm"]["tok_per_s"], 1)
+    append_record("serve_fault_sweep", record)
+    for arm in ("clean", "storm"):
+        r = results[arm]
+        print(f"# fault {arm:>5}: {r['tok_per_s']:8.1f} tok/s, "
+              f"interactive ttft p95 {r['ttft_p95_ms']}ms, "
+              f"{r['device_faults']} device / {r['numeric_faults']} numeric "
+              f"faults, {r['watchdog_trips']} trips, "
+              f"demotions {r['demotions']}, "
+              f"{r['repromotions']} repromotions, "
+              f"failed {r['failed_by_reason']}")
+    print(f"# fault sweep: {'PASS' if ok else 'FAIL'} "
+          f"(retention {retention:.2f}x, parity "
+          f"{'exact' if parity else 'BROKEN'}, plan "
+          f"{'exhausted' if exhausted else 'NOT exhausted'}; need every "
+          f"fault fired, demote+repromote observed, exact parity on "
+          f"survivors, leak-free drains, retention >= 0.4)")
+    return ok
+
+
 def main(n_requests: int = 24) -> None:
     cfg = get_config("qwen3-8b").reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -1156,8 +1333,10 @@ def main(n_requests: int = 24) -> None:
     ok_shard = bench_shard_sweep()
     ok_kernel = bench_kernel_sweep(cfg, params)
     ok_spec = bench_spec_sweep(cfg, params)
+    ok_fault = bench_fault_sweep(cfg, params)
     if not (ok and ok_prefix and ok_paged and ok_chunked and ok_horizon
-            and ok_priority and ok_shard and ok_kernel and ok_spec):
+            and ok_priority and ok_shard and ok_kernel and ok_spec
+            and ok_fault):
         sys.exit(1)
 
 

@@ -7,6 +7,17 @@ trip it raises :class:`StragglerTimeout`, which the training loop
 handles by (1) retrying the step, then (2) escalating to the fault
 handler (checkpoint-restore on a shrunk mesh — see runtime/fault.py).
 
+The serve engine arms the same watchdog around its decode-span fences
+(``watchdog=True`` on :class:`~repro.runtime.serve_loop.
+ContinuousBatchingEngine`).  Its recovery differs: by the time
+:meth:`StepWatchdog.guard` raises, the fence has already drained, so
+the (late) tokens are still committed and the trip demotes the variant
+whose span stalled; the replica group treats repeated trips as
+evidence for quarantining the replica (``docs/fault_tolerance.md``).
+Contract both paths rely on: ``guard`` increments :attr:`trips`
+*itself* before raising — callers count trips in their own stats, never
+on the watchdog.
+
 The watchdog is pure host code, so tests drive it with an injected
 clock/fence; on hardware it wraps the real fence unchanged.
 """

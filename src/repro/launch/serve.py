@@ -14,6 +14,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import VPE
 from repro.models import model as model_lib
+from repro.runtime.serve_faults import FaultPlan
 from repro.runtime.serve_loop import (
     Request, ServeLoop, WaveScheduler, make_serve_engine)
 
@@ -43,6 +44,22 @@ speculative decoding (--spec-draft):
   opted out) resolve any requested spec-draft to 'off'; a span larger
   than a slot's remaining budget falls back to the plain path for that
   step — it never crashes.
+
+fault tolerance (--fault-seed / --watchdog / --deadline):
+  --fault-seed arms a reproducible fault storm (--fault-storm faults
+  drawn over the engine's fenced spans: decode / fused / spec verify /
+  prefill chunk / page alloc / replica dispatch) that raises device
+  errors, poisons logits to NaN, or stalls the fence at planned
+  coordinates.  Recovery never surfaces to the caller: the engine
+  quarantines the faulting variant one ladder rung at a time (pallas
+  -> gather, spec -> off, horizon -> 1, re-promoted after a clean
+  probation window), replays poisoned slots from their exact committed
+  prefix, and fails only requests whose own fault budget is spent —
+  with a reason code and complete latency record.  --watchdog arms the
+  straggler fence watchdog (stalls demote instead of hanging);
+  --deadline and --max-queue-depth bound latency and queue depth by
+  shedding, also with reason codes.  docs/fault_tolerance.md has the
+  full failure model.
 """
 
 
@@ -132,6 +149,27 @@ def main() -> None:
                          "objective: fused horizons and prefill chunks "
                          "are charged wall x (1 + w x class-weighted "
                          "queued requests); 0 disables")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request wall-clock deadline in seconds from "
+                         "submit; expired requests are shed (queued or "
+                         "resident) with reason code 'deadline' instead "
+                         "of serving tokens nobody is waiting for")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="admission bound: submissions beyond this queue "
+                         "depth fail fast with reason code 'capacity' "
+                         "(continuous only)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="arm the straggler watchdog around decode-span "
+                         "fences: a stalled fence commits its late "
+                         "tokens, demotes the span's variant, and counts "
+                         "as replica-quarantine evidence")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="inject a reproducible fault storm seeded here "
+                         "(device errors / NaN logits / fence stalls at "
+                         "planned span coordinates) and print the "
+                         "recovery ledger; see epilog")
+    ap.add_argument("--fault-storm", type=int, default=8, metavar="N",
+                    help="number of faults in the --fault-seed storm")
     ap.add_argument("--mesh", default="1,1", metavar="DP,MP",
                     help="serve device mesh 'dp,mp' (continuous only): mp "
                          "shards params + KV heads within a replica, dp "
@@ -165,9 +203,13 @@ def main() -> None:
     reqs = [Request(
         rid=i,
         prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-        max_new_tokens=args.new_tokens, priority=_prio(i))
+        max_new_tokens=args.new_tokens, priority=_prio(i),
+        deadline_s=args.deadline)
         for i in range(args.requests)]
     if args.continuous:
+        plan = (FaultPlan.seeded(args.fault_seed, args.fault_storm,
+                                 slots=args.batch)
+                if args.fault_seed is not None else None)
         engine = make_serve_engine(
             cfg, params, mesh_shape=(dp, mp),
             slots=args.batch, max_len=args.max_len, vpe=VPE(),
@@ -177,13 +219,20 @@ def main() -> None:
             decode_horizon=horizon, spec_draft=spec,
             page_budget=args.page_budget,
             swap=args.swap, slo_weight=args.slo_weight,
-            decode_impl=args.decode_impl, prefill_kernel=args.prefill_kernel)
+            decode_impl=args.decode_impl, prefill_kernel=args.prefill_kernel,
+            fault_plan=plan, watchdog=args.watchdog,
+            max_queue_depth=args.max_queue_depth)
         for r in reqs:
             engine.submit(r)
         done = engine.run()
         mesh_note = f" [mesh {dp}x{mp}]" if (dp, mp) != (1, 1) else ""
         print(f"completed {len(done)} requests{mesh_note}; "
               f"{engine.stats.summary()}")
+        if plan is not None:
+            fired = ", ".join(f"{f.site}/{f.kind}@{f.at}"
+                              for f in plan.injected) or "none"
+            print(f"fault storm (seed {args.fault_seed}): "
+                  f"{len(plan.injected)}/{len(plan)} fired [{fired}]")
         stats = engine.stats
         if stats.spec_calls:
             hist = ", ".join(f"{k}:{v}" for k, v in

@@ -1,2 +1,2 @@
 """Train/serve loops with VPE dispatch and fault tolerance."""
-from . import fault, prefix_cache, serve_loop, train_loop
+from . import fault, prefix_cache, serve_faults, serve_loop, train_loop

@@ -1,36 +1,60 @@
 """Fault injection + recovery orchestration (tested on CPU, designed for pods).
 
-Failure model: a step raises (device loss surfaces as an exception from
-the fenced step on real hardware; tests inject :class:`SimulatedFault`
-via ``TrainLoop.fault_hook``).  Recovery ladder:
+Shared failure model for both runtime paths: a fenced span raises
+(device loss surfaces as an exception from the fenced step on real
+hardware; tests inject :class:`SimulatedFault` — via ``fault_hook`` on
+the training loop, via a :class:`~repro.runtime.serve_faults.FaultPlan`
+on the serve engine).  What differs is the recovery ladder, because the
+two paths have different durable state:
 
-  1. retry the step (transient straggle — handled inside TrainLoop);
+* **Training** (this module's :func:`run_with_recovery`): the durable
+  state is the checkpoint, so recovery is restore-and-replay —
+
+  1. retry the step (transient straggle — handled inside the loop);
   2. restore latest checkpoint on the same mesh (host restart);
   3. elastic restore: rebuild the largest viable mesh from surviving
      devices, re-derive shardings, restore (distributed/elastic.py).
 
-``run_with_recovery`` implements 2 and 3 around a TrainLoop.
+* **Serving** (``runtime/serve_loop.py`` + ``runtime/serve_faults.py``):
+  there is no checkpoint — the durable state is each request's emitted
+  prefix, so recovery is demote-and-recompute: quarantine the variant
+  (pallas→gather, spec→off, horizon→1), quarantine the slot (preempt +
+  exact greedy resume), or quarantine the replica (drain + canary
+  re-admission).  See ``docs/fault_tolerance.md``.
+
+:func:`run_with_recovery` implements rungs 2 and 3 around any loop
+exposing the training-loop surface (``step``, ``run(n)``,
+``restore()``); it is not tied to a concrete class, so sharded and
+elastic loops reuse it unchanged.
 """
 
 from __future__ import annotations
 
 from typing import Callable, Optional
 
-from repro.runtime.train_loop import TrainLoop
-
 
 class SimulatedFault(RuntimeError):
-    """Injected by tests to stand in for a device/host loss."""
+    """Injected by tests to stand in for a device/host loss.
+
+    Shared by the train hook (``TrainLoop.fault_hook``) and the serve
+    injection plan (:class:`repro.runtime.serve_faults.FaultPlan`), so
+    one except-clause means "injected hardware failure" everywhere.
+    """
 
 
 def run_with_recovery(
-    loop: TrainLoop,
+    loop,
     num_steps: int,
     *,
     max_restores: int = 3,
     on_restore: Optional[Callable[[int], None]] = None,
 ) -> int:
-    """Run to ``num_steps``, restoring from checkpoint on faults.
+    """Run ``loop`` to ``num_steps``, restoring from checkpoint on faults.
+
+    ``loop`` is duck-typed: anything with an integer ``step`` attribute,
+    a ``run(num_steps)`` that raises :class:`SimulatedFault` on device
+    loss, and a ``restore() -> bool`` that rewinds to the latest
+    checkpoint (the TrainLoop surface).
 
     Returns the number of restores performed.  Raises if recovery is
     exhausted or no checkpoint exists when one is needed.

@@ -60,6 +60,17 @@ class PagePool:
     def num_live(self) -> int:
         return self.num_pages - len(self.free)
 
+    @property
+    def drained(self) -> bool:
+        """True when every page is back on the free list — the zero-leak
+        endpoint of a run whose prefix cache has also been cleared.
+        While a prefix cache still owns nodes this is legitimately
+        False; the owner-exact audit for that state is :meth:`check`
+        with an ``owners`` map (the engine's ``check_kv``).  Chaos runs
+        assert the owner-exact audit after every recovery and use this
+        as the final hard stop after a full drain + cache drop."""
+        return len(self.free) == self.num_pages
+
     def alloc(self) -> Optional[int]:
         """Take a page off the free list with refcount 1, or None."""
         if not self.free:

@@ -77,6 +77,22 @@ bucket dimension, so "fuse long" loses exactly when someone latency-
 sensitive is waiting.  Oversized and empty-prompt submissions become
 terminally-failed requests (``status="failed"``, ``error`` set) rather
 than caller-visible exceptions.
+
+Since PR 10 the engine is fault tolerant (docs/fault_tolerance.md): a
+seeded :class:`~repro.runtime.serve_faults.FaultPlan` can inject device
+errors, poisoned logits or fence stalls at any fenced span, and the
+engine recovers through a *degradation ladder* that quarantines the
+variant before the engine — pallas→gather, spec→off, horizon→1, each a
+runtime demotion with VPE re-promotion after a clean probation window;
+poisoned logits quarantine only the affected slots (preempt + exact
+greedy resume via :meth:`Request.effective_prompt`); an unrecoverable
+span fails only the requests it touched, each with a reason code from
+``FAIL_REASONS`` and a complete latency record.  Per-request deadlines
+(``deadline_s``) and a queue-depth admission bound shed load before the
+page pool does, and :class:`EngineReplicaGroup` quarantines a replica
+whose step faults terminally or whose watchdog-wrapped fence trips
+repeatedly, migrating its in-flight requests onto survivors and
+re-admitting it after a canary passes.  The engine itself never raises.
 """
 
 from __future__ import annotations
@@ -97,11 +113,13 @@ from repro.core import (VPE, decode_horizon_bucket, kv_layout_bucket,
                         shard_bucket, slo_pressure_bucket,
                         spec_accept_bucket)
 from repro.distributed import sharding as sharding_lib
+from repro.distributed.straggler import StepWatchdog, StragglerTimeout
 from repro.kernels import compat as pallas_compat
 from repro.models import kvcache
 from repro.models import model as model_lib
 from repro.runtime.page_pool import PagePool
 from repro.runtime.prefix_cache import PrefixCache
+from repro.runtime.serve_faults import FaultPlan, FaultSpec, SimulatedFault
 from repro.runtime.spec_decode import NGramProposer
 
 # serve-engine implementation axes (IMPL_AXES analogue):
@@ -156,6 +174,14 @@ KV_LAYOUTS = ("contiguous", "paged", "auto")
 PRIORITY_CLASSES = ("interactive", "batch")
 PRIORITY_RANK: Dict[str, int] = {c: i for i, c in enumerate(PRIORITY_CLASSES)}
 SLO_CLASS_WEIGHT: Dict[str, float] = {"interactive": 1.0, "batch": 0.1}
+
+# terminal failure reason codes (``Request.error``); the human-readable
+# message lives in ``Request.error_detail``.  A machine-checkable code
+# is what lets callers route retries (device_fault: retry elsewhere;
+# deadline/capacity: shed; intake: fix the request) and what the
+# per-reason counters in ``ServeStats.failed_by_reason`` key on.
+FAIL_REASONS = ("intake", "deadline", "capacity", "device_fault",
+                "numeric_fault", "replica_lost")
 
 
 def _intake_error(req: "Request", max_len: int) -> Optional[str]:
@@ -253,6 +279,21 @@ class ServeStats:
     swap_ins: int = 0
     swapped_pages: int = 0
     placement_rollbacks: int = 0
+    # fault tolerance (PR 10): terminal failures by reason code
+    # (FAIL_REASONS — the sum is the failed population), injected/real
+    # device faults survived, poisoned-logit events, watchdog fence
+    # trips, runtime variant demotions by ladder rung (and the
+    # re-promotions that ended a clean probation window), and the
+    # replica group's quarantine/canary lifecycle counters
+    failed_by_reason: Dict[str, int] = dataclasses.field(default_factory=dict)
+    device_faults: int = 0
+    numeric_faults: int = 0
+    watchdog_trips: int = 0
+    demotions: Dict[str, int] = dataclasses.field(default_factory=dict)
+    repromotions: int = 0
+    replica_quarantines: int = 0
+    replica_readmissions: int = 0
+    canary_probes: int = 0
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -282,12 +323,14 @@ class ServeStats:
 
     @property
     def failed_requests(self) -> int:
-        """Terminally-failed submissions (``status="failed"``).  With
-        the engine drained, ``submitted == len(queue_wait_s) +
-        failed_requests`` — the invariant that keeps bench request
-        counts and the queue-wait series talking about the same
-        population."""
-        return self.rejected
+        """Terminally-failed submissions (``status="failed"``), all
+        reasons: the sum of :attr:`failed_by_reason`.  ``rejected``
+        stays the never-admitted subset (intake, capacity, a deadline
+        expiring in queue), so the PR 7 population invariant now reads
+        ``submitted == len(queue_wait_s) + rejected`` — mid-flight
+        failures (device/numeric faults, replica loss, an expired
+        running deadline) were admitted and DID record a queue wait."""
+        return sum(self.failed_by_reason.values())
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -323,8 +366,23 @@ class ServeStats:
         if self.swap_outs:
             s += (f", {self.swap_outs}/{self.swap_ins} swaps out/in "
                   f"({self.swapped_pages} pages)")
-        if self.rejected:
-            s += f", {self.rejected} rejected"
+        if self.failed_by_reason:
+            by = ", ".join(f"{k}:{v}"
+                           for k, v in sorted(self.failed_by_reason.items()))
+            s += f", {self.failed_requests} failed ({by})"
+        if self.device_faults or self.numeric_faults or self.watchdog_trips:
+            s += (f", faults survived {self.device_faults} device / "
+                  f"{self.numeric_faults} numeric / "
+                  f"{self.watchdog_trips} stalls")
+        if self.demotions:
+            by = ", ".join(f"{k}:{v}"
+                           for k, v in sorted(self.demotions.items()))
+            s += (f", demotions {by} "
+                  f"({self.repromotions} re-promoted)")
+        if self.replica_quarantines:
+            s += (f", {self.replica_quarantines} replica quarantines "
+                  f"({self.replica_readmissions} re-admitted, "
+                  f"{self.canary_probes} canaries)")
         return s
 
 
@@ -395,10 +453,28 @@ class Request:
     # invariant across preempt/resume cycles.
     priority: str = "batch"
     status: str = "queued"
+    # fault tolerance (PR 10): ``error`` is a machine-readable reason
+    # code from FAIL_REASONS; ``error_detail`` carries the human
+    # message that used to live in ``error``.
     error: Optional[str] = None
+    error_detail: Optional[str] = None
     preemptions: int = 0
     swap: Optional[Tuple] = None
     ttft_recorded: bool = False
+    # wall-clock budget from submit: past ``submit_t + deadline_s`` the
+    # request is shed (terminal ``deadline`` failure) wherever the
+    # engine next looks at it — the queue sweep or a decode-span
+    # boundary — instead of burning device time on an answer nobody is
+    # waiting for.  None = no deadline.
+    deadline_s: Optional[float] = None
+    # fault budget: device/numeric faults charged against this request
+    # (quarantine-migration counts too); at the engine's
+    # ``max_request_faults`` the request fails terminally instead of
+    # retrying forever — the poison-pill bound.
+    faults: int = 0
+    # replica-group canary probes are engine-internal requests: excluded
+    # from group ``completed`` and never migrated off their replica
+    canary: bool = False
 
     def effective_prompt(self) -> np.ndarray:
         """The token prefix a (re-)admission must have in KV before
@@ -600,7 +676,12 @@ class ContinuousBatchingEngine:
                  mesh_devices: Optional[Sequence] = None,
                  shard_dims: Optional[Tuple[int, int]] = None,
                  decode_impl: str = "auto",
-                 prefill_kernel: str = "auto") -> None:
+                 prefill_kernel: str = "auto",
+                 fault_plan: Optional[FaultPlan] = None,
+                 watchdog: Any = None,
+                 max_request_faults: int = 3,
+                 probation_steps: int = 16,
+                 max_queue_depth: Optional[int] = None) -> None:
         if not model_lib.supports_slot_serving(cfg):
             raise ValueError(f"family {cfg.family!r} has no slot-serving path")
         if kv_layout not in KV_LAYOUTS:
@@ -661,6 +742,34 @@ class ContinuousBatchingEngine:
         if slo_weight < 0.0:
             raise ValueError("slo_weight must be >= 0")
         self.slo_weight = slo_weight
+        # -- fault tolerance (PR 10) ----------------------------------------
+        # the injection plan (None in production — every hook is then one
+        # None-check), the optional fence watchdog (True builds a default
+        # StepWatchdog; a pre-built instance lets tests inject a clock),
+        # the per-request fault budget, and the clean-span probation
+        # window a demoted ladder rung must survive to re-promote
+        self.faults = fault_plan
+        if watchdog is True:
+            watchdog = StepWatchdog()
+        self.watchdog: Optional[StepWatchdog] = watchdog or None
+        if max_request_faults < 1:
+            raise ValueError("max_request_faults must be >= 1")
+        self.max_request_faults = max_request_faults
+        if probation_steps < 1:
+            raise ValueError("probation_steps must be >= 1")
+        self.probation_steps = probation_steps
+        if max_queue_depth is not None and max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1")
+        self.max_queue_depth = max_queue_depth
+        # runtime variant demotions: ladder rung -> clean decode spans
+        # still owed before re-promotion.  A demoted rung pins its safe
+        # variant through the _resolve_*/_select_* resolvers; the VPE's
+        # own selection state is untouched, so re-promotion is just the
+        # pin lifting.
+        self._demoted: Dict[str, int] = {}
+        # deadline sweeps only arm once a deadline-carrying request has
+        # been submitted — the common no-deadline workload pays nothing
+        self._deadlines_live = False
         # -- device mesh (mp tensor shards; dp replicas live one level up) --
         # mesh_shape=(1, 1) with no explicit devices is the bitwise no-op
         # fallback: no mesh is built, nothing is device_put, dispatch keys
@@ -1026,30 +1135,78 @@ class ContinuousBatchingEngine:
         req.submit_t = time.perf_counter()
         err = _intake_error(req, self.max_len)
         if err is not None:
-            self._reject(req, err)
+            self._fail_request(req, "intake", err)
             return
+        if self.max_queue_depth is not None \
+                and len(self.queue) >= self.max_queue_depth:
+            # admission-bound shedding: refuse load while it is still a
+            # host-side queue entry, BEFORE it can compete for pages and
+            # preempt resident work — the cheap rung of overload control
+            self._fail_request(
+                req, "capacity",
+                f"queue depth {len(self.queue)} at admission bound "
+                f"{self.max_queue_depth}")
+            return
+        if req.deadline_s is not None:
+            self._deadlines_live = True
         req.status = "queued"
         self.queue.append(req)
 
-    def _reject(self, req: Request, why: str) -> None:
-        """Terminally fail a submission: error recorded on the request,
-        completed immediately, never queued — the engine keeps serving.
+    def _fail_request(self, req: Request, reason: str, detail: str,
+                      slot: Optional[int] = None) -> None:
+        """Terminally fail a request — the ONE failure path, intake
+        through mid-flight: reason code + human detail recorded,
+        completed immediately, the engine keeps serving.
 
         The failed request gets the same terminal accounting as a served
-        one: ``done_t`` is stamped and its (terminal) queue wait recorded
-        on the REQUEST, so per-request latency invariants hold for the
-        whole population.  The engine-level ``stats.queue_wait_s`` series
-        stays admitted-requests-only (its mean is a statement about
-        scheduling, not intake validation); the failed population is
-        exposed separately as :attr:`ServeStats.failed_requests`, so
-        ``submitted == len(stats.queue_wait_s) + stats.failed_requests``
-        once drained — the two counts can no longer silently disagree."""
-        req.error = why
+        one: ``done_t`` is stamped, a never-admitted failure records its
+        (terminal) queue wait on the REQUEST, and an admitted one keeps
+        the queue wait its admission already recorded — closing the PR 7
+        gap where a mid-flight failure lacked ``done_t``.  The
+        engine-level ``stats.queue_wait_s`` series stays
+        admitted-requests-only, and ``rejected`` counts the
+        never-admitted subset, so ``submitted == len(stats.queue_wait_s)
+        + stats.rejected`` once drained; the full failed population is
+        :attr:`ServeStats.failed_requests` via the per-reason counters.
+
+        ``slot`` detaches an in-flight residency first: pages released
+        (every page a slot owns is refcounted, so release is the exact
+        rollback of its reservations), prefix pin dropped, proposer
+        context forgotten, device masks dirtied."""
+        assert reason in FAIL_REASONS, reason
+        if slot is not None:
+            s = self.slots[slot]
+            if s.layout == "paged" and s.pages:
+                self._release_slot_pages(slot)
+            s.req = None
+            s.prefilling = False
+            s.fill_pos = 0
+            s.pos = 0
+            s.chunk_walls = []
+            s.chunk_costs = []
+            s.reuse_bucket = None
+            s.chunk_bucket = None
+            s.kernel_bucket = None
+            s.admit_bucket = None
+            if self.proposer is not None:
+                self.proposer.forget_slot(slot)
+            self._masks_dirty = True
+        if req.cache_handle is not None:
+            self.prefix_cache.release(req.cache_handle)
+            req.cache_handle = None
+        req.swap = None
+        req.error = reason
+        req.error_detail = detail
         req.status = "failed"
         req.done = True
         req.done_t = time.perf_counter()
-        req.queue_wait_s = req.done_t - req.submit_t
-        self.stats.rejected += 1
+        if req.admit_step < 0:
+            req.queue_wait_s = req.done_t - req.submit_t
+            self.stats.rejected += 1
+        else:
+            req.done_step = self.stats.decode_steps
+        self.stats.failed_by_reason[reason] = \
+            self.stats.failed_by_reason.get(reason, 0) + 1
         self.completed.append(req)
 
     def _requeue(self, req: Request) -> None:
@@ -1104,7 +1261,20 @@ class ContinuousBatchingEngine:
         When the whole ladder is dry, :class:`_PagePressure` is raised
         for the CALLER to recover from — placement rolls back
         all-or-nothing and requeues, decode growth preempts the growing
-        slot itself.  Nothing escapes the engine."""
+        slot itself.  Nothing escapes the engine.
+
+        An injected ``page_alloc`` device fault raises
+        :class:`SimulatedFault` here instead: the same callers own the
+        same rollback obligations (placement re-uses its all-or-nothing
+        unref; growth/admit charge the requesting request's fault
+        budget), so allocation faults prove the rollback paths against
+        a failure :class:`_PagePressure` cannot model — one that
+        retrying/preempting harder will not fix."""
+        fault = self._take_fault("page_alloc")
+        if fault is not None:
+            raise SimulatedFault(
+                f"injected page-pool allocation fault at call "
+                f"#{self.faults.calls['page_alloc'] - 1}")
         pid = self.pages.alloc()
         while pid is None:
             if self.prefix_cache is not None and self.prefix_cache.evict(1):
@@ -1281,6 +1451,169 @@ class ContinuousBatchingEngine:
                 owners[pid] = owners.get(pid, 0) + 1
         self.pages.check(owners)
 
+    # -- fault tolerance: the recovery ladder (PR 10) ------------------------
+    # A faulted span quarantines the VARIANT before the engine: each
+    # ladder rung names a dispatch decision with a known-safe bottom
+    # (docs/kernel_variants.md, docs/speculative_decoding.md fallback
+    # ladders, now usable as runtime demotions):
+    #   decode_pallas  — kernel-backed decode attention -> grouped/gather
+    #   prefill_pallas — block-indirect chunk attention -> gather
+    #   spec           — speculative verify             -> off
+    #   horizon        — fused multi-token calls        -> 1 step/call
+    # A demotion pins the safe variant through the _resolve_*/_select_*
+    # resolvers for ``probation_steps`` clean decode spans, then lifts —
+    # the VPE's measured selection state is never touched, so
+    # re-promotion costs nothing and the axis resumes exactly where the
+    # fault interrupted it.
+
+    def _take_fault(self, site: str):
+        """The injection hook: one per-site plan lookup (None without a
+        plan — production pays a single attribute check per span)."""
+        return self.faults.take(site) if self.faults is not None else None
+
+    def _rung_demoted(self, rung: str) -> bool:
+        return rung in self._demoted
+
+    def _demote(self, rung: str) -> None:
+        """Quarantine a ladder rung for a fresh probation window (a
+        repeat fault refreshes the window without recounting the
+        demotion).  Demoting the prefill kernel also re-resolves slots
+        already mid-prefill — their NEXT chunk must not re-run the
+        faulted backend."""
+        if rung not in self._demoted:
+            self.stats.demotions[rung] = self.stats.demotions.get(rung, 0) + 1
+        self._demoted[rung] = self.probation_steps
+        if rung == "prefill_pallas":
+            for s in self.slots:
+                if s.prefilling and s.kernel in kvcache.PAGED_KERNEL_IMPLS:
+                    s.kernel = "gather"
+                    s.kernel_bucket = None      # mixed-backend walls: drop
+
+    def _tick_probation(self) -> None:
+        """One CLEAN decode span survived (no fault taken, no watchdog
+        trip): every demoted rung's probation counts down; at zero the
+        pin lifts and the variant is eligible again (VPE re-promotion —
+        the controller's selection was never overwritten)."""
+        for rung in list(self._demoted):
+            self._demoted[rung] -= 1
+            if self._demoted[rung] <= 0:
+                del self._demoted[rung]
+                self.stats.repromotions += 1
+
+    def _charge_fault(self, req: Request) -> bool:
+        """Charge one fault against the request's budget; True means the
+        budget is spent and the request must fail terminally."""
+        req.faults += 1
+        return req.faults >= self.max_request_faults
+
+    def _numeric_fault(self, i: int, detail: str) -> None:
+        """Slot-level quarantine for poisoned logits: everything this
+        span wrote to the slot's KV is untrusted (garbage K/V can land
+        under any NaN logit), so the slot is preempted WITHOUT swap —
+        swap would faithfully preserve the poison — and the request
+        resumes by recomputing clean KV from
+        :meth:`Request.effective_prompt` (only validated tokens were
+        ever committed to ``out``).  Poisoned decode writes land only in
+        the slot's private tail pages (aliased tree pages are read-only
+        to decode; the first writable block is COW-cloned at admission),
+        so releasing the slot's pages discards every tainted byte.  A
+        request whose fault budget is spent fails terminally instead."""
+        slot = self.slots[i]
+        req = slot.req
+        self.stats.numeric_faults += 1
+        if self._charge_fault(req):
+            self._fail_request(req, "numeric_fault", detail, slot=i)
+            return
+        swap_save, self.swap = self.swap, False
+        try:
+            self._preempt_slot(i)
+        finally:
+            self.swap = swap_save
+
+    def _span_device_fault(self, rung: Optional[str],
+                           touched: Sequence[int], detail: str) -> None:
+        """Recover from a device fault at a decode-span boundary.  The
+        fault fires BEFORE dispatch (the decode/fused/spec jits donate
+        pool + cache, so a post-call fault would leave consumed buffers
+        — that failure mode is the replica group's job), which means
+        engine state is intact and the touched slots simply retry next
+        step.
+
+        Ladder: blame the VARIANT first — demote ``rung`` and retry.
+        When there is no rung left to blame (the fault hit the safe
+        bottom variant, or the rung was already demoted), charge the
+        touched requests' fault budgets and terminally fail the
+        exhausted ones.  Either way reserved-but-unwritten horizon pages
+        roll back, so the pool stays audit-clean."""
+        self.stats.device_faults += 1
+        variant_blamed = rung is not None and not self._rung_demoted(rung)
+        if rung is not None:
+            self._demote(rung)
+        for i in list(touched):
+            slot = self.slots[i]
+            if slot.req is None or slot.prefilling:
+                continue
+            if not variant_blamed and self._charge_fault(slot.req):
+                self._fail_request(slot.req, "device_fault", detail, slot=i)
+            elif slot.layout == "paged":
+                self._rollback_reserved(i)
+
+    def _guarded_fence(self, value, fault) -> Tuple[np.ndarray, bool]:
+        """Fence a decode span's token output, through the watchdog when
+        one is armed; returns ``(host_value, tripped)``.
+
+        A trip — injected ``stall`` or a real fence overshooting the
+        EWMA budget — does NOT discard the span: the value arrived, just
+        late, so the caller commits it and demotes the variant that
+        stalled.  :meth:`StepWatchdog.guard` raises with the fence
+        already drained, so the post-raise ``np.asarray`` is a cheap
+        host conversion, not a second wait."""
+        if fault is not None and fault.kind == "stall":
+            # planned stall: count the trip without wall-clock sleeping
+            # (the EWMA budget is real time; tests must stay fast)
+            if self.watchdog is not None:
+                self.watchdog.trips += 1
+            self.stats.watchdog_trips += 1
+            return np.asarray(value), True
+        if self.watchdog is not None:
+            try:
+                return np.asarray(self.watchdog.guard(value)), False
+            except StragglerTimeout as e:
+                self.stats.watchdog_trips += 1
+                return np.asarray(value), True
+        return np.asarray(value), False
+
+    def _deadline_expired(self, req: Request, now: float) -> bool:
+        return (req.deadline_s is not None
+                and now - req.submit_t > req.deadline_s)
+
+    def _shed_expired(self) -> None:
+        """Deadline enforcement sweep (armed only once a deadline-
+        carrying request exists): expired QUEUED requests shed host-side
+        and expired RUNNING slots stop burning decode steps on answers
+        nobody is waiting for.  Runs at the top of :meth:`step` — which
+        is also every fused-call boundary, so a deadline expiring
+        mid-residency is honored at the next span edge."""
+        if not self._deadlines_live:
+            return
+        now = time.perf_counter()
+        expired = [r for r in self.queue if self._deadline_expired(r, now)]
+        if expired:
+            self.queue = [r for r in self.queue
+                          if not self._deadline_expired(r, now)]
+            for r in expired:
+                self._fail_request(
+                    r, "deadline",
+                    f"expired in queue after {now - r.submit_t:.3f}s "
+                    f"(deadline {r.deadline_s:.3f}s)")
+        for i, s in enumerate(self.slots):
+            if s.req is not None and not s.req.canary \
+                    and self._deadline_expired(s.req, now):
+                self._fail_request(
+                    s.req, "deadline",
+                    f"expired after {now - s.req.submit_t:.3f}s resident "
+                    f"(deadline {s.req.deadline_s:.3f}s)", slot=i)
+
     # -- prefix-aware admission scheduling ----------------------------------
     def _pop_next(self) -> Request:
         """Pick the next request to admit.
@@ -1354,6 +1687,14 @@ class ContinuousBatchingEngine:
             slot = self.slots[i]
             req = self._pop_next()
             now = time.perf_counter()
+            if self._deadline_expired(req, now):
+                # expired while queued: shed at the admission edge
+                # instead of spending placement + prefill on it
+                self._fail_request(
+                    req, "deadline",
+                    f"expired in queue after {now - req.submit_t:.3f}s "
+                    f"(deadline {req.deadline_s:.3f}s)")
+                continue
             if req.admit_step < 0:
                 # first admission only: a preempted request keeps its
                 # original queue-wait/admit-step record — the soak
@@ -1424,6 +1765,19 @@ class ContinuousBatchingEngine:
                     # still guaranteed — resident slots keep decoding,
                     # retiring slots free pages, and the pool floor
                     # (nb_max + 2) means a lone request always fits.
+                    self._unadmit(i, req)
+                    return
+                except SimulatedFault as e:
+                    # a device fault during placement (injected page
+                    # allocation failure): placement already rolled its
+                    # references back all-or-nothing, so the pool is
+                    # clean — charge the request's fault budget and
+                    # either retry it later or fail it terminally
+                    self.stats.device_faults += 1
+                    if self._charge_fault(req):
+                        self._fail_request(req, "device_fault", str(e),
+                                           slot=i)
+                        continue
                     self._unadmit(i, req)
                     return
                 continue
@@ -1547,14 +1901,22 @@ class ContinuousBatchingEngine:
         """Fallback ladder for decode variants: a kernel-backed name
         resolves to "grouped" (whose paged read is the gather path)
         whenever this engine fails the pallas capability gate — a pinned
-        or foreign-engine-selected "pallas" degrades, never crashes."""
-        if name in kvcache.PAGED_KERNEL_IMPLS and not self._pallas_ok:
+        or foreign-engine-selected "pallas" degrades, never crashes.
+        Since PR 10 the same ladder serves as a RUNTIME demotion: a
+        device fault attributed to the kernel path pins the resolution
+        for a probation window (docs/fault_tolerance.md)."""
+        if name in kvcache.PAGED_KERNEL_IMPLS \
+                and (not self._pallas_ok
+                     or self._rung_demoted("decode_pallas")):
             return "grouped"
         return name
 
     def _resolve_kernel(self, name: str) -> str:
-        """Same ladder for the prefill chunk-attention backend."""
-        if name in kvcache.PAGED_KERNEL_IMPLS and not self._pallas_ok:
+        """Same ladder (capability gate + runtime demotion) for the
+        prefill chunk-attention backend."""
+        if name in kvcache.PAGED_KERNEL_IMPLS \
+                and (not self._pallas_ok
+                     or self._rung_demoted("prefill_pallas")):
             return "gather"
         return name
 
@@ -1646,7 +2008,9 @@ class ContinuousBatchingEngine:
                 P = 0
                 pages, _starts = self._suffix_page_ids(
                     0, S, None, exclude=i, rank=rank, acquired=acquired)
-        except _PagePressure:
+        except (_PagePressure, SimulatedFault):
+            # same all-or-nothing rollback for pressure AND injected
+            # allocation faults: a failed placement leaks zero pages
             for pid in aliased + acquired:
                 self.pages.unref(pid)
             self.stats.placement_rollbacks += 1
@@ -1717,6 +2081,22 @@ class ContinuousBatchingEngine:
         its pages.  The final chunk yields the first generated token."""
         slot = self.slots[i]
         req = slot.req
+        fault = self._take_fault("prefill")
+        if fault is not None and fault.kind == "device":
+            # the chunk call raised before dispatch: nothing was
+            # computed, fill_pos is untouched.  Blame the kernel backend
+            # when one ran (demotion re-resolves this slot's NEXT chunk
+            # to gather in place); otherwise charge the request.
+            self.stats.device_faults += 1
+            if slot.kernel in kvcache.PAGED_KERNEL_IMPLS:
+                self._demote("prefill_pallas")
+            elif self._charge_fault(req):
+                self._fail_request(
+                    req, "device_fault",
+                    "injected device fault in prefill chunk", slot=i)
+            else:
+                self._preempt_slot(i)
+            return
         prompt = req.effective_prompt()
         S = len(prompt)
         base = slot.fill_pos
@@ -1745,6 +2125,19 @@ class ContinuousBatchingEngine:
             slot.tainted = True
         self.stats.prefill_s += dt
         self.stats.prefill_chunks += 1
+        if fault is not None:
+            if fault.kind == "nan":
+                # poisoned chunk logits: the K/V this chunk scattered is
+                # untrusted too — quarantine the slot (recompute-resume)
+                # before fill_pos could count the poisoned positions
+                self._numeric_fault(
+                    i, "injected NaN logits in prefill chunk")
+                return
+            # stall: the value arrived late — commit it, count the trip
+            if self.watchdog is not None:
+                self.watchdog.trips += 1
+            self.stats.watchdog_trips += 1
+            slot.tainted = True
         slot.fill_pos = base + clen
         if slot.fill_pos >= S:
             self._finish_prefill(i, logits)
@@ -2107,6 +2500,17 @@ class ContinuousBatchingEngine:
                 # own residency (pages already appended this loop are
                 # released with the rest of the slot's pages)
                 self._preempt_slot(i)
+            except SimulatedFault as e:
+                # injected allocation fault mid-growth: the slot's KV is
+                # clean (nothing was computed), so the request either
+                # retries via preemption-resume or — budget spent —
+                # fails terminally; its pages release either way
+                self.stats.device_faults += 1
+                if self._charge_fault(slot.req):
+                    self._fail_request(slot.req, "device_fault", str(e),
+                                       slot=i)
+                else:
+                    self._preempt_slot(i)
         splices = [(i, col, pid) for (i, col, pid) in splices
                    if self.slots[i].req is not None
                    and col < len(self.slots[i].pages)
@@ -2229,6 +2633,11 @@ class ContinuousBatchingEngine:
         VPE bucket + variant name).  The bucket is keyed by the queue
         depth REMAINING after this step's admission phase — the requests
         a fused horizon would actually delay — × occupancy."""
+        if self._rung_demoted("horizon"):
+            # runtime demotion overrides even a pinned horizon: a
+            # faulted fused span retries as single steps until the
+            # probation window passes (docs/fault_tolerance.md)
+            return 1, None, None
         if self.decode_horizon != "auto":
             return int(self.decode_horizon), None, None
         bucket = decode_horizon_bucket(len(self.queue), n_active,
@@ -2302,6 +2711,7 @@ class ContinuousBatchingEngine:
         on-device loop, fence once on the (slots, H) token block, replay
         it into per-request outputs, retire stopped slots and roll their
         unused reserved pages back."""
+        fault = self._take_fault("fused")
         bt_jits = self._bt_jit_cache_size()
         if self.pages is not None:
             self._grow_block_tables(span=H, remaining=remaining)
@@ -2314,6 +2724,14 @@ class ContinuousBatchingEngine:
             if not remaining:
                 return
             self._refresh_device_masks()
+        if fault is not None and fault.kind == "device":
+            # the fused call raised before dispatch: donated buffers
+            # unconsumed, horizon reservations rolled back, the horizon
+            # rung demoted — next step retries as single steps
+            self._span_device_fault(
+                "horizon", list(remaining),
+                "injected device fault in fused horizon call")
+            return
         n_active = len(remaining)
         bucket = occupancy_bucket(n_active, self.num_slots,
                                   levels=self.occupancy_levels) \
@@ -2340,7 +2758,7 @@ class ContinuousBatchingEngine:
             cache, tok_block, valid, final_tok = fn(
                 self.params, self.cache, self._tok_dev, self._live_dev,
                 self._eos_dev, bud_dev)
-        toks = np.asarray(tok_block)     # ONE fence for the whole horizon
+        toks, tripped = self._guarded_fence(tok_block, fault)
         emits = np.asarray(valid)
         dt = time.perf_counter() - t0
         self.cache = cache
@@ -2349,17 +2767,32 @@ class ContinuousBatchingEngine:
         self.stats.decode_steps += H
         self.stats.horizon_calls += 1
         self.stats.horizon_hist[H] = self.stats.horizon_hist.get(H, 0) + 1
+        if tripped:
+            # the fence stalled: the tokens DID arrive (committed
+            # below), but the fused span is what hung — demote the
+            # horizon rung so the next calls stay host-interruptible
+            self._demote("horizon")
+        if fault is not None and fault.kind == "nan":
+            # poisoned logits: out-of-vocab sentinel on the planned
+            # slot's rows (or all) — the always-on validation below
+            # quarantines exactly the slots a real NaN would hit
+            toks = toks.copy()
+            rows = ([fault.slot] if fault.slot is not None
+                    and fault.slot in remaining else list(remaining))
+            toks[rows, :] = -1
         if jits == -1:
             step_tainted = self._fused_fn_created
         else:
             step_tainted = fn._cache_size() != jits
         if bt_jits != -1 and self._bt_jit_cache_size() != bt_jits:
             step_tainted = True     # a splice jit compiled inside t_h
+        if tripped:
+            step_tainted = True     # a stalled wall must not feed axes
         if step_tainted:
             self.stats.tainted_steps += 1
         valid_total = int(emits.sum())
         self.stats.horizon_tokens += valid_total
-        if self.vpe is not None:
+        if self.vpe is not None and not tripped:
             # the decode-attention axis keeps per-STEP units (dt / H,
             # the same quantity its single-step samples measure)
             self.vpe.profiler.record(self._axis, self._last_variant, bucket,
@@ -2367,6 +2800,8 @@ class ContinuousBatchingEngine:
             self.vpe.controller.on_sample(self._axis, bucket,
                                           self._last_variant)
         share = dt / max(valid_total, 1)
+        vocab = self.cfg.vocab_size
+        quarantine: List[int] = []
         probe_off = probe_acc = 0
         self._probe_tick += 1
         probing = (self.spec_draft == "auto"
@@ -2377,6 +2812,15 @@ class ContinuousBatchingEngine:
             # contiguous prefix of the horizon
             e = int(emits[i].sum())
             new_toks = [int(t) for t in toks[i, :e]]
+            if any(t < 0 or t >= vocab for t in new_toks):
+                # always-on numeric validation: an out-of-range token
+                # means this call's logits for the slot were garbage —
+                # NOTHING from the call is committed for it (mid-span
+                # poison taints the whole span) and the slot is
+                # quarantined after the replay loop (preempting inside
+                # it would mutate the slots being iterated)
+                quarantine.append(i)
+                continue
             slot.req.out.extend(new_toks)
             if self.proposer is not None:
                 if probing and new_toks:
@@ -2394,7 +2838,12 @@ class ContinuousBatchingEngine:
             if slot.layout == "paged":
                 self._rollback_reserved(i)
             self._retire_if_done(i)
+        for i in quarantine:
+            self._numeric_fault(
+                i, "out-of-range token from fused horizon call")
         self._update_accept_ema(probe_off, probe_acc)
+        if fault is None and not tripped:
+            self._tick_probation()
         if self.vpe is not None and hbucket is not None \
                 and not step_tainted and valid_total:
             # per-TOKEN wall of the FULL span (reservation + call +
@@ -2460,6 +2909,11 @@ class ContinuousBatchingEngine:
         extends the horizon axis's queue-depth × occupancy key with the
         engine's measured accept-rate level — the workload dimension
         that decides whether a wider verify pass pays."""
+        if self._rung_demoted("spec"):
+            # runtime demotion: speculation off for the probation
+            # window, no spec-axis sample recorded (the off-variant
+            # feed stays honest — no fault-window walls pollute it)
+            return 0, None, None
         if self.spec_draft == "off":
             return 0, None, None
         if self.spec_draft != "auto":
@@ -2515,6 +2969,7 @@ class ContinuousBatchingEngine:
         the differences are the host-built (slots, S) token block (the
         drafts) and the accept-rate accounting that feeds the spec
         axis's bucket level."""
+        fault = self._take_fault("spec")
         bt_jits = self._bt_jit_cache_size()
         if self.pages is not None:
             self._grow_block_tables(span=S, remaining=remaining)
@@ -2524,6 +2979,13 @@ class ContinuousBatchingEngine:
             if not remaining:
                 return
             self._refresh_device_masks()
+        if fault is not None and fault.kind == "device":
+            # verify pass raised before dispatch: reservations rolled
+            # back, spec demoted to off — next steps run plain decode
+            self._span_device_fault(
+                "spec", list(remaining),
+                "injected device fault in speculative verify call")
+            return
         n_active = len(remaining)
         # host-side drafting: column 0 is the slot's committed last
         # token (the verify input contract — its score is the token a
@@ -2555,7 +3017,7 @@ class ContinuousBatchingEngine:
             cache, self.page_pool, tok_block, valid, final_tok = fn(
                 self.params, self.cache, self.page_pool, tok_dev,
                 self._use_paged_dev, self._live_dev, self._eos_dev, bud_dev)
-        toks = np.asarray(tok_block)     # ONE fence for the whole span
+        toks, tripped = self._guarded_fence(tok_block, fault)
         emits = np.asarray(valid)
         dt = time.perf_counter() - t0
         self.cache = cache
@@ -2563,16 +3025,29 @@ class ContinuousBatchingEngine:
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
         self.stats.spec_calls += 1
+        if tripped:
+            # verify-pass fence stalled: commit the (late) tokens but
+            # demote speculation — its span is the one that hung
+            self._demote("spec")
+        if fault is not None and fault.kind == "nan":
+            toks = toks.copy()
+            rows = ([fault.slot] if fault.slot is not None
+                    and fault.slot in remaining else list(remaining))
+            toks[rows, :] = -1
         if jits == -1:
             step_tainted = self._spec_fn_created
         else:
             step_tainted = fn._cache_size() != jits
         if bt_jits != -1 and self._bt_jit_cache_size() != bt_jits:
             step_tainted = True     # a splice jit compiled inside t_h
+        if tripped:
+            step_tainted = True     # a stalled wall must not feed axes
         if step_tainted:
             self.stats.tainted_steps += 1
         valid_total = int(emits.sum())
         share = dt / max(valid_total, 1)
+        vocab = self.cfg.vocab_size
+        quarantine: List[int] = []
         offered_total = accepted_total = 0
         for i in remaining:
             slot = self.slots[i]
@@ -2580,6 +3055,11 @@ class ContinuousBatchingEngine:
             # (match, budget and EOS masks are all prefixes)
             e = int(emits[i].sum())
             new_toks = [int(t) for t in toks[i, :e]]
+            if any(t < 0 or t >= vocab for t in new_toks):
+                # poisoned verify logits: commit nothing from this call
+                # for the slot, quarantine it after the replay loop
+                quarantine.append(i)
+                continue
             # drafts this slot's budget could still have committed
             # (committing k drafts needs k+1 <= budget), vs the drafts
             # that actually landed (everything before the correction)
@@ -2602,7 +3082,12 @@ class ContinuousBatchingEngine:
             if slot.layout == "paged":
                 self._rollback_reserved(i)
             self._retire_if_done(i)
+        for i in quarantine:
+            self._numeric_fault(
+                i, "out-of-range token from speculative verify call")
         self._update_accept_ema(offered_total, accepted_total)
+        if fault is None and not tripped:
+            self._tick_probation()
         if self.vpe is not None and sbucket is not None \
                 and not step_tainted and valid_total:
             # per-COMMITTED-token wall of the full span (drafting +
@@ -2625,6 +3110,7 @@ class ContinuousBatchingEngine:
         between two decode steps is bounded by the chunk budget, not by
         the longest queued prompt (``stats.decode_stall_s`` records that
         bound being exercised)."""
+        self._shed_expired()     # deadline sweep at the step boundary
         had_decoders = self.num_decoding > 0
         admits_before = len(self.stats.queue_wait_s)
         t_p = time.perf_counter()
@@ -2698,6 +3184,7 @@ class ContinuousBatchingEngine:
             self._fused_decode(H, hbucket, hname, remaining, t_h)
             return True
         # -- classic single-token step (the horizon-1 incumbent) ----------
+        fault = self._take_fault("decode")
         bt_jits = self._bt_jit_cache_size()
         if self.pages is not None:
             self._grow_block_tables()
@@ -2711,6 +3198,19 @@ class ContinuousBatchingEngine:
                                   levels=self.occupancy_levels) \
             + self._shard_tail
         fn = self._decode_fn(bucket)
+        if fault is not None and fault.kind == "device":
+            # raised before dispatch (donated buffers unconsumed).
+            # Blame the kernel variant only when one actually ran: the
+            # grouped incumbent has no rung below it, so its faults
+            # charge the touched requests instead.
+            resolved = self._resolve_impl(self._last_variant)
+            rung = ("decode_pallas"
+                    if resolved in kvcache.PAGED_KERNEL_IMPLS else None)
+            touched = [i for i, s in enumerate(self.slots)
+                       if s.req is not None and not s.prefilling]
+            self._span_device_fault(
+                rung, touched, "injected device fault in decode step")
+            return True
         try:
             decode_jits = fn._cache_size()
         except AttributeError:  # pragma: no cover - older/newer jax
@@ -2726,13 +3226,25 @@ class ContinuousBatchingEngine:
                 self._use_paged_dev, self._live_dev)
         else:
             cache, next_tok = fn(self.params, self.cache, self._tok_dev)
-        toks = np.asarray(next_tok)  # fences the step
+        toks, tripped = self._guarded_fence(next_tok, fault)
         dt = time.perf_counter() - t0
         self.cache = cache
         self._tok_dev = next_tok     # next step's input, already on device
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
         self.stats.horizon_hist[1] = self.stats.horizon_hist.get(1, 0) + 1
+        if tripped and self._resolve_impl(self._last_variant) \
+                in kvcache.PAGED_KERNEL_IMPLS:
+            # a kernel-backed step hung the fence: demote to grouped.
+            # A grouped stall has nothing to demote to — it is counted
+            # (watchdog_trips) and survives as a tainted step.
+            self._demote("decode_pallas")
+        if fault is not None and fault.kind == "nan":
+            toks = toks.copy()
+            if fault.slot is not None:
+                toks[fault.slot] = -1
+            else:
+                toks[:] = -1
         # a step whose wall includes a decode-jit trace+compile must not
         # feed the per-slot attribution (decode shapes are static here,
         # so compiles happen exactly when a variant is first baked in —
@@ -2743,12 +3255,16 @@ class ContinuousBatchingEngine:
             step_tainted = fn._cache_size() != decode_jits
         if bt_jits != -1 and self._bt_jit_cache_size() != bt_jits:
             step_tainted = True     # a splice jit compiled inside t_h
+        if tripped:
+            step_tainted = True     # a stalled wall must not feed axes
         if step_tainted:
             self.stats.tainted_steps += 1
-        if self.vpe is not None:
+        if self.vpe is not None and not tripped:
             self.vpe.profiler.record(self._axis, self._last_variant, bucket, dt)
             self.vpe.controller.on_sample(self._axis, bucket, self._last_variant)
         share = dt / n_active
+        vocab = self.cfg.vocab_size
+        quarantine: List[int] = []
         probe_off = probe_acc = 0
         self._probe_tick += 1
         probing = (self.spec_draft == "auto"
@@ -2757,6 +3273,10 @@ class ContinuousBatchingEngine:
             if slot.req is None or slot.prefilling:
                 continue   # free/prefilling slot decoded garbage; discard
             t = int(toks[i])
+            if t < 0 or t >= vocab:
+                # always-on numeric validation (see _fused_decode)
+                quarantine.append(i)
+                continue
             slot.tok = t
             slot.pos += 1
             slot.steps_resident += 1
@@ -2770,7 +3290,11 @@ class ContinuousBatchingEngine:
                 self.proposer.observe(i, [t])
             self.stats.tokens_out += 1
             self._retire_if_done(i)
+        for i in quarantine:
+            self._numeric_fault(i, "out-of-range token from decode step")
         self._update_accept_ema(probe_off, probe_acc)
+        if fault is None and not tripped:
+            self._tick_probation()
         if self.vpe is not None and hbucket is not None and not step_tainted:
             # the horizon axis optimizes the per-TOKEN wall of the FULL
             # step span (host bookkeeping + device call + replay): one
@@ -2847,13 +3371,30 @@ class EngineReplicaGroup:
     Every replica is constructed with the full ``(dp, mp)``
     ``shard_dims``, so all replicas' dispatch keys carry the same
     shard segment and a shared ``vpe`` learns ONE policy per mesh
-    configuration from every replica's samples."""
+    configuration from every replica's samples.
+
+    **Failover (PR 10).** The group is the recovery rung ABOVE the
+    engine's degradation ladder: a replica that keeps producing fault
+    evidence (terminal device/numeric step faults, repeated watchdog
+    fence trips, dispatch losses) past ``replica_fault_budget`` since
+    its last clean window is quarantined — its resident requests are
+    preempted (exact greedy resume via ``effective_prompt``) and its
+    queue drained back to the shared queue at class head, so survivors
+    rerun identically on healthy replicas.  A quarantined replica is
+    probed with canary requests (synthetic, excluded from
+    :attr:`completed`); one clean canary run re-admits it and resets
+    its evidence base.  A single shared :class:`FaultPlan` drives the
+    whole group — replicas consume sites in deterministic step order,
+    so group chaos runs replay exactly."""
 
     def __init__(self, cfg: ModelConfig, params: Any, *, dp: int, mp: int,
+                 replica_fault_budget: int = 3,
                  **engine_kwargs: Any) -> None:
         if dp < 2:
             raise ValueError("EngineReplicaGroup needs dp >= 2 "
                              "(a single replica is just the engine)")
+        if replica_fault_budget < 1:
+            raise ValueError("replica_fault_budget must be >= 1")
         need = dp * mp
         devs = jax.devices()
         if len(devs) < need:
@@ -2864,7 +3405,20 @@ class EngineReplicaGroup:
         self.mesh_shape = (dp, mp)
         self.queue: List[Request] = []
         self._failed: List[Request] = []
-        self._stats = ServeStats()           # group-level intake rejections
+        self._stats = ServeStats()   # group-level failures + failover events
+        # the plan is SHARED with every replica (not copied): sites are
+        # consumed in group-step order, one deterministic schedule.  The
+        # admission bound guards the SHARED queue; replica-local queues
+        # are dispatch buffers bounded by free slots, so the engines get
+        # no depth bound of their own.
+        self.faults: Optional[FaultPlan] = engine_kwargs.get("fault_plan")
+        self.max_queue_depth: Optional[int] = \
+            engine_kwargs.pop("max_queue_depth", None)
+        if self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1")
+        self.max_request_faults: int = \
+            engine_kwargs.get("max_request_faults", 3)
+        self.replica_fault_budget = replica_fault_budget
         self.engines = [
             ContinuousBatchingEngine(
                 cfg, params, mesh_shape=(1, mp),
@@ -2873,24 +3427,164 @@ class EngineReplicaGroup:
             for r in range(dp)
         ]
         self.max_len = self.engines[0].max_len
+        self.quarantined: set = set()
+        # per-replica evidence floor: fault evidence BELOW the floor was
+        # already acted on (a quarantine or a clean canary resets it)
+        self._ev_base = [0] * dp
+        self._dispatch_faults = [0] * dp
+        # replica -> (in-flight canary, evidence snapshot at launch)
+        self._canary: Dict[int, Tuple[Request, int]] = {}
+        self._canary_seq = 0
+        self._deadlines_live = False
 
     # -- request intake ----------------------------------------------------
     def submit(self, req: Request) -> None:
         """Enqueue on the SHARED queue — or terminally fail, with the
-        same semantics and messages as the single engine."""
+        same taxonomy as the single engine (reason code + detail)."""
         req.submit_t = time.perf_counter()
         err = _intake_error(req, self.max_len)
         if err is not None:
-            req.error = err
-            req.status = "failed"
-            req.done = True
-            req.done_t = time.perf_counter()
-            req.queue_wait_s = req.done_t - req.submit_t
-            self._stats.rejected += 1
-            self._failed.append(req)
+            self._fail(req, "intake", err)
             return
+        if self.max_queue_depth is not None \
+                and len(self.queue) >= self.max_queue_depth:
+            self._fail(
+                req, "capacity",
+                f"queue depth {len(self.queue)} at admission bound "
+                f"{self.max_queue_depth}")
+            return
+        if req.deadline_s is not None:
+            self._deadlines_live = True
         req.status = "queued"
         self.queue.append(req)
+
+    def _fail(self, req: Request, reason: str, detail: str) -> None:
+        """Group-side terminal failure — same accounting contract as the
+        engine's ``_fail_request`` for a request not resident anywhere:
+        reason code, detail, ``done_t``, and a terminal queue wait when
+        it was never admitted by any replica."""
+        assert reason in FAIL_REASONS, reason
+        req.swap = None
+        req.error = reason
+        req.error_detail = detail
+        req.status = "failed"
+        req.done = True
+        req.done_t = time.perf_counter()
+        if req.admit_step < 0:
+            req.queue_wait_s = req.done_t - req.submit_t
+            self._stats.rejected += 1
+        self._stats.failed_by_reason[reason] = \
+            self._stats.failed_by_reason.get(reason, 0) + 1
+        self._failed.append(req)
+
+    # -- replica failover ---------------------------------------------------
+    def _evidence(self, r: int) -> int:
+        """Cumulative fault evidence against replica *r*: step-level
+        faults its own ladder absorbed or failed on, watchdog fence
+        trips, and dispatch losses."""
+        s = self.engines[r].stats
+        return (s.device_faults + s.numeric_faults + s.watchdog_trips
+                + self._dispatch_faults[r])
+
+    def _quarantine_replica(self, r: int) -> None:
+        """Pull replica *r* out of dispatch and migrate its work.
+
+        Resident requests are preempted with swap DISABLED — a host
+        swap image from a faulting replica is exactly as untrusted as
+        its KV — and, with everything the replica had queued, drained
+        back to the shared queue at class head (``_requeue`` ordering:
+        ahead of their own class, behind better classes).  Greedy
+        parity makes the rerun on a survivor token-exact.  Each
+        migrated request is charged one fault so a request that keeps
+        landing on dying replicas terminates as ``replica_lost``
+        instead of migrating forever."""
+        eng = self.engines[r]
+        self.quarantined.add(r)
+        self._stats.replica_quarantines += 1
+        swap_save, eng.swap = eng.swap, False
+        try:
+            for i, s in enumerate(eng.slots):
+                if s.req is not None:
+                    eng._preempt_slot(i)
+        finally:
+            eng.swap = swap_save
+        migrated = [q for q in eng.queue if not q.canary]
+        eng.queue = [q for q in eng.queue if q.canary]
+        for req in migrated:
+            req.faults += 1
+            if req.faults >= self.max_request_faults:
+                self._fail(
+                    req, "replica_lost",
+                    f"fault budget spent migrating off replica {r}")
+            else:
+                req.status = "queued"
+                self._requeue_shared(req)
+
+    def _requeue_shared(self, req: Request) -> None:
+        """Class-head insert into the SHARED queue (the group analogue
+        of the engine's ``_requeue``)."""
+        rank = PRIORITY_RANK[req.priority]
+        pos = next((j for j, r in enumerate(self.queue)
+                    if PRIORITY_RANK[r.priority] >= rank), len(self.queue))
+        self.queue.insert(pos, req)
+
+    def _check_replicas(self) -> None:
+        for r in range(len(self.engines)):
+            if r not in self.quarantined \
+                    and self._evidence(r) - self._ev_base[r] \
+                    >= self.replica_fault_budget:
+                self._quarantine_replica(r)
+
+    def _probe_quarantined(self) -> None:
+        """Canary lifecycle: every quarantined replica always has one
+        probe in flight.  A canary that completes ``ok`` with NO new
+        fault evidence since launch re-admits the replica (evidence
+        base reset — it starts its next budget window clean); a canary
+        that fails or trips anything leaves the replica quarantined and
+        a fresh probe launches next group step."""
+        for r in sorted(self.quarantined):
+            eng = self.engines[r]
+            probe = self._canary.get(r)
+            if probe is None:
+                self._canary_seq -= 1
+                can = Request(
+                    rid=self._canary_seq,
+                    prompt=list(range(1, 9)),
+                    max_new_tokens=4,
+                    priority="interactive",
+                    canary=True)
+                self._canary[r] = (can, self._evidence(r))
+                self._stats.canary_probes += 1
+                eng.submit(can)
+                continue
+            can, ev0 = probe
+            if not can.done:
+                continue
+            del self._canary[r]
+            if can.status == "done" and self._evidence(r) == ev0:
+                self.quarantined.discard(r)
+                self._ev_base[r] = self._evidence(r)
+                self._stats.replica_readmissions += 1
+
+    def _shed_expired(self) -> None:
+        """Deadline sweep over the SHARED queue (replicas sweep their
+        own queues and slots in their step)."""
+        if not self._deadlines_live:
+            return
+        now = time.perf_counter()
+
+        def _expired(q: Request) -> bool:
+            return (q.deadline_s is not None
+                    and now - q.submit_t > q.deadline_s)
+
+        expired = [q for q in self.queue if _expired(q)]
+        if expired:
+            self.queue = [q for q in self.queue if not _expired(q)]
+            for q in expired:
+                self._fail(
+                    q, "deadline",
+                    f"expired in shared queue after {now - q.submit_t:.3f}s "
+                    f"(deadline {q.deadline_s:.3f}s)")
 
     def _dispatch(self) -> None:
         """Move queued requests onto replicas with free capacity: best
@@ -2904,35 +3598,59 @@ class EngineReplicaGroup:
         hold their claim, otherwise every tie-break in one dispatch pass
         would land on the same replica and a burst would serialize
         behind it — exactly the head-of-line blocking the shared queue
-        exists to avoid."""
+        exists to avoid.  Quarantined replicas take no dispatch; a
+        ``dispatch``-site fault loses the handoff (the request stays in
+        the shared queue, charged one fault) and counts as evidence
+        against the target replica."""
         while self.queue:
             cap = [(sum(1 for s in e.slots if s.free) - len(e.queue), -r, e)
-                   for r, e in enumerate(self.engines)]
+                   for r, e in enumerate(self.engines)
+                   if r not in self.quarantined]
+            if not cap:
+                return              # every replica quarantined
             cap.sort(reverse=True)
-            n_free, _, target = cap[0]
+            n_free, neg_r, target = cap[0]
             if n_free <= 0:
                 return
             j = min(range(len(self.queue)),
                     key=lambda i: (PRIORITY_RANK[self.queue[i].priority], i))
+            fault = (self.faults.take("dispatch")
+                     if self.faults is not None else None)
+            if fault is not None:
+                req = self.queue[j]
+                self._dispatch_faults[-neg_r] += 1
+                req.faults += 1
+                if req.faults >= self.max_request_faults:
+                    self.queue.pop(j)
+                    self._fail(req, "replica_lost",
+                               "fault budget spent on lost dispatches")
+                return              # retry the handoff next group step
             target.queue.append(self.queue.pop(j))
 
     # -- engine surface ----------------------------------------------------
     def step(self) -> bool:
-        """One group iteration: dispatch, then step every replica that
-        has work.  Returns False when the whole group is idle."""
+        """One group iteration: shed expired, dispatch, step every
+        replica that has work, evaluate replica health, run the canary
+        lifecycle.  Returns False when the whole group is idle."""
+        self._shed_expired()
+        self._probe_quarantined()
         self._dispatch()
         progress = False
         for eng in self.engines:
             if eng.queue or eng.num_active > 0:
                 progress = eng.step() or progress
+        self._check_replicas()
+        self._probe_quarantined()
         return progress or bool(self.queue)
 
     def run(self, max_steps: Optional[int] = None) -> List[Request]:
         """Drain the shared queue and every replica; returns completed
-        requests (failures included), exactly like the engine's."""
+        requests (failures included), exactly like the engine's.  A
+        quarantined replica keeps the loop alive until its canary
+        re-admits it, so a drained group ends healthy."""
         steps = 0
-        while self.queue or any(e.queue or e.num_active > 0
-                                for e in self.engines):
+        while self.queue or self.quarantined \
+                or any(e.queue or e.num_active > 0 for e in self.engines):
             if not self.step():
                 break
             steps += 1
@@ -2954,7 +3672,7 @@ class EngineReplicaGroup:
     def completed(self) -> List[Request]:
         out: List[Request] = list(self._failed)
         for eng in self.engines:
-            out.extend(eng.completed)
+            out.extend(r for r in eng.completed if not r.canary)
         return out
 
     @property

@@ -78,6 +78,12 @@ class NGramProposer:
     # -- ingest ------------------------------------------------------------
 
     def _learn(self, ctx: Sequence[int], nxt: int) -> None:
+        if nxt < 0:
+            # out-of-vocab sentinel (the serve engine marks tokens from a
+            # quarantined span negative): a poisoned span must never seed
+            # the CROSS-request table — one bad write would replay into
+            # every later request drafting through this context
+            return
         for k in range(1, min(self.order, len(ctx)) + 1):
             key = tuple(ctx[-k:])
             if key in self._table:
@@ -102,6 +108,8 @@ class NGramProposer:
         """Ingest tokens committed for ``slot`` (decode emissions)."""
         ctx = self._ctx.setdefault(slot, [])
         for t in tokens:
+            if int(t) < 0:
+                continue    # quarantine sentinel — see _learn
             self._learn(ctx, int(t))
             ctx.append(int(t))
             del ctx[:-self.order]

@@ -161,7 +161,8 @@ class TestSlotRecycling:
         req = Request(rid=0, prompt=np.zeros(30, np.int32), max_new_tokens=8)
         eng.submit(req)
         assert req.done and req.status == "failed"
-        assert "max_len" in req.error
+        assert req.error == "intake"           # machine-readable reason code
+        assert "max_len" in req.error_detail   # human detail moved here
         assert req.out == []
         assert eng.queue == [] and eng.stats.rejected == 1
         assert eng.completed == [req]        # run() returns it with the rest
@@ -173,7 +174,8 @@ class TestSlotRecycling:
                       max_new_tokens=4)
         eng.submit(req)
         assert req.done and req.status == "failed"
-        assert "empty" in req.error
+        assert req.error == "intake"
+        assert "empty" in req.error_detail
         assert eng.queue == [] and eng.stats.rejected == 1
 
     def test_unknown_priority_fails_terminally(self, setup):
@@ -183,7 +185,8 @@ class TestSlotRecycling:
                       max_new_tokens=2, priority="turbo")
         eng.submit(req)
         assert req.done and req.status == "failed"
-        assert "priority" in req.error
+        assert req.error == "intake"
+        assert "priority" in req.error_detail
 
     def test_failed_request_latency_record_is_complete(self, setup):
         """Satellite regression: a terminal intake failure must leave a

@@ -1,0 +1,484 @@
+"""Fault-tolerant serving: the recovery ladder, rung by rung.
+
+The contract under test (`docs/fault_tolerance.md`): under any planned
+fault — device error, poisoned logits, stalled fence, lost dispatch,
+expired deadline — the serve engine NEVER raises.  Recovery quarantines
+the smallest thing that explains the fault: the variant (pallas→gather,
+spec→off, horizon→1, lifted again after a clean probation window), the
+slot (preempt + exact greedy resume), the request (terminal failure
+with a reason code and a complete latency record), or the replica
+(drain + canary re-admission).  And because resume is recompute-from-
+``effective_prompt`` under greedy decode, every surviving request must
+be TOKEN-EXACT with a fault-free run — fault tolerance is a pure
+scheduling concern, invisible in outputs.
+
+Injection uses :class:`~repro.runtime.serve_faults.FaultPlan`
+coordinates (per-site invocation indices), so every test is
+deterministic and each rung can be hit in isolation.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.distributed.straggler import StepWatchdog
+from repro.models import model
+from repro.runtime.serve_faults import SITES, FaultPlan, FaultSpec
+from repro.runtime.serve_loop import (
+    FAIL_REASONS, ContinuousBatchingEngine, Request, make_serve_engine)
+
+MAX_LEN = 64
+NDEV = jax.device_count()
+needs_devices = pytest.mark.skipif(
+    NDEV < 2, reason="needs >= 2 host devices: run with "
+                     "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["qwen3-8b"].reduced()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_reqs(rng, vocab, plens=(8, 5, 11, 7), maxnew=(16, 10, 12, 14),
+              eos=None, **kw):
+    return [Request(rid=i, prompt=rng.integers(0, vocab, p).astype(np.int32),
+                    max_new_tokens=m,
+                    eos_id=None if eos is None else eos[i], **kw)
+            for i, (p, m) in enumerate(zip(plens, maxnew))]
+
+
+def run_engine(cfg, params, reqs, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    mesh_shape = kw.pop("mesh_shape", (1, 1))
+    eng = make_serve_engine(cfg, params, mesh_shape=mesh_shape, **kw)
+    for r in reqs:
+        eng.submit(r)
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    return done, eng
+
+
+def survivors(done):
+    return {r.rid: list(r.out) for r in done if r.status == "done"}
+
+
+def assert_failure_records_complete(done):
+    """Every failed request carries a reason code from the taxonomy, a
+    human detail, and a COMPLETE latency record (the PR 7 gap)."""
+    for r in done:
+        if r.status != "failed":
+            continue
+        assert r.error in FAIL_REASONS, r.error
+        assert r.error_detail
+        assert r.done and r.done_t >= r.submit_t > 0.0
+        if r.admit_step < 0:     # never admitted: terminal queue wait
+            assert r.queue_wait_s == r.done_t - r.submit_t
+
+
+class TestFaultPlan:
+    def test_take_counts_per_site_and_fires_once(self):
+        plan = FaultPlan([FaultSpec("decode", "device", 1),
+                          FaultSpec("fused", "nan", 0, slot=1)])
+        assert plan.take("decode") is None          # invocation 0
+        assert plan.peek("decode").at == 1
+        hit = plan.take("decode")                   # invocation 1
+        assert hit.kind == "device" and hit in plan.injected
+        assert plan.take("decode") is None          # fired once, gone
+        assert not plan.exhausted and plan.remaining == 1
+        assert plan.take("fused").slot == 1
+        assert plan.exhausted and len(plan) == 2
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec("warp", "device", 0)
+        with pytest.raises(ValueError):
+            FaultSpec("decode", "explode", 0)
+        with pytest.raises(ValueError):
+            FaultSpec("page_alloc", "nan", 0)       # device-only site
+        with pytest.raises(ValueError):
+            FaultSpec("decode", "device", -1)
+        with pytest.raises(ValueError):             # duplicate coordinate
+            FaultPlan([FaultSpec("decode", "device", 0),
+                       FaultSpec("decode", "nan", 0)])
+
+    def test_seeded_is_deterministic_and_valid(self):
+        a = FaultPlan.seeded(7, 10, slots=4)
+        b = FaultPlan.seeded(7, 10, slots=4)
+        assert [(s.site, s.kind, s.at, s.slot) for s in a.specs] \
+            == [(s.site, s.kind, s.at, s.slot) for s in b.specs]
+        assert len(a) == 10
+        for s in a.specs:
+            assert s.site in SITES   # __post_init__ validated every spec
+
+
+class TestDeviceFaultLadder:
+    def test_decode_device_fault_survives_and_is_exact(self, setup):
+        """Bottom-of-ladder device fault (CPU grouped attention has no
+        rung below it): touched requests are charged and retried — the
+        engine never raises and outputs are token-exact."""
+        cfg, params = setup
+        ref, _ = run_engine(cfg, params,
+                            make_reqs(np.random.default_rng(0), cfg.vocab_size))
+        plan = FaultPlan([FaultSpec("decode", "device", 1)])
+        done, eng = run_engine(cfg, params,
+                               make_reqs(np.random.default_rng(0),
+                                         cfg.vocab_size),
+                               fault_plan=plan)
+        assert plan.exhausted
+        assert eng.stats.device_faults == 1
+        assert survivors(done) == survivors(ref)
+        assert eng.stats.failed_by_reason == {}     # budget 3 absorbed it
+
+    def test_fault_budget_exhaustion_fails_terminally(self, setup):
+        """With a fault budget of 1, a single device fault at the safe
+        bottom variant terminally fails the touched requests — with the
+        ``device_fault`` reason and complete records."""
+        cfg, params = setup
+        plan = FaultPlan([FaultSpec("decode", "device", 1)])
+        done, eng = run_engine(cfg, params,
+                               make_reqs(np.random.default_rng(0),
+                                         cfg.vocab_size),
+                               fault_plan=plan, max_request_faults=1)
+        failed = [r for r in done if r.status == "failed"]
+        assert failed and all(r.error == "device_fault" for r in failed)
+        assert eng.stats.failed_by_reason["device_fault"] == len(failed)
+        assert eng.stats.failed_requests == len(failed)
+        assert_failure_records_complete(done)
+
+    def test_horizon_demotion_and_repromotion(self, setup):
+        """A fused-call device fault demotes the horizon rung (next
+        spans run as single steps), and a clean probation window lifts
+        the pin — fused calls resume.  Outputs stay exact throughout."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(1), cfg.vocab_size,
+                               plens=(8, 6), maxnew=(24, 24))
+        ref, _ = run_engine(cfg, params, mk(), kv_layout="paged",
+                            decode_horizon=1)
+        plan = FaultPlan([FaultSpec("fused", "device", 0)])
+        done, eng = run_engine(cfg, params, mk(), kv_layout="paged",
+                               decode_horizon=4, fault_plan=plan,
+                               probation_steps=3)
+        assert plan.exhausted
+        assert survivors(done) == survivors(ref)
+        assert eng.stats.demotions == {"horizon": 1}
+        assert eng.stats.repromotions == 1
+        # fused decoding resumed after probation: at least one fused
+        # call committed tokens AFTER the demoted window
+        assert eng.stats.horizon_calls >= 1
+        assert eng.stats.failed_by_reason == {}     # variant took the blame
+        eng.check_kv()
+
+    def test_spec_demotion_on_verify_fault(self, setup):
+        """A device fault in the speculative verify call demotes spec to
+        off (the rung the PR 9 ladder already defines) instead of
+        touching any request."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(2), cfg.vocab_size,
+                               plens=(8, 6), maxnew=(20, 20))
+        ref, _ = run_engine(cfg, params, mk(), kv_layout="paged",
+                            decode_horizon=1)
+        plan = FaultPlan([FaultSpec("spec", "device", 0)])
+        done, eng = run_engine(cfg, params, mk(), kv_layout="paged",
+                               decode_horizon=4, spec_draft=4,
+                               fault_plan=plan, probation_steps=2)
+        assert plan.exhausted
+        assert survivors(done) == survivors(ref)
+        assert eng.stats.demotions.get("spec") == 1
+        assert eng.stats.repromotions >= 1
+        assert eng.stats.failed_by_reason == {}
+        eng.check_kv()
+
+    def test_page_alloc_fault_is_survivable(self, setup):
+        """A dying page allocation inside placement unwinds the
+        admission atomically (acquired pages unref'd) and requeues the
+        request — later retry succeeds and output parity holds."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(3), cfg.vocab_size)
+        ref, _ = run_engine(cfg, params, mk(), kv_layout="paged")
+        plan = FaultPlan([FaultSpec("page_alloc", "device", 0)])
+        done, eng = run_engine(cfg, params, mk(), kv_layout="paged",
+                               fault_plan=plan)
+        assert plan.exhausted
+        assert eng.stats.device_faults == 1
+        assert survivors(done) == survivors(ref)
+        eng.check_kv()
+
+
+class TestNumericFaults:
+    @pytest.mark.parametrize("site,kw", [
+        ("decode", dict(kv_layout="paged")),
+        ("fused", dict(kv_layout="paged", decode_horizon=4)),
+        ("spec", dict(kv_layout="paged", decode_horizon=4, spec_draft=4)),
+        ("prefill", dict(kv_layout="paged", prefill_chunk=4)),
+    ])
+    def test_nan_quarantines_slot_and_resumes_exactly(self, setup, site, kw):
+        """Poisoned logits at any decode-path span: the always-on token
+        validation quarantines ONLY the affected slot — nothing from the
+        poisoned span is committed, the request resumes by recomputing
+        from ``effective_prompt()``, and its final output is token-exact
+        with the fault-free run."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(4), cfg.vocab_size,
+                               plens=(8, 6), maxnew=(14, 14))
+        ref, _ = run_engine(cfg, params, mk(), kv_layout="paged")
+        plan = FaultPlan([FaultSpec(site, "nan", 1, slot=0)])
+        done, eng = run_engine(cfg, params, mk(), fault_plan=plan, **kw)
+        assert plan.exhausted
+        assert eng.stats.numeric_faults == 1
+        assert survivors(done) == survivors(ref)
+        assert eng.stats.failed_by_reason == {}     # budget absorbed it
+        assert any(r.preemptions >= 1 or r.faults >= 1 for r in done)
+        eng.check_kv()
+
+    def test_nan_slot_never_poisons_proposer_table(self, setup):
+        """Defense in depth: a quarantined span's sentinel tokens must
+        not be learnable by the n-gram proposer (one bad table write
+        would replay into every later request)."""
+        from repro.runtime.spec_decode import NGramProposer
+        p = NGramProposer(order=3)
+        p.observe(0, [5, 6, -1, 7])
+        assert all(v >= 0 for v in p._table.values())
+        assert all(t >= 0 for t in p._ctx[0])
+
+
+class TestStalls:
+    def test_injected_stall_trips_watchdog_and_demotes(self, setup):
+        """A planned fence stall on a fused span: the (late) tokens are
+        still committed — no token is lost — the trip is counted, and
+        the horizon rung is demoted."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(5), cfg.vocab_size,
+                               plens=(8, 6), maxnew=(18, 18))
+        ref, _ = run_engine(cfg, params, mk(), kv_layout="paged",
+                            decode_horizon=1)
+        plan = FaultPlan([FaultSpec("fused", "stall", 0)])
+        done, eng = run_engine(cfg, params, mk(), kv_layout="paged",
+                               decode_horizon=4, fault_plan=plan,
+                               watchdog=True, probation_steps=2)
+        assert plan.exhausted
+        assert survivors(done) == survivors(ref)
+        assert eng.stats.watchdog_trips == 1
+        assert eng.watchdog.trips == 1
+        assert eng.stats.demotions == {"horizon": 1}
+        eng.check_kv()
+
+    def test_real_watchdog_trip_path(self, setup):
+        """The non-injected branch: a watchdog whose budget collapses to
+        zero trips on REAL fences via ``StragglerTimeout`` — the engine
+        commits the late tokens and keeps serving, token-exact."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(6), cfg.vocab_size)
+        ref, _ = run_engine(cfg, params, mk())
+        wd = StepWatchdog(multiplier=0.0, min_budget_s=0.0)
+        done, eng = run_engine(cfg, params, mk(), watchdog=wd)
+        assert survivors(done) == survivors(ref)
+        # first fence seeds the EWMA (budget inf), every later one trips
+        assert eng.stats.watchdog_trips > 0
+        assert wd.trips == eng.stats.watchdog_trips
+
+
+class TestDeadlinesAndShedding:
+    def test_expired_in_queue_is_shed_with_complete_record(self, setup):
+        cfg, params = setup
+        reqs = make_reqs(np.random.default_rng(7), cfg.vocab_size)
+        reqs[2].deadline_s = 0.0        # expired the moment it queues
+        done, eng = run_engine(cfg, params, reqs)
+        by_rid = {r.rid: r for r in done}
+        assert by_rid[2].status == "failed" and by_rid[2].error == "deadline"
+        assert by_rid[2].out == []      # never burned a decode step
+        assert eng.stats.failed_by_reason == {"deadline": 1}
+        assert eng.stats.rejected == 1  # shed host-side, never admitted
+        for rid in (0, 1, 3):
+            assert by_rid[rid].status == "done"
+        assert_failure_records_complete(done)
+
+    def test_expired_while_resident_is_stopped_at_span_boundary(self, setup):
+        """A deadline passing mid-residency stops the request at the
+        next step boundary: terminal ``deadline`` failure, slot freed,
+        pages released, latency record complete."""
+        cfg, params = setup
+        eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                                       kv_layout="paged")
+        rng = np.random.default_rng(8)
+        req = Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab_size, 8).astype(np.int32),
+            max_new_tokens=30, deadline_s=60.0)
+        eng.submit(req)
+        while req.admit_step < 0 and eng.step():
+            pass
+        assert req.admit_step >= 0
+        req.deadline_s = 1e-9           # now long past
+        eng.run()
+        assert req.status == "failed" and req.error == "deadline"
+        assert req.done_t >= req.submit_t
+        assert eng.num_active == 0
+        eng.check_kv()
+
+    def test_queue_depth_bound_sheds_before_the_pool(self, setup):
+        cfg, params = setup
+        reqs = make_reqs(np.random.default_rng(9), cfg.vocab_size,
+                         plens=(6,) * 5, maxnew=(4,) * 5)
+        done, eng = run_engine(cfg, params, reqs, max_queue_depth=2)
+        failed = [r for r in done if r.status == "failed"]
+        assert len(failed) == 3
+        assert all(r.error == "capacity" for r in failed)
+        assert eng.stats.failed_by_reason == {"capacity": 3}
+        assert len([r for r in done if r.status == "done"]) == 2
+        assert_failure_records_complete(done)
+
+
+class TestReplicaFailover:
+    @needs_devices
+    def test_quarantine_migration_and_canary_readmission(self, setup):
+        """The top rung: a replica accumulating fault evidence past its
+        budget is quarantined — its in-flight requests migrate to
+        survivors and rerun token-exact — and a clean canary probe
+        re-admits it.  Canaries never appear in ``completed``."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(10), cfg.vocab_size,
+                               plens=(8, 5, 11, 7, 6, 9),
+                               maxnew=(12, 10, 12, 10, 8, 12))
+        ref, _ = run_engine(cfg, params, mk())         # single-engine truth
+        plan = FaultPlan([FaultSpec("decode", "device", 1),
+                          FaultSpec("decode", "device", 3)])
+        done, grp = run_engine(cfg, params, mk(), mesh_shape=(2, 1),
+                               fault_plan=plan, replica_fault_budget=2,
+                               max_request_faults=8)
+        st = grp.stats
+        assert st.replica_quarantines >= 1
+        assert st.replica_readmissions == st.replica_quarantines
+        assert st.canary_probes >= 1
+        assert not grp.quarantined                     # group ends healthy
+        assert survivors(done) == survivors(ref)       # migration is exact
+        assert all(r.rid >= 0 for r in done)           # canaries filtered
+        grp.check_kv()
+
+    @needs_devices
+    def test_lost_dispatch_charges_and_retries(self, setup):
+        """A ``dispatch``-site fault loses the handoff: the request
+        stays queued (charged one fault) and lands on the next pass —
+        no request is lost, outputs stay exact."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(11), cfg.vocab_size)
+        ref, _ = run_engine(cfg, params, mk())
+        plan = FaultPlan([FaultSpec("dispatch", "device", 0)])
+        done, grp = run_engine(cfg, params, mk(), mesh_shape=(2, 1),
+                               fault_plan=plan)
+        assert plan.exhausted
+        assert survivors(done) == survivors(ref)
+        assert sum(grp._dispatch_faults) == 1
+        grp.check_kv()
+
+    @needs_devices
+    def test_replica_lost_reason_when_budget_spent(self, setup):
+        """A request that keeps landing on dying replicas terminates as
+        ``replica_lost`` instead of migrating forever."""
+        cfg, params = setup
+        plan = FaultPlan([FaultSpec("decode", "device", 0),
+                          FaultSpec("decode", "device", 1),
+                          FaultSpec("decode", "device", 2),
+                          FaultSpec("decode", "device", 3)])
+        done, grp = run_engine(cfg, params,
+                               make_reqs(np.random.default_rng(12),
+                                         cfg.vocab_size),
+                               mesh_shape=(2, 1), fault_plan=plan,
+                               replica_fault_budget=1, max_request_faults=2)
+        st = grp.stats
+        assert st.replica_quarantines >= 1
+        lost = [r for r in done if r.error == "replica_lost"]
+        assert st.failed_by_reason.get("replica_lost", 0) == len(lost)
+        assert_failure_records_complete(done)
+        grp.check_kv()
+
+
+class TestChaosGate:
+    def test_engine_chaos_gate(self, setup):
+        """The acceptance criterion, single-engine half: a plan hitting
+        device faults, NaN logits, fence stalls, allocation faults and a
+        deadline expiry across every span type — engine never raises,
+        survivors are token-exact, every failure carries a reason code
+        and a complete latency record, and the pool audit shows zero
+        leaked pages at drain."""
+        cfg, params = setup
+        mk = lambda **kw: make_reqs(np.random.default_rng(13),
+                                    cfg.vocab_size,
+                                    plens=(8, 5, 11, 7, 9, 6),
+                                    maxnew=(16, 12, 14, 10, 12, 16), **kw)
+        ref, _ = run_engine(cfg, params, mk(), kv_layout="paged",
+                            slots=3)
+        plan = FaultPlan([
+            FaultSpec("spec", "device", 0),
+            FaultSpec("spec", "nan", 1, slot=1),
+            FaultSpec("spec", "stall", 2),
+            FaultSpec("decode", "device", 0),
+            FaultSpec("decode", "nan", 2, slot=0),
+            FaultSpec("decode", "stall", 4),
+            FaultSpec("fused", "device", 0),
+            FaultSpec("prefill", "nan", 1),
+            FaultSpec("prefill", "stall", 3),
+            FaultSpec("page_alloc", "device", 2),
+        ])
+        reqs = mk()
+        reqs.append(Request(
+            rid=len(reqs), prompt=np.arange(1, 7, dtype=np.int32),
+            max_new_tokens=4, deadline_s=0.0))      # the deadline rung
+        done, eng = run_engine(cfg, params, reqs, kv_layout="paged",
+                               slots=3, decode_horizon=4, spec_draft=4,
+                               prefill_chunk=4, watchdog=True,
+                               probation_steps=2, fault_plan=plan)
+        # the storm landed (not necessarily all coordinates — a demoted
+        # rung legitimately freezes its site counter), and every kind of
+        # rung was exercised at least once
+        kinds = {s.kind for s in plan.injected}
+        assert {"device", "nan", "stall"} <= kinds
+        assert eng.stats.device_faults > 0
+        assert eng.stats.numeric_faults > 0
+        assert eng.stats.watchdog_trips > 0
+        assert eng.stats.demotions
+        assert eng.stats.failed_by_reason.get("deadline") == 1
+        # survivors token-exact vs the fault-free run
+        ref_out = survivors(ref)
+        for rid, out in survivors(done).items():
+            assert out == ref_out[rid], f"rid {rid} diverged under chaos"
+        assert_failure_records_complete(done)
+        # population invariant: every submission is accounted exactly once
+        st = eng.stats
+        assert len(done) == len(reqs)
+        assert len(st.queue_wait_s) + st.rejected == len(reqs)
+        assert st.failed_requests == sum(
+            1 for r in done if r.status == "failed")
+        # zero leaked pages at drain
+        eng.check_kv()
+        if eng.prefix_cache is not None:
+            assert eng.prefix_cache.total_refcount() == 0
+            eng.prefix_cache.evict(10 ** 6)
+        assert eng.pages.drained
+
+    @needs_devices
+    def test_group_chaos_gate(self, setup):
+        """The replica half of the gate: device faults + a lost dispatch
+        force quarantine and migration; the group never raises, ends
+        with no replica quarantined, and survivors are token-exact."""
+        cfg, params = setup
+        mk = lambda: make_reqs(np.random.default_rng(14), cfg.vocab_size,
+                               plens=(8, 5, 11, 7, 6, 9, 10, 4),
+                               maxnew=(12, 10, 12, 10, 8, 12, 6, 10))
+        ref, _ = run_engine(cfg, params, mk())
+        plan = FaultPlan([FaultSpec("decode", "device", 1),
+                          FaultSpec("decode", "nan", 4),
+                          FaultSpec("dispatch", "device", 1),
+                          FaultSpec("decode", "device", 6)])
+        done, grp = run_engine(cfg, params, mk(), mesh_shape=(2, 1),
+                               fault_plan=plan, replica_fault_budget=2,
+                               max_request_faults=8, watchdog=True)
+        st = grp.stats
+        assert st.replica_quarantines >= 1
+        assert not grp.quarantined
+        assert survivors(done) == survivors(ref)
+        assert_failure_records_complete(done)
+        grp.check_kv()

@@ -37,7 +37,9 @@ import pytest
 from repro.configs import ARCHS
 from repro.core import VPE
 from repro.models import model
-from repro.runtime.serve_loop import ContinuousBatchingEngine, Request
+from repro.runtime.serve_faults import FaultPlan, FaultSpec
+from repro.runtime.serve_loop import (
+    FAIL_REASONS, ContinuousBatchingEngine, Request)
 
 N_REQUESTS = 200
 
@@ -282,3 +284,87 @@ def test_priority_mix_preemption_soak(setup, swap):
         assert r.ttft_s >= r.queue_wait_s
         assert len(r.out) <= r.max_new_tokens
         assert r.preemptions >= 0 and r.swap is None
+
+
+@pytest.mark.slow
+def test_chaos_soak_storm_no_leaks(setup):
+    """Chaos soak (PR 10): a seeded fault storm — device faults, NaN
+    logits, fence stalls across every engine span, on top of the same
+    starved-pool preemption churn as the soaks above — while the full
+    feature surface is live (paged KV, chunked prefill, fused horizons,
+    speculation, a watchdog, deadlines on part of the stream, an
+    admission bound).  The engine must never raise; after EVERY burst
+    the cross-structure page audit must hold (``check_kv()`` clean after
+    every recovery), and at final drain: zero leaked pages, every
+    request accounted exactly once, every failure carrying a reason
+    code from the taxonomy and a complete latency record."""
+    cfg, params = setup
+    rng = np.random.default_rng(17)
+    n = 120
+    # explicit early storm across every rung + a long seeded tail
+    storm = [
+        FaultSpec("decode", "device", 1),
+        FaultSpec("decode", "nan", 3),
+        FaultSpec("decode", "stall", 6),
+        FaultSpec("fused", "device", 0),
+        FaultSpec("fused", "nan", 2, slot=1),
+        FaultSpec("spec", "device", 0),
+        FaultSpec("spec", "stall", 2),
+        FaultSpec("prefill", "nan", 2),
+        FaultSpec("prefill", "device", 5),
+        FaultSpec("page_alloc", "device", 4),
+    ]
+    taken = {(s.site, s.at) for s in storm}
+    storm += [s for s in FaultPlan.seeded(17, 40, slots=4, span=300).specs
+              if (s.site, s.at) not in taken]
+    plan = FaultPlan(storm)
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=4, max_len=128,
+        prefix_blocks=24, block_size=16,   # starved -> eviction/preemption
+        kv_layout="paged", prefill_chunk=16, decode_horizon=4,
+        spec_draft=4, watchdog=True, probation_steps=4,
+        fault_plan=plan, max_queue_depth=80)
+    templates = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+                 for s in (16, 32, 48)]
+    reqs = []
+    for i in range(n):
+        tpl = templates[int(rng.integers(0, len(templates)))]
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(1, 32))).astype(np.int32)
+        eos = (int(rng.integers(0, cfg.vocab_size))
+               if rng.random() < 0.3 else None)
+        reqs.append(Request(
+            rid=i, prompt=np.concatenate([tpl, tail]),
+            max_new_tokens=int(rng.integers(1, 12)), eos_id=eos,
+            priority="interactive" if rng.random() < 0.4 else "batch",
+            # a slice of the stream carries (generous) deadlines so the
+            # sweep machinery runs hot; a few are born expired
+            deadline_s=(0.0 if rng.random() < 0.05
+                        else 120.0 if rng.random() < 0.3 else None)))
+    for lo in range(0, n, 30):
+        for r in reqs[lo:lo + 30]:
+            eng.submit(r)
+        eng.run()
+        eng.check_kv()                  # clean after every recovery
+    done = eng.completed
+    assert len(done) == n
+    assert sorted(r.rid for r in done) == list(range(n))
+    # the storm actually landed across kinds
+    kinds = {s.kind for s in plan.injected}
+    assert {"device", "nan", "stall"} <= kinds
+    assert eng.stats.device_faults > 0
+    # failure taxonomy: every failed request is coded and complete
+    failed = [r for r in done if r.status == "failed"]
+    assert eng.stats.failed_requests == len(failed)
+    for r in failed:
+        assert r.error in FAIL_REASONS and r.error_detail
+        assert r.done_t >= r.submit_t > 0.0
+    # population invariant including mid-flight failures
+    assert len(eng.stats.queue_wait_s) + eng.stats.rejected == n
+    # zero leaked pages at drain
+    assert all(s.free and not s.pages for s in eng.slots)
+    eng.check_kv()
+    assert eng.prefix_cache.total_refcount() == 0
+    eng.prefix_cache.evict(10 ** 6)
+    assert eng.pages.num_live == 0
+    assert eng.pages.drained
